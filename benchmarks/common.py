@@ -1,0 +1,75 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Every benchmark prints a CSV block (stdout) and returns a list of result
+dicts so `benchmarks.run` can aggregate + validate against the paper's
+headline numbers. All timing/energy numbers come from the cluster
+simulator over the analytic chip model (CPU container; see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core.disagg import DisaggConfig, standard_catalog  # noqa: E402
+from repro.serving.simulator import ServingMode, SimResult, simulate  # noqa: E402
+from repro.serving.workload import DATASETS, sample_requests  # noqa: E402
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+DUR_S = 90.0
+SEED = 0
+
+T7 = get_config("llama-7b")
+D1 = get_config("llama-1b")
+D300 = get_config("llama-300m")
+MODELS = {"7b": T7, "1b": D1, "300m": D300}
+
+
+def reqs_for(dataset: str, qps: float, percentile: str = "p50", dur: float = DUR_S,
+             seed: int = SEED):
+    ds = DATASETS[dataset]
+    return ds, sample_requests(ds, qps, dur, seed=seed, fixed_size=ds.size_at(percentile))
+
+
+def run_mode(mode: ServingMode, reqs, target=T7, draft=None, seed=SEED) -> SimResult:
+    return simulate(mode, target, reqs, draft_cfg=draft, seed=seed)
+
+
+def run_config(cfg: DisaggConfig, reqs, seed=SEED) -> SimResult:
+    return simulate(cfg.mode, cfg.target, reqs, draft_cfg=cfg.draft, seed=seed)
+
+
+def best_config(catalog, ds, reqs, slo_target=0.9, ci=None):
+    """GreenLLM's per-workload choice: min carbon among SLO-feasible."""
+    from repro.core.carbon import DEFAULT_CI
+
+    ci = ci if ci is not None else DEFAULT_CI
+    best = None
+    results = {}
+    for cfg in catalog:
+        res = run_config(cfg, reqs)
+        results[cfg.name] = res
+        att = res.slo_attainment(ds)
+        cpt = res.carbon_per_token(ci)
+        if att >= slo_target and (best is None or cpt < best[2]):
+            best = (cfg, res, cpt)
+    if best is None:  # fallback: max SLO attainment
+        cfg = max(results, key=lambda n: results[n].slo_attainment(ds))
+        cfg = next(c for c in catalog if c.name == cfg)
+        best = (cfg, results[cfg.name], results[cfg.name].carbon_per_token(ci))
+    return best[0], best[1], results
+
+
+def csv(rows: list[dict], header: bool = True) -> None:
+    if not rows:
+        return
+    keys = list(rows[0])
+    if header:
+        print(",".join(keys))
+    for r in rows:
+        print(",".join(f"{r[k]:.6g}" if isinstance(r[k], float) else str(r[k])
+                       for k in keys))

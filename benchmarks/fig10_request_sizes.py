@@ -1,0 +1,36 @@
+"""Fig. 10: carbon per token + savings at ShareGPT P25/P50/P75 request
+sizes (larger requests amortize carbon but shrink the QPS range where the
+old chips help)."""
+from benchmarks.common import best_config, csv, reqs_for, run_mode
+from repro.core.disagg import standard_catalog
+from repro.serving.simulator import ServingMode
+
+QPS = [0.5, 1, 2, 4, 8]
+
+
+def run(quick: bool = False):
+    catalog = standard_catalog()
+    rows = []
+    for pct in ("p25", "p50", "p75"):
+        for qps in QPS[:3] if quick else QPS:
+            ds, reqs = reqs_for("sharegpt", qps, percentile=pct)
+            base = run_mode(ServingMode("standalone", "standalone", "a100"), reqs)
+            cfg, res, _ = best_config(catalog, ds, reqs)
+            cpt = res.carbon_per_token()
+            bcpt = base.carbon_per_token()
+            rows.append({
+                "percentile": pct, "qps": qps, "config": cfg.name,
+                "cpt_mg": cpt * 1e3, "base_cpt_mg": bcpt * 1e3,
+                "savings_pct": 100 * (1 - cpt / bcpt),
+                "slo_att": res.slo_attainment(ds),
+            })
+    csv(rows)
+    for pct in ("p25", "p50", "p75"):
+        sub = [r for r in rows if r["percentile"] == pct]
+        print(f"# {pct}: mean cpt {sum(r['cpt_mg'] for r in sub)/len(sub):.4f} mg "
+              f"(larger sizes amortize carbon/token)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

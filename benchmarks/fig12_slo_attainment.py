@@ -1,0 +1,30 @@
+"""Fig. 12: SLO attainment of GreenLLM vs standalone A100 at the three
+ShareGPT request sizes (90% threshold)."""
+from benchmarks.common import best_config, csv, reqs_for, run_mode
+from repro.core.disagg import standard_catalog
+from repro.serving.simulator import ServingMode
+
+QPS = [0.5, 1, 2, 4, 8]
+
+
+def run(quick: bool = False):
+    catalog = standard_catalog()
+    rows = []
+    for pct in ("p25", "p50", "p75"):
+        for qps in QPS[:3] if quick else QPS:
+            ds, reqs = reqs_for("sharegpt", qps, percentile=pct)
+            base = run_mode(ServingMode("standalone", "standalone", "a100"), reqs)
+            cfg, res, _ = best_config(catalog, ds, reqs)
+            rows.append({
+                "percentile": pct, "qps": qps, "config": cfg.name,
+                "greenllm_slo_att": res.slo_attainment(ds),
+                "baseline_slo_att": base.slo_attainment(ds),
+            })
+    csv(rows)
+    ok = sum(r["greenllm_slo_att"] >= 0.9 for r in rows)
+    print(f"# cells meeting 90% attainment: {ok}/{len(rows)}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Fig. 15: impact of GPU lifetime on the DSD A100+T4 (1B draft) savings.
+Left: old-chip lifetime 5-10y (longer -> more savings). Right: new-chip
+lifetime 2-7y (shorter -> more savings). Eq. 6 overlay included."""
+from benchmarks.common import D1, csv, reqs_for, run_mode
+from repro.serving.simulator import ServingMode
+
+OLD_LT = [5, 6, 7, 8, 9, 10]
+NEW_LT = [2, 3, 4, 5, 6, 7]
+
+
+def run(quick: bool = False):
+    ds, reqs = reqs_for("sharegpt", 1.0)
+    base = run_mode(ServingMode("standalone", "standalone", "a100"), reqs)
+    dsd = run_mode(ServingMode("dsd", "dsd", "a100", "t4"), reqs, draft=D1)
+    rows = []
+    for lt in OLD_LT[:3] if quick else OLD_LT:
+        s = 1 - dsd.account(lifetimes={"t4": float(lt)}).total_g / dsd.total_tokens \
+            / (base.account().total_g / base.total_tokens)
+        rows.append({"sweep": "old_t4_years", "lifetime_y": lt, "savings_pct": 100 * s})
+    for lt in NEW_LT[:3] if quick else NEW_LT:
+        lts = {"a100": float(lt)}
+        s = 1 - dsd.account(lifetimes=lts).total_g / dsd.total_tokens \
+            / (base.account(lifetimes=lts).total_g / base.total_tokens)
+        rows.append({"sweep": "new_a100_years", "lifetime_y": lt, "savings_pct": 100 * s})
+    csv(rows)
+    old = [r for r in rows if r["sweep"] == "old_t4_years"]
+    new = [r for r in rows if r["sweep"] == "new_a100_years"]
+    up = all(b["savings_pct"] >= a["savings_pct"] - 1e-9 for a, b in zip(old, old[1:]))
+    down = all(b["savings_pct"] <= a["savings_pct"] + 1e-9 for a, b in zip(new, new[1:]))
+    print(f"# monotone: savings rise with old-chip lifetime ({up}), "
+          f"fall with new-chip lifetime ({down}) - Implication 3")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

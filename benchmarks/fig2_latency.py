@@ -1,0 +1,31 @@
+"""Fig. 2: TTFT (prefill) and TPOT (decoding) of different model sizes at
+different request rates on different chips; SLOs 200ms/80ms (ShareGPT)."""
+from benchmarks.common import MODELS, csv, reqs_for, run_mode
+from repro.serving.simulator import ServingMode
+
+CHIPS = ["a100", "v100", "t4"]
+QPS = [0.5, 1, 2, 4, 8]
+
+
+def run(quick: bool = False):
+    rows = []
+    qps_list = QPS[:3] if quick else QPS
+    for size, cfg in MODELS.items():
+        for chip in CHIPS:
+            for qps in qps_list:
+                ds, reqs = reqs_for("sharegpt", qps)
+                res = run_mode(ServingMode(f"alone-{chip}", "standalone", chip),
+                               reqs, target=cfg)
+                rows.append({
+                    "model": size, "chip": chip, "qps": qps,
+                    "ttft_ms": res.mean_ttft() * 1e3,
+                    "tpot_ms": res.mean_tpot() * 1e3,
+                    "ttft_slo_ok": int(res.mean_ttft() <= ds.ttft_slo_s),
+                    "tpot_slo_ok": int(res.mean_tpot() <= ds.tpot_slo_s),
+                })
+    csv(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

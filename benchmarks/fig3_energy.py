@@ -1,0 +1,30 @@
+"""Fig. 3: energy per token of different model sizes at different request
+rates on different chips (energy/token falls with load, then flattens as
+the chip saturates near TDP)."""
+from benchmarks.common import MODELS, csv, reqs_for, run_mode
+from repro.serving.simulator import ServingMode
+
+CHIPS = ["a100", "v100", "t4"]
+QPS = [0.5, 1, 2, 4, 8]
+
+
+def run(quick: bool = False):
+    rows = []
+    for size, cfg in MODELS.items():
+        for chip in CHIPS:
+            for qps in QPS[:3] if quick else QPS:
+                ds, reqs = reqs_for("sharegpt", qps)
+                res = run_mode(ServingMode(f"alone-{chip}", "standalone", chip),
+                               reqs, target=cfg)
+                energy = sum(u.energy_j for u in res.use.values())
+                rows.append({
+                    "model": size, "chip": chip, "qps": qps,
+                    "j_per_token": energy / max(res.total_tokens, 1),
+                    "mean_power_w": energy / max(res.duration_s, 1e-9),
+                })
+    csv(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Fig. 4: interconnect bandwidth requirement of Disg-Pref-Decode vs
+Disg-Spec-Decode at different request rates.
+
+Metric (matching the paper's framing): the *stall-free required
+bandwidth* - bytes that must cross the link within the latency window that
+hides them (DPD: the whole prompt KV within one TPOT; DSD: K draft-prob
+rows within one target verify pass) - plus the average demand.
+"""
+from benchmarks.common import D1, D300, T7, csv, reqs_for
+from repro.core.carbon import CHIP_DB
+from repro.serving.perfmodel import decode_cost
+
+QPS = [0.25, 0.5, 1, 2, 4, 8]
+K = 4
+
+
+def run(quick: bool = False):
+    ds, _ = reqs_for("sharegpt", 1.0)
+    prompt, out = ds.p50
+    rows = []
+    a100 = CHIP_DB["a100"]
+    for qps in QPS[:4] if quick else QPS:
+        batch = max(1, round(qps * out * 0.04))  # ~concurrent decodes
+        # --- DPD: prompt KV must land before the second decode step ---
+        kv_bytes = prompt * T7.kv_bytes_per_token()
+        dpd_req_gbps = kv_bytes * 8 / ds.tpot_slo_s / 1e9
+        dpd_avg_gbps = kv_bytes * qps * 8 / 1e9
+        row = {"qps": qps, "dpd_required_gbps": dpd_req_gbps,
+               "dpd_avg_gbps": dpd_avg_gbps}
+        # --- DSD: K prob rows within one target verify pass ---
+        for name, dcfg in (("1b", D1), ("300m", D300)):
+            probs_bytes = batch * K * dcfg.vocab_size * 2  # fp16 probs
+            t_target = decode_cost(T7, a100, batch, prompt + out // 2,
+                                   new_tokens=K + 1).time_s
+            dsd_req = probs_bytes * 8 / t_target / 1e9
+            rounds_per_s = qps * out / 3.4          # E[tokens/round] ~ 3.4
+            dsd_avg = (K * dcfg.vocab_size * 4 + K * 4) * rounds_per_s * 8 / 1e9 / max(batch, 1)
+            row[f"dsd_{name}_required_gbps"] = dsd_req / max(batch, 1)
+            row[f"dsd_{name}_avg_gbps"] = dsd_avg
+            row[f"ratio_dpd_over_dsd_{name}"] = dpd_req_gbps / (dsd_req / max(batch, 1))
+        rows.append(row)
+    csv(rows)
+    ratios = [r["ratio_dpd_over_dsd_1b"] for r in rows] + \
+             [r["ratio_dpd_over_dsd_300m"] for r in rows]
+    print(f"# DPD/DSD required-bandwidth ratio range: "
+          f"{min(ratios):.0f}x - {max(ratios):.0f}x (paper: 65-434x)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Fig. 7: the Disg-Spec-Decode communication-overlap optimization.
+
+Compares round time with and without overlapping the draft-probability
+transfer behind the target forward, across link bandwidths - the tiny
+token ids ship first; the V-times-larger probs hide under the verify pass
+whenever bw >= probs_bytes/t_target."""
+from benchmarks.common import D1, T7, csv
+from repro.core.carbon import CHIP_DB
+from repro.serving.perfmodel import Interconnect, decode_cost, dsd_round_time
+
+BW = [0.5, 1, 2, 4, 8, 16]
+K = 4
+
+
+def run(quick: bool = False):
+    a100, t4 = CHIP_DB["a100"], CHIP_DB["t4"]
+    batch, ctx = 8, 300
+    t_draft = decode_cost(D1, t4, batch, ctx).time_s * (K + 1)
+    t_target = decode_cost(T7, a100, batch, ctx, new_tokens=K + 1).time_s
+    ids_b = batch * K * 4
+    probs_b = batch * K * D1.vocab_size * 2
+    rows = []
+    for bw in BW[:3] if quick else BW:
+        link = Interconnect(bandwidth_gbps=bw)
+        t_ov = dsd_round_time(t_draft, t_target, link, ids_b, probs_b, overlap=True)
+        t_no = dsd_round_time(t_draft, t_target, link, ids_b, probs_b, overlap=False)
+        rows.append({
+            "bandwidth_gbps": bw,
+            "round_ms_overlap": t_ov * 1e3,
+            "round_ms_sequential": t_no * 1e3,
+            "speedup_pct": 100 * (1 - t_ov / t_no),
+            "probs_hidden": int(link.transfer_time(probs_b) <= t_target),
+        })
+    csv(rows)
+    print(f"# overlap hides the probs transfer fully at >= "
+          f"{next((r['bandwidth_gbps'] for r in rows if r['probs_hidden']), '>16')} Gbps")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,142 @@
+"""Roofline analysis over the dry-run artifacts (§Roofline deliverable).
+
+For each (arch x shape) cell on the single-pod v5e mesh:
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+HLO FLOPs/bytes come from the cost-mode dry-run (statically unrolled
+layers; per-device numbers x chips = global); collective bytes are parsed
+from the post-SPMD compiled HLO (per-device payloads, all-reduce counted
+2x). MODEL_FLOPS = 6*N_active*tokens (train: 3 passes => x3 relative to a
+forward) or 2*N_active*tokens (+ attention reads) for serving steps;
+the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/dispatch overhead.
+
+Hardware: TPU v5e - 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--mode cost] [--csv]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import ARCH_IDS, SHAPES, cell_is_runnable, get_config  # noqa: E402
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun.json")
+
+
+def model_flops(cfg, shape: str) -> float:
+    """Useful model FLOPs for one step of this cell (6ND train / 2ND+attn serve)."""
+    sp = SHAPES[shape]
+    tokens = sp.global_batch * (sp.seq_len if sp.kind != "decode" else 1)
+    n = cfg.active_param_count()
+    if sp.kind == "train":
+        base = 6.0 * n * tokens
+        attn = 3.0 * 2.0 * cfg.num_attn_layers * (cfg.attn.num_heads * cfg.attn.head_dim
+                                                  if cfg.attn else 0) * sp.seq_len * tokens
+        return base + attn
+    if sp.kind == "prefill":
+        base = 2.0 * n * tokens
+        attn = 2.0 * cfg.num_attn_layers * (cfg.attn.num_heads * cfg.attn.head_dim
+                                            if cfg.attn else 0) * sp.seq_len * tokens
+        return base + attn
+    base = 2.0 * n * tokens
+    attn = 4.0 * cfg.num_attn_layers * (cfg.attn.num_heads * cfg.attn.head_dim
+                                        if cfg.attn else 0) * sp.seq_len * tokens
+    return base + attn
+
+
+def load_cells(mode: str = "cost") -> dict:
+    with open(ARTIFACTS) as f:
+        return json.load(f)["cells"]
+
+
+def analyze(mode: str = "cost"):
+    cells = load_cells()
+    rows = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, reason = cell_is_runnable(cfg, shape)
+            if not ok:
+                rows.append({"arch": arch, "shape": shape, "status": "skip",
+                             "note": reason})
+                continue
+            rec = cells.get(f"{arch}/{shape}/single_pod/{mode}")
+            proof = cells.get(f"{arch}/{shape}/single_pod/proof", {})
+            if rec is None or rec.get("status") != "ok":
+                rows.append({"arch": arch, "shape": shape, "status": "missing",
+                             "note": (rec or {}).get("error", "no artifact")[:80]})
+                continue
+            flops_dev = rec["flops_per_device"]
+            bytes_dev = rec["bytes_per_device"]
+            coll_dev = rec["collective_bytes_per_device"]
+            t_c = flops_dev / PEAK_FLOPS
+            t_m = bytes_dev / HBM_BW
+            t_n = coll_dev / ICI_BW
+            dom = max((t_c, "compute"), (t_m, "memory"), (t_n, "collective"))[1]
+            mf = model_flops(cfg, shape)
+            hlo_total = flops_dev * CHIPS
+            t_step = max(t_c, t_m, t_n)
+            rows.append({
+                "arch": arch, "shape": shape, "status": "ok",
+                "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+                "bottleneck": dom,
+                "model_flops": mf, "hlo_flops": hlo_total,
+                "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+                "mfu_bound": mf / CHIPS / PEAK_FLOPS / t_step if t_step else 0.0,
+                "temp_gib": proof.get("temp_bytes", 0) / 2**30,
+                "note": "",
+            })
+    return rows
+
+
+def print_table(rows, as_csv=False):
+    if as_csv:
+        keys = ["arch", "shape", "status", "compute_s", "memory_s", "collective_s",
+                "bottleneck", "useful_ratio", "mfu_bound", "temp_gib", "note"]
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(f"{r.get(k, ''):.4g}" if isinstance(r.get(k), float)
+                           else str(r.get(k, "")) for k in keys))
+        return
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+           f"{'collect':>10s} {'bound':>10s} {'useful':>7s} {'MFU*':>6s} {'temp':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"{r['arch']:24s} {r['shape']:12s} [{r['status']}] {r['note'][:60]}")
+            continue
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['compute_s']:10.4g} "
+              f"{r['memory_s']:10.4g} {r['collective_s']:10.4g} {r['bottleneck']:>10s} "
+              f"{r['useful_ratio']:7.2%} {r['mfu_bound']:6.1%} {r['temp_gib']:7.2f}G")
+
+
+def run(quick: bool = False):
+    rows = analyze()
+    print_table(rows)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--mode", default="cost")
+    args = ap.parse_args()
+    print_table(analyze(args.mode), as_csv=args.csv)
+
+
+if __name__ == "__main__":
+    main()

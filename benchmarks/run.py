@@ -1,0 +1,82 @@
+"""Benchmark aggregator: one entry per paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints each benchmark's CSV block, then a summary CSV
+(name,us_per_call,derived) where `derived` is the benchmark's headline
+metric validated against the paper's claims.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="fewer QPS points")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig2_latency,
+        fig3_energy,
+        fig4_bandwidth,
+        fig7_overlap,
+        fig9_carbon_savings,
+        fig10_request_sizes,
+        fig11_latency_slo,
+        fig12_slo_attainment,
+        fig13_bandwidth_sweep,
+        fig14_carbon_intensity,
+        fig15_lifetime,
+        roofline,
+    )
+
+    benches = [
+        ("fig2_latency", fig2_latency.run,
+         lambda r: f"tpot_range_ms={min(x['tpot_ms'] for x in r):.1f}-{max(x['tpot_ms'] for x in r):.0f}"),
+        ("fig3_energy", fig3_energy.run,
+         lambda r: f"j_per_token_min={min(x['j_per_token'] for x in r):.3f}"),
+        ("fig4_bandwidth", fig4_bandwidth.run,
+         lambda r: f"dpd_over_dsd_max={max(x['ratio_dpd_over_dsd_300m'] for x in r):.0f}x"),
+        ("fig7_overlap", fig7_overlap.run,
+         lambda r: f"max_overlap_speedup_pct={max(x['speedup_pct'] for x in r):.1f}"),
+        ("fig9_carbon_savings", fig9_carbon_savings.run,
+         lambda r: f"max_savings_pct={max(x['savings_pct'] for x in r if x['slo_att'] >= 0.9):.1f}"),
+        ("fig10_request_sizes", fig10_request_sizes.run,
+         lambda r: f"max_savings_pct={max(x['savings_pct'] for x in r):.1f}"),
+        ("fig11_latency_slo", fig11_latency_slo.run,
+         lambda r: f"worst_tpot_over_slo={max(x['tpot_ms']/x['tpot_slo_ms'] for x in r):.2f}"),
+        ("fig12_slo_attainment", fig12_slo_attainment.run,
+         lambda r: f"min_attainment={min(x['greenllm_slo_att'] for x in r):.2f}"),
+        ("fig13_bandwidth_sweep", fig13_bandwidth_sweep.run,
+         lambda r: f"max_savings_pct={max(x['savings_pct'] for x in r):.1f}"),
+        ("fig14_carbon_intensity", fig14_carbon_intensity.run,
+         lambda r: f"ncsw_savings_pct={max(x['savings_pct'] for x in r if x['region'] == 'ncsw'):.1f}"),
+        ("fig15_lifetime", fig15_lifetime.run,
+         lambda r: f"savings_range_pct={min(x['savings_pct'] for x in r):.1f}-{max(x['savings_pct'] for x in r):.1f}"),
+        ("roofline", roofline.run,
+         lambda r: f"cells_ok={sum(1 for x in r if x['status'] == 'ok')}/"
+                   f"{sum(1 for x in r if x['status'] != 'skip')}"),
+    ]
+
+    summary = []
+    for name, fn, derive in benches:
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        try:
+            rows = fn(quick=args.quick)
+            derived = derive(rows)
+        except FileNotFoundError as e:
+            rows, derived = [], f"missing_artifact:{getattr(e, 'filename', e)}"
+        dt = (time.time() - t0) * 1e6
+        summary.append((name, dt, derived))
+
+    print("\n===== summary =====")
+    print("name,us_per_call,derived")
+    for name, us, derived in summary:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,170 @@
+"""Speculative decoding (Leviathan et al.) in pure JAX - the compute core
+of the paper's Disg-Spec-Decode optimizer (§2.2, §4.1).
+
+One *round*:
+  1. the draft model autoregressively proposes K tokens (K serve_steps,
+     plus one bookkeeping step so its cache stays consistent when all K
+     are accepted),
+  2. the target model scores [last, d_1..d_K] in ONE extend_step pass,
+  3. the verifier accepts d_i with probability min(1, q_i/p_i) (exact
+     rejection sampling), resamples the first rejected position from the
+     residual max(q - p, 0), or samples a bonus token when all K are
+     accepted.
+
+Everything is batched; acceptance lengths vary per sequence and cache
+rollback is per-sequence via the (B,) `pos` vector (stale KV above `pos`
+is masked and later overwritten). The distribution of emitted tokens
+provably equals the target model's (test_spec_decode.py checks this
+property empirically).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import backbone
+from repro.models.config import ModelConfig
+from repro.models.layers import DEFAULT_EXEC, ExecConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    num_draft_tokens: int = 4     # K
+    temperature: float = 1.0
+
+
+def _sample(rng: jax.Array, probs: jax.Array) -> jax.Array:
+    """Categorical sample from a (B, V) probability matrix."""
+    logits = jnp.log(jnp.maximum(probs, 1e-30))
+    return jax.random.categorical(rng, logits, axis=-1)
+
+
+def _probs(logits: jax.Array, temperature: float) -> jax.Array:
+    return jax.nn.softmax(logits.astype(jnp.float32) / max(temperature, 1e-4), axis=-1)
+
+
+def draft_propose(
+    params, cache, last_tokens: jax.Array, cfg: ModelConfig, spec: SpecConfig,
+    rng: jax.Array, exec_cfg: ExecConfig = DEFAULT_EXEC,
+):
+    """Propose K draft tokens. Returns (tokens (B,K), probs (B,K,V), cache).
+
+    Runs K+1 serve_steps: [last, d_1..d_K]. The final step only advances the
+    draft cache so that the all-accepted case leaves it consistent."""
+    k = spec.num_draft_tokens
+    tokens, probs = [], []
+    cur = last_tokens
+    for i in range(k):
+        logits, cache = backbone.serve_step(params, cache, cur, cfg, exec_cfg)
+        p = _probs(logits, spec.temperature)
+        rng, sub = jax.random.split(rng)
+        cur = _sample(sub, p)
+        tokens.append(cur)
+        probs.append(p)
+    _, cache = backbone.serve_step(params, cache, cur, cfg, exec_cfg)  # bookkeeping
+    return jnp.stack(tokens, axis=1), jnp.stack(probs, axis=1), cache
+
+
+def verify(
+    rng: jax.Array,
+    target_logits: jax.Array,    # (B, K+1, V): dists after [last, d_1..d_K]
+    draft_probs: jax.Array,      # (B, K, V)
+    draft_tokens: jax.Array,     # (B, K)
+    temperature: float = 1.0,
+):
+    """Exact rejection-sampling verification.
+
+    Returns (out_tokens (B, K+1), n_emitted (B,), n_accepted (B,)).
+    out_tokens[:, :n_emitted] are committed; entries beyond are zeros."""
+    b, k = draft_tokens.shape
+    q = _probs(target_logits, temperature)               # (B, K+1, V)
+    q_at = jnp.take_along_axis(q[:, :k], draft_tokens[..., None], axis=-1)[..., 0]
+    p_at = jnp.take_along_axis(draft_probs, draft_tokens[..., None], axis=-1)[..., 0]
+    rng_u, rng_res = jax.random.split(rng)
+    u = jax.random.uniform(rng_u, (b, k))
+    accept = u < jnp.minimum(1.0, q_at / jnp.maximum(p_at, 1e-30))
+    n_acc = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=1), axis=1)  # (B,)
+
+    # distribution for the extra token: residual at the rejection position,
+    # or the target's bonus distribution when everything was accepted
+    q_n = jnp.take_along_axis(q, n_acc[:, None, None], axis=1)[:, 0]        # (B, V)
+    p_n = jnp.take_along_axis(
+        draft_probs, jnp.minimum(n_acc, k - 1)[:, None, None], axis=1)[:, 0]
+    residual = jnp.maximum(q_n - p_n, 0.0)
+    res_sum = residual.sum(-1, keepdims=True)
+    residual = jnp.where(res_sum > 1e-30, residual / jnp.maximum(res_sum, 1e-30), q_n)
+    extra_dist = jnp.where((n_acc == k)[:, None], q_n, residual)
+    extra = _sample(rng_res, extra_dist)                                    # (B,)
+
+    idx = jnp.arange(k + 1)[None, :]
+    padded = jnp.concatenate([draft_tokens, jnp.zeros((b, 1), draft_tokens.dtype)], axis=1)
+    out = jnp.where(idx < n_acc[:, None], padded, 0)
+    out = jnp.where(idx == n_acc[:, None], extra[:, None], out)
+    return out, n_acc + 1, n_acc
+
+
+def spec_decode_round(
+    target_params, target_cfg: ModelConfig, target_cache,
+    draft_params, draft_cfg: ModelConfig, draft_cache,
+    last_tokens: jax.Array, spec: SpecConfig, rng: jax.Array,
+    exec_cfg: ExecConfig = DEFAULT_EXEC,
+):
+    """One full draft -> transfer -> verify cycle.
+
+    Returns dict with committed tokens, per-sequence counts, updated caches
+    and the inter-pool payload sizes (token ids vs draft probs) that the
+    disaggregation layer prices against the interconnect (paper Fig. 7).
+    """
+    for c, which in ((target_cfg, "target"), (draft_cfg, "draft")):
+        if c.family in ("ssm", "hybrid"):
+            # extend_step verification works for recurrent families, but
+            # per-sequence rollback would need per-step state checkpoints;
+            # the serving layer routes these archs to standard decode
+            # (DESIGN.md §4 Arch-applicability).
+            raise NotImplementedError(
+                f"spec-decode {which} model {c.name} is recurrent ({c.family}); "
+                "per-sequence state rollback is not supported"
+            )
+    k = spec.num_draft_tokens
+    rng_d, rng_v = jax.random.split(rng)
+    t_pos0 = target_cache["pos"]
+    d_pos0 = draft_cache["pos"]
+
+    d_tokens, d_probs, draft_cache = draft_propose(
+        draft_params, draft_cache, last_tokens, draft_cfg, spec, rng_d, exec_cfg)
+
+    target_in = jnp.concatenate([last_tokens[:, None], d_tokens], axis=1)  # (B, K+1)
+    t_logits, target_cache = backbone.extend_step(
+        target_params, target_cache, target_in, target_cfg, exec_cfg)
+
+    out, n_emitted, n_acc = verify(rng_v, t_logits, d_probs, d_tokens, spec.temperature)
+
+    # per-sequence rollback: keep prefix + last + accepted drafts processed
+    target_cache = dict(target_cache, pos=t_pos0 + 1 + n_acc)
+    draft_cache = dict(draft_cache, pos=d_pos0 + 1 + n_acc)
+
+    new_last = jnp.take_along_axis(out, n_acc[:, None], axis=1)[:, 0]
+    b = last_tokens.shape[0]
+    return {
+        "tokens": out,
+        "n_emitted": n_emitted,
+        "n_accepted": n_acc,
+        "new_last": new_last,
+        "target_cache": target_cache,
+        "draft_cache": draft_cache,
+        # bytes crossing the pool boundary per round (Fig. 4 / Fig. 7);
+        # draft probs ship fp16 (the verifier's acceptance test tolerates it)
+        "bytes_token_ids": b * k * 4,
+        "bytes_draft_probs": b * k * draft_cfg.vocab_size * 2,
+    }
+
+
+def expected_tokens_per_round(alpha: float, k: int) -> float:
+    """E[#emitted tokens] for per-token acceptance rate alpha (analytic)."""
+    if abs(1.0 - alpha) < 1e-9:
+        return float(k + 1)
+    return float((1.0 - alpha ** (k + 1)) / (1.0 - alpha))

@@ -1,0 +1,51 @@
+"""Gradient compression for the data-parallel sync path.
+
+int8 all-reduce with a shared (pmax) scale: 1 byte/element on the wire
+instead of 4, plus an error-feedback residual so quantization error does
+not bias training (it is re-injected into the next step's gradients).
+
+Used by training/train_step.make_compressed_train_step via shard_map over
+the data axes. On the production mesh this composes with the "model" axis
+left in auto mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_quantize(x: jax.Array, scale: jax.Array):
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8)
+
+
+def int8_allreduce_mean(x: jax.Array, axis_name: str) -> jax.Array:
+    """Mean over `axis_name` with int8 payloads (all-gather + local sum)."""
+    n = jax.lax.psum(1, axis_name)
+    local_max = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(jax.lax.pmax(local_max, axis_name), 1e-12) / 127.0
+    q = int8_quantize(x, scale)
+    allq = jax.lax.all_gather(q, axis_name)           # int8 on the wire
+    return allq.astype(jnp.float32).sum(axis=0) * scale / n
+
+
+def compress_tree_mean(grads, axis_name: str, residual=None):
+    """Compressed mean-all-reduce over a gradient pytree with error feedback.
+
+    Returns (synced_grads, new_residual)."""
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        synced = int8_allreduce_mean(g32, axis_name)
+        # local quantization error (what this shard failed to communicate)
+        local_max = jnp.max(jnp.abs(g32))
+        scale = jnp.maximum(jax.lax.pmax(local_max, axis_name), 1e-12) / 127.0
+        err = g32 - int8_quantize(g32, scale).astype(jnp.float32) * scale
+        return synced.astype(g.dtype), err
+
+    pairs = jax.tree.map(one, grads, residual)
+    synced = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    new_res = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return synced, new_res

@@ -1,0 +1,61 @@
+"""Fault tolerance utilities for the serving path.
+
+`StragglerPolicy` implements deadline-based re-dispatch: an iteration that
+exceeds `multiple x` its expected duration is assumed stuck (preempted
+node, thermal throttle) and its work is re-issued to the backup pool; the
+first result wins. The simulator applies it per decode iteration; a real
+deployment applies it per pool RPC.
+
+`HeartbeatTracker` is the liveness layer the elastic trainer consumes: a
+pool that misses `miss_limit` heartbeats is declared failed, triggering
+re-mesh (training/elastic.py) or pool eviction (serving router).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerPolicy:
+    multiple: float = 3.0         # deadline = multiple x expected duration
+    redispatch_overhead_s: float = 2e-3
+
+    def deadline(self, expected_s: float) -> float:
+        return self.multiple * expected_s
+
+    def mitigate(self, actual_s: float, expected_s: float, backup_s: float) -> float:
+        """Observed iteration time under the policy: when the primary blows
+        its deadline, the re-dispatched backup bounds the tail."""
+        d = self.deadline(expected_s)
+        if actual_s <= d:
+            return actual_s
+        return d + self.redispatch_overhead_s + backup_s
+
+
+@dataclasses.dataclass
+class HeartbeatTracker:
+    interval_s: float = 1.0
+    miss_limit: int = 3
+    _last: dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def beat(self, node: str, now_s: float) -> None:
+        self._last[node] = now_s
+
+    def dead(self, now_s: float) -> list[str]:
+        limit = self.interval_s * self.miss_limit
+        return [n for n, t in self._last.items() if now_s - t > limit]
+
+
+def apply_straggler_model(
+    rng, base_time_s: float, policy: StragglerPolicy | None,
+    backup_time_s: float | None = None,
+    p_straggle: float = 0.0, straggle_factor: float = 10.0,
+) -> float:
+    """Sample an iteration duration under an optional straggler process and
+    an optional mitigation policy (used by the simulator sweeps)."""
+    t = base_time_s
+    if p_straggle > 0 and rng.random() < p_straggle:
+        t = base_time_s * straggle_factor
+    if policy is None:
+        return t
+    return policy.mitigate(t, base_time_s, backup_time_s or base_time_s)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the serving hot paths.
+
+Kernels target TPU (pl.pallas_call + explicit BlockSpec VMEM tiling) and
+are validated on CPU via interpret mode against the pure-jnp oracles in
+``ref.py``. The jit'd public API lives in ``ops.py``.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

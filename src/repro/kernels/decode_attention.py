@@ -1,0 +1,112 @@
+"""Pallas TPU decode attention (memory-bound KV-cache hot path).
+
+The paper's decode phase is HBM-bandwidth bound: one query token attends
+over the whole cached prefix. The kernel streams the KV cache HBM->VMEM in
+(block_k x head_dim) pages; each program owns one (batch, kv-head) pair and
+computes all G = H/KV query heads of that group at once, so every KV byte
+fetched is reused G times (the GQA arithmetic-intensity win). Online
+softmax state for the G query rows persists in VMEM scratch across the
+sequential KV-block grid dimension.
+
+Positions >= pos[b] (unwritten cache slots) are masked. This is the dense
+cousin of a paged-attention kernel: the serving layer's block table
+(serving/kv_cache.py) resolves logical pages to this contiguous layout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    pos_ref,                      # scalar-prefetch: (B,) lengths
+    q_ref,                        # (1, 1, G, D)
+    k_ref, v_ref,                 # (1, 1, block_k, D)
+    o_ref,                        # (1, 1, G, D)
+    m_scr, l_scr, acc_scr,        # (G, 1), (G, 1), (G, D)
+    *,
+    block_k: int,
+    sm_scale: float,
+    kv_blocks: int,
+):
+    bi = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    cur = pos_ref[bi]
+    # skip blocks entirely past the written prefix (q sits at index `cur`)
+    @pl.when(ik * block_k <= cur)
+    def compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale                                   # (G, bk)
+        kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos <= cur, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ik == kv_blocks - 1)
+    def finalize():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention_grouped(
+    q: jax.Array,        # (B, KV, G, D) - query heads grouped by kv head
+    k_cache: jax.Array,  # (B, KV, S, D)
+    v_cache: jax.Array,
+    pos: jax.Array,      # (B,) int32: index of the current token
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, kvh, g, d = q.shape
+    s = k_cache.shape[2]
+    block_k = min(block_k, s)
+    assert s % block_k == 0, (s, block_k)
+    nk = s // block_k
+
+    kernel = functools.partial(
+        _decode_kernel, block_k=block_k, sm_scale=d ** -0.5, kv_blocks=nk
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kvh, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, ik, pos_ref: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bi, hi, ik, pos_ref: (bi, hi, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bi, hi, ik, pos_ref: (bi, hi, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bi, hi, ik, pos_ref: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        interpret=interpret,
+    )(pos, q, k_cache, v_cache)

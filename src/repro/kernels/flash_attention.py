@@ -1,0 +1,124 @@
+"""Pallas TPU flash attention (prefill hot path, causal, GQA).
+
+TPU adaptation of the paper's prefill compute phase: blocked online-softmax
+attention with explicit VMEM tiling. Q/KV stream HBM->VMEM in
+(block_q x head_dim) / (block_k x head_dim) tiles; the MXU sees
+(block_q, head_dim) x (head_dim, block_k) matmuls with both contraction
+dims >= 128 by default. Accumulators (m, l, acc) live in VMEM scratch and
+persist across the innermost (KV-block) grid dimension, which TPU executes
+sequentially.
+
+Layout: q (B, H, S, D), k/v (B, KV, S, D) - heads-major so the S dimension
+tiles contiguously. GQA is handled in the BlockSpec index maps
+(q-head h reads kv-head h // (H // KV)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,          # VMEM tiles
+    o_ref,                        # output tile (block_q, D)
+    m_scr, l_scr, acc_scr,        # scratch: (block_q, 1), (block_q, 1), (block_q, D)
+    *,
+    block_q: int,
+    block_k: int,
+    sm_scale: float,
+    causal: bool,
+    kv_blocks: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: skip KV blocks entirely above the diagonal
+    run = (not causal) or (ik * block_k <= iq * block_q + block_q - 1)
+
+    @pl.when(run)
+    def compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale                                  # (bq, bk)
+        if causal:
+            qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_scr[...]                           # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                        # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ik == kv_blocks - 1)
+    def finalize():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention_hsd(
+    q: jax.Array,   # (B, H, S, D)
+    k: jax.Array,   # (B, KV, S, D)
+    v: jax.Array,
+    causal: bool = True,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, s, d = q.shape
+    kvh = k.shape[1]
+    assert h % kvh == 0, (h, kvh)
+    group = h // kvh
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    nq, nk = s // block_q, s // block_k
+
+    grid = (b, h, nq, nk)
+    kernel = functools.partial(
+        _flash_kernel,
+        block_q=block_q,
+        block_k=block_k,
+        sm_scale=d ** -0.5,
+        causal=causal,
+        kv_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, iq, ik: (bi, hi, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bi, hi, iq, ik: (bi, hi // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bi, hi, iq, ik: (bi, hi // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, iq, ik: (bi, hi, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

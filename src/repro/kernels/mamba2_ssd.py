@@ -1,0 +1,117 @@
+"""Pallas TPU kernel for the Mamba2 SSD recurrence (chunked form).
+
+One program per (batch, head); chunks iterate sequentially on the innermost
+grid axis with the (N x P) state in VMEM scratch. Intra-chunk work is three
+(chunk x N/P) MXU matmuls; scalar-per-head decays make the log-space
+factorization exact (exponents centered at half the chunk total, clamped -
+see models/mamba2.py).
+
+Layout: x (B, H, T, P), Bmat/Cmat (B, T, N) (shared across heads,
+n_groups=1), dt (B, H, T).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DECAY_CLAMP = 1.0
+
+
+def _ssd_kernel(
+    x_ref,                         # (1, 1, Lc, P)
+    b_ref, c_ref,                  # (1, Lc, N)
+    dt_ref,                        # (1, 1, Lc)
+    alog_ref,                      # (1,)
+    s0_ref,                        # (1, 1, N, P)
+    y_ref,                         # (1, 1, Lc, P)
+    sout_ref,                      # (1, 1, N, P)
+    state_scr,                     # VMEM (N, P) fp32
+    *,
+    chunk: int,
+    nc: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def init():
+        state_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, 0].astype(jnp.float32)               # (Lc, P)
+    bm = b_ref[0].astype(jnp.float32)                 # (Lc, N)
+    cm = c_ref[0].astype(jnp.float32)
+    dt = dt_ref[0, 0].astype(jnp.float32)             # (Lc,)
+    a = -jnp.exp(alog_ref[0].astype(jnp.float32))
+
+    la = jnp.clip(a * dt, -DECAY_CLAMP, 0.0)          # (Lc,)
+    cum = jnp.cumsum(la)
+    m = cum[-1]
+    half = 0.5 * m
+
+    c_f = cm * jnp.exp(cum - half)[:, None]
+    b_f = bm * (jnp.exp(half - cum) * dt)[:, None]
+    scores = jax.lax.dot_general(c_f, b_f, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    scores = jnp.where(lj <= li, scores, 0.0)          # inclusive diagonal
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # from carried state
+    c_st = cm * jnp.exp(cum)[:, None]
+    y = y + jax.lax.dot_general(c_st, state_scr[...], (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    b_st = bm * (jnp.exp(m - cum) * dt)[:, None]
+    state_scr[...] = state_scr[...] * jnp.exp(m) + jax.lax.dot_general(
+        b_st, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ic == nc - 1)
+    def flush():
+        sout_ref[0, 0] = state_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba2_ssd_htp(
+    x: jax.Array,       # (B, H, T, P)
+    b_in: jax.Array,    # (B, T, N)
+    c_in: jax.Array,    # (B, T, N)
+    dt: jax.Array,      # (B, H, T) fp32 post-softplus
+    a_log: jax.Array,   # (H,)
+    state0: jax.Array,  # (B, H, N, P) fp32
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    b, h, t, p = x.shape
+    n = b_in.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, nc=nc)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ic: (bi, hi, ic, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ic: (bi, ic, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ic: (bi, ic, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bi, hi, ic: (bi, hi, ic)),
+            pl.BlockSpec((1,), lambda bi, hi, ic: (hi,)),
+            pl.BlockSpec((1, 1, n, p), lambda bi, hi, ic: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ic: (bi, hi, ic, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda bi, hi, ic: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, t, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, b_in, c_in, dt, a_log, state0)
+    return y, state

@@ -1,0 +1,89 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These adapt the model-code layouts ((B, S, H, D) activations) to the
+kernels' heads-major layouts, select interpret mode automatically off-TPU
+(the kernels' *target* is TPU; interpret=True executes the kernel body in
+Python for CPU validation), and guard shapes/dtypes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention_grouped
+from repro.kernels.flash_attention import flash_attention_hsd
+from repro.kernels.mamba2_ssd import mamba2_ssd_htp
+from repro.kernels.rwkv6_wkv import rwkv6_wkv_htn
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pick_block(s: int, target: int) -> int:
+    """Largest power-of-two block <= target that divides s."""
+    b = min(target, s)
+    while s % b:
+        b //= 2
+    return max(b, 1)
+
+
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 256, block_k: int = 256):
+    """q: (B, S, H, D), k/v: (B, S, KV, D) -> (B, S, H, D)."""
+    assert q.ndim == 4 and k.shape[:2] == q.shape[:2], (q.shape, k.shape)
+    s = q.shape[1]
+    out = flash_attention_hsd(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=causal,
+        block_q=_pick_block(s, block_q),
+        block_k=_pick_block(s, block_k),
+        interpret=_interpret(),
+    )
+    return out.transpose(0, 2, 1, 3)
+
+
+def decode_attention(q, k_cache, v_cache, pos, block_k: int = 512):
+    """q: (B, 1, H, D), caches: (B, KV, S, D), pos: (B,) -> (B, 1, H, D)."""
+    b, _, h, d = q.shape
+    kvh = k_cache.shape[1]
+    g = h // kvh
+    qg = q[:, 0].reshape(b, kvh, g, d)
+    s = k_cache.shape[2]
+    out = decode_attention_grouped(
+        qg, k_cache, v_cache, pos.astype(jnp.int32),
+        block_k=_pick_block(s, block_k), interpret=_interpret(),
+    )
+    return out.reshape(b, 1, h, d)
+
+
+def rwkv6_wkv(r, k, v, logw, u, state0=None, chunk: int = 16):
+    """Model layout (B, T, H, N) -> kernel layout (B, H, T, N) and back."""
+    b, t, h, n = r.shape
+    if state0 is None:
+        state0 = jnp.zeros((b, h, n, n), jnp.float32)
+    tr = lambda a: a.transpose(0, 2, 1, 3)
+    y, state = rwkv6_wkv_htn(
+        tr(r), tr(k), tr(v), tr(logw.astype(jnp.float32)),
+        u.astype(jnp.float32), state0,
+        chunk=min(chunk, t) if t % chunk == 0 else _pick_block(t, chunk),
+        interpret=_interpret(),
+    )
+    return tr(y), state
+
+
+def mamba2_ssd(xh, b_in, c_in, dt, a_log, state0=None, chunk: int = 128):
+    """Model layout xh (B, T, H, P) -> kernel layout and back.
+
+    NOTE kernel state layout is (B, H, N, P) matching models/mamba2.py."""
+    b, t, h, p = xh.shape
+    n = b_in.shape[-1]
+    if state0 is None:
+        state0 = jnp.zeros((b, h, n, p), jnp.float32)
+    y, state = mamba2_ssd_htp(
+        xh.transpose(0, 2, 1, 3), b_in, c_in,
+        dt.astype(jnp.float32).transpose(0, 2, 1), a_log, state0,
+        chunk=_pick_block(t, chunk), interpret=_interpret(),
+    )
+    return y.transpose(0, 2, 1, 3), state

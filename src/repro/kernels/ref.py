@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Deliberately *different algorithms* from the kernels: attention oracles
+materialize the full score matrix; the recurrence oracles run per-token
+`lax.scan` (the defining equations), not the chunked form. Kernel tests
+assert allclose against these across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q: (B, H, S, D), k/v: (B, KV, S, D) -> (B, H, S, D)."""
+    b, h, s, d = q.shape
+    kvh = k.shape[1]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, s, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bqgsd,bqtd->bqgst", qg, kf) * (d ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bqgst,bqtd->bqgsd", p, vf)
+    return o.reshape(b, h, s, d).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos):
+    """q: (B, KV, G, D), caches: (B, KV, S, D), pos: (B,) -> (B, KV, G, D)."""
+    b, kvh, g, d = q.shape
+    s = k_cache.shape[2]
+    scores = jnp.einsum(
+        "bqgd,bqtd->bqgt", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * (d ** -0.5)
+    mask = jnp.arange(s)[None, :] <= pos[:, None]
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bqgt,bqtd->bqgd", p, v_cache.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def rwkv6_wkv_ref(r, k, v, logw, u, state0):
+    """Per-token WKV6 recurrence. All (B, H, T, N); u (H, N); s0 (B,H,N,N)."""
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    lw = logw.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, lwt = inp                      # (B, H, N) each
+        kv = jnp.einsum("bhn,bhm->bhnm", kt, vt)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, s + u[None, :, :, None] * kv)
+        s = s * jnp.exp(lwt)[..., None] + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (rf, kf, vf, lw))
+    state, ys = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 2), state           # (B, H, T, N)
+
+
+def mamba2_ssd_ref(x, b_in, c_in, dt, a_log, state0, clamp: float = 1.0):
+    """Per-token SSD recurrence. x (B,H,T,P), b/c (B,T,N), dt (B,H,T)."""
+    xf = x.astype(jnp.float32)
+    bf = b_in.astype(jnp.float32)
+    cf = c_in.astype(jnp.float32)
+    a = -jnp.exp(a_log.astype(jnp.float32))        # (H,)
+
+    def step(s, inp):
+        xt, bt, ct, dtt = inp                      # (B,H,P), (B,N), (B,N), (B,H)
+        la = jnp.clip(a * dtt, -clamp, 0.0)
+        upd = jnp.einsum("bn,bhp->bhnp", bt, xf_dt := xt * dtt[..., None])
+        s = s * jnp.exp(la)[..., None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", ct, s)
+        return s, y
+
+    xs = (
+        jnp.moveaxis(xf, 2, 0),
+        jnp.moveaxis(bf, 1, 0),
+        jnp.moveaxis(cf, 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 2, 0),
+    )
+    state, ys = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 2), state           # (B, H, T, P)

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel for the RWKV6 WKV recurrence (chunked form).
+
+One program per (batch, head); the chunk dimension is the innermost grid
+axis, executed sequentially on TPU, with the (N x N) recurrent state held
+in VMEM scratch across chunks. Within a chunk everything is (chunk x N)
+matmuls on the MXU; the same centered log-space factorization as
+models/rwkv6.py keeps exponents fp32-safe (see that module's docstring).
+
+Layout: r/k/v/logw (B, H, T, N) - heads-major so chunks tile contiguously.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(
+    r_ref, k_ref, v_ref, w_ref,   # (1, 1, Lc, N) tiles
+    u_ref,                        # (1, N)
+    s0_ref,                       # (1, 1, N, N) initial state
+    y_ref,                        # (1, 1, Lc, N) out
+    sout_ref,                     # (1, 1, N, N) final state out
+    state_scr,                    # VMEM (N, N) fp32
+    *,
+    chunk: int,
+    nc: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def init():
+        state_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)               # (Lc, N)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = w_ref[0, 0].astype(jnp.float32)              # negative log-decays
+    u = u_ref[0].astype(jnp.float32)                  # (N,)
+
+    cum = jnp.cumsum(lw, axis=0)
+    cum_ex = cum - lw
+    m = cum[-1]                                       # (N,)
+    half = 0.5 * m
+
+    a_in = r * jnp.exp(cum_ex - half)
+    b_in = k * jnp.exp(half - cum)
+    scores = jax.lax.dot_general(
+        a_in, b_in, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                  # (Lc, Lc)
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    scores = jnp.where(lj < li, scores, 0.0)           # strictly lower
+    y = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    diag = jnp.sum(r * (u * k), axis=1, keepdims=True)  # current-token bonus
+    y = y + diag * v
+    # contribution from carried state
+    a_st = r * jnp.exp(cum_ex)
+    y = y + jax.lax.dot_general(a_st, state_scr[...], (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # state update: S <- diag(exp(m)) S + (k * exp(m - cum))^T v
+    k_st = k * jnp.exp(m - cum)
+    state_scr[...] = state_scr[...] * jnp.exp(m)[:, None] + jax.lax.dot_general(
+        k_st, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ic == nc - 1)
+    def flush():
+        sout_ref[0, 0] = state_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_wkv_htn(
+    r: jax.Array,      # (B, H, T, N)
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,   # (B, H, T, N) fp32, negative
+    u: jax.Array,      # (H, N)
+    state0: jax.Array,  # (B, H, N, N) fp32
+    chunk: int = 16,
+    interpret: bool = False,
+):
+    b, h, t, n = r.shape
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    kernel = functools.partial(_wkv_kernel, chunk=chunk, nc=nc)
+    tile = pl.BlockSpec((1, 1, chunk, n), lambda bi, hi, ic: (bi, hi, ic, 0))
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            tile, tile, tile, tile,
+            pl.BlockSpec((1, n), lambda bi, hi, ic: (hi, 0)),
+            pl.BlockSpec((1, 1, n, n), lambda bi, hi, ic: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, n), lambda bi, hi, ic: (bi, hi, ic, 0)),
+            pl.BlockSpec((1, 1, n, n), lambda bi, hi, ic: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, t, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, n, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u, state0)
+    return y, state

@@ -1,0 +1,86 @@
+"""Static VMEM budgeting for the Pallas kernels.
+
+TPU cores have ~16 MiB of VMEM; a kernel whose per-program working set
+(input/output tiles + scratch) exceeds the budget fails at Mosaic compile
+time on hardware. These estimators mirror each kernel's BlockSpec tiling
+so block sizes can be validated/autotuned off-device (CPU interpret mode
+never enforces the limit - this module does).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+VMEM_BYTES = 16 * 2 ** 20
+# double-buffering of HBM->VMEM streams: Mosaic keeps 2 copies of each
+# streamed input tile in flight
+STREAM_COPIES = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class VmemEstimate:
+    tiles_bytes: int
+    scratch_bytes: int
+
+    @property
+    def total_bytes(self) -> int:
+        return self.tiles_bytes + self.scratch_bytes
+
+    @property
+    def fits(self) -> bool:
+        return self.total_bytes <= VMEM_BYTES
+
+    def assert_fits(self, name: str) -> None:
+        if not self.fits:
+            raise ValueError(
+                f"{name}: VMEM working set {self.total_bytes/2**20:.2f} MiB "
+                f"exceeds the {VMEM_BYTES/2**20:.0f} MiB budget")
+
+
+def flash_attention_vmem(block_q: int, block_k: int, head_dim: int,
+                         dtype_bytes: int = 2) -> VmemEstimate:
+    """q tile + k/v tiles (streamed, double-buffered) + out tile + scratch."""
+    q = block_q * head_dim * dtype_bytes
+    kv = 2 * STREAM_COPIES * block_k * head_dim * dtype_bytes
+    out = block_q * head_dim * dtype_bytes
+    scratch = (2 * block_q + block_q * head_dim) * 4          # m, l, acc fp32
+    scores = block_q * block_k * 4                            # fp32 intermediates
+    return VmemEstimate(q + kv + out + scores, scratch)
+
+
+def decode_attention_vmem(group: int, block_k: int, head_dim: int,
+                          dtype_bytes: int = 2) -> VmemEstimate:
+    q = group * head_dim * dtype_bytes
+    kv = 2 * STREAM_COPIES * block_k * head_dim * dtype_bytes
+    out = group * head_dim * dtype_bytes
+    scratch = (2 * group + group * head_dim) * 4
+    scores = group * block_k * 4
+    return VmemEstimate(q + kv + out + scores, scratch)
+
+
+def rwkv6_vmem(chunk: int, n: int) -> VmemEstimate:
+    tiles = 4 * STREAM_COPIES * chunk * n * 4 + chunk * n * 4  # r/k/v/w in, y out
+    tiles += n * 4 + n * n * 4                                 # u, s0
+    scores = chunk * chunk * 4
+    scratch = n * n * 4                                        # state
+    return VmemEstimate(tiles + scores, scratch)
+
+
+def mamba2_vmem(chunk: int, n: int, p: int) -> VmemEstimate:
+    tiles = STREAM_COPIES * (chunk * p + 2 * chunk * n + chunk) * 4
+    tiles += chunk * p * 4 + n * p * 4                         # y out, s0
+    scores = chunk * chunk * 4
+    scratch = n * p * 4
+    return VmemEstimate(tiles + scores, scratch)
+
+
+def autotune_block(fits_fn, lo: int = 128, hi: int = 4096) -> int:
+    """Largest power-of-two block in [lo, hi] whose estimate fits VMEM."""
+    best = 0
+    b = lo
+    while b <= hi:
+        if fits_fn(b).fits:
+            best = b
+        b *= 2
+    if best == 0:
+        raise ValueError("no block size fits VMEM")
+    return best

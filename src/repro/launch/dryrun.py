@@ -1,0 +1,298 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init). 512 placeholder host devices back the production
+# meshes; nothing here allocates real buffers (ShapeDtypeStruct lowering).
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell and extract the roofline terms.
+
+Modes
+-----
+proof  lax.scan layer stacks (small HLO), compiled on BOTH the single-pod
+       (16,16) and multi-pod (2,16,16) meshes. Proves the sharding config
+       is coherent (no sharding mismatch / unsupported collective) and
+       records memory_analysis (fits-in-HBM proof).
+
+cost   statically-unrolled layers on the single-pod mesh for true HLO
+       FLOP/byte/collective counts (XLA cost analysis counts a scan body
+       once - measured in DESIGN.md §7). To keep compile time bounded the
+       cost pass lowers the stack at TWO depths (1 and 2 homogeneous layer
+       units) and extrapolates linearly - exact for homogeneous stacks,
+       which every assigned arch has (zamba2's unit is one 6-layer tap
+       group). Inner chunk scans (rwkv6/mamba2 recurrences) remain scans;
+       their in-scan einsums are <1% of layer FLOPs (models/rwkv6.py).
+
+Collective bytes are parsed from the post-SPMD compiled HLO: the result
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (all-reduce weighted 2x for the ring send+recv).
+
+Usage:
+    python -m repro.launch.dryrun --mode proof --arch all --shape all
+    python -m repro.launch.dryrun --mode cost  --arch yi-34b --shape train_4k
+Artifacts accumulate in benchmarks/artifacts/dryrun.json.
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, cell_is_runnable, get_config, input_specs
+from repro.distributed.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    param_pspecs,
+    tokens_pspec,
+    zero_pspecs,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models import backbone
+from repro.models.config import ModelConfig
+from repro.models.layers import ExecConfig
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train_step import train_step
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "benchmarks", "artifacts", "dryrun.json")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8, "s32": 4,
+    "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "f8e4m3": 1,
+    "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([0-9,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective payload bytes by op kind (post-SPMD HLO)."""
+    out: dict[str, dict[str, float]] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        tuple_part, dtype, dims, kind = m.group(1), m.group(2), m.group(3), m.group(4)
+        if tuple_part is not None:
+            nbytes = sum(_shape_bytes(t, d) for t, d in _SHAPE_RE.findall(tuple_part))
+        else:
+            nbytes = _shape_bytes(dtype, dims)
+        if kind == "all-reduce":
+            nbytes *= 2  # ring all-reduce: reduce-scatter + all-gather phases
+        rec = out.setdefault(kind, {"count": 0, "bytes": 0.0})
+        rec["count"] += 1
+        rec["bytes"] += nbytes
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-cell lowering
+# ---------------------------------------------------------------------------
+def _params_struct(cfg: ModelConfig):
+    return jax.eval_shape(lambda: backbone.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def _ns(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree)
+
+
+def lower_cell(cfg: ModelConfig, shape: str, mesh, exec_cfg: ExecConfig):
+    """Returns (lowered, compiled, timings)."""
+    spec = input_specs(cfg, shape)
+    params = _params_struct(cfg)
+    pshard = _ns(mesh, param_pspecs(params, mesh))
+    kind = SHAPES[shape].kind
+    if kind in ("train", "prefill") and SHAPES[shape].seq_len % mesh.shape["model"] == 0:
+        # Megatron-style sequence parallelism on the residual stream +
+        # expert-parallel dispatch layout when the expert count divides
+        from repro.distributed.sharding import ep_axes_for
+
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        ep = ep_axes_for(mesh, cfg.moe.num_experts) if cfg.moe else None
+        exec_cfg = dataclasses.replace(exec_cfg, carry_spec=(dp, "model", None),
+                                       ep_axes=ep)
+
+    t0 = time.time()
+    if kind == "train":
+        opt = jax.eval_shape(init_opt_state, params)
+        zspec = zero_pspecs(params, mesh)
+        oshard = {"step": NamedSharding(mesh, P()), "m": _ns(mesh, zspec),
+                  "v": _ns(mesh, zspec), "master": _ns(mesh, zspec)}
+        bshard = _ns(mesh, batch_pspecs(spec["batch"], mesh))
+        # microbatch gradient accumulation for the big models (proof mode:
+        # the HBM-fit proof; cost mode uses microbatches=1 since total
+        # FLOPs/bytes per optimizer step are microbatch-invariant). The
+        # recurrent families carry wide per-token chunk workspaces, so
+        # they microbatch harder (§Perf iteration 6).
+        mb = 1
+        if not exec_cfg.static_unroll:
+            n = cfg.param_count()
+            mb = 4 if n > 4e10 else (2 if n > 1.2e10 else 1)
+            if cfg.family == "hybrid":
+                mb = max(mb, 4)
+            elif cfg.family == "ssm":
+                mb = max(mb, 2)
+        fn = functools.partial(train_step, cfg=cfg, opt_cfg=AdamWConfig(),
+                               exec_cfg=exec_cfg, microbatches=mb)
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=(pshard, oshard, bshard)).lower(
+                params, opt, spec["batch"])
+    elif kind == "prefill":
+        bshard = _ns(mesh, batch_pspecs(spec["batch"], mesh))
+        fn = functools.partial(backbone.prefill, cfg=cfg, exec_cfg=exec_cfg)
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=(pshard, bshard)).lower(
+                params, spec["batch"])
+    else:  # decode
+        cshard = _ns(mesh, cache_pspecs(spec["cache"], cfg, mesh))
+        tshard = NamedSharding(mesh, tokens_pspec(spec["tokens"].shape, mesh))
+        args = [params, spec["cache"], spec["tokens"]]
+        shardings = [pshard, cshard, tshard]
+        if "embeds" in spec:  # audio frontend: per-step frame embedding input
+            def fn(p, c, t, e):
+                return backbone.serve_step(p, c, t, cfg, exec_cfg, embeds=e)
+
+            args.append(spec["embeds"])
+            shardings.append(NamedSharding(mesh, tokens_pspec(spec["embeds"].shape, mesh)))
+        else:
+            fn = functools.partial(backbone.serve_step, cfg=cfg, exec_cfg=exec_cfg)
+        with mesh:
+            # donate the cache: decode is memory-bound and the functional
+            # update would otherwise copy the whole KV cache every step
+            # (§Perf iteration 5)
+            lowered = jax.jit(fn, in_shardings=tuple(shardings),
+                              donate_argnums=(1,)).lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    return lowered, compiled, {"lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2)}
+
+
+def analyze(compiled) -> dict:
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    colls = collective_bytes(compiled.as_text())
+    return {
+        "flops_per_device": ca.get("flops", 0.0),
+        "bytes_per_device": ca.get("bytes accessed", 0.0),
+        "argument_bytes": getattr(ma, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(ma, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(ma, "temp_size_in_bytes", 0),
+        "alias_bytes": getattr(ma, "alias_size_in_bytes", 0),
+        "collectives": colls,
+        "collective_bytes_per_device": sum(c["bytes"] for c in colls.values()),
+    }
+
+
+def _unit_layers(cfg: ModelConfig) -> int:
+    return cfg.hybrid_attn_every if cfg.family == "hybrid" else 1
+
+
+def run_cell(arch: str, shape: str, mesh_name: str, mode: str) -> dict:
+    cfg = get_config(arch)
+    ok, reason = cell_is_runnable(cfg, shape)
+    if not ok:
+        return {"status": "skip", "reason": reason}
+    multi = mesh_name == "multi_pod"
+    mesh = make_production_mesh(multi_pod=multi)
+    try:
+        if mode == "proof":
+            exec_cfg = ExecConfig(static_unroll=False, q_block=1024)
+            _, compiled, times = lower_cell(cfg, shape, mesh, exec_cfg)
+            rec = {"status": "ok", **times, **analyze(compiled)}
+            rec["devices"] = int(mesh.size)
+            return rec
+        # cost mode: unrolled at 1 and 2 layer units, extrapolated
+        exec_cfg = ExecConfig(static_unroll=True, q_block=1024)
+        unit = _unit_layers(cfg)
+        results = {}
+        times_all = {}
+        for mult in (1, 2):
+            small = dataclasses.replace(cfg, num_layers=unit * mult)
+            _, compiled, times = lower_cell(small, shape, mesh, exec_cfg)
+            results[mult] = analyze(compiled)
+            times_all[f"compile_s_L{unit * mult}"] = times["compile_s"]
+        n_units = cfg.num_layers // unit
+        rec = {"status": "ok", "devices": int(mesh.size),
+               "extrapolated_from_layers": [unit, 2 * unit], **times_all}
+        for key in ("flops_per_device", "bytes_per_device",
+                    "collective_bytes_per_device", "alias_bytes"):
+            per_unit = results[2][key] - results[1][key]
+            rec[key] = results[1][key] + per_unit * (n_units - 1)
+        rec["collectives"] = results[2]["collectives"]
+        return rec
+    except Exception as e:  # noqa: BLE001 - a failed cell IS the signal
+        return {"status": "error", "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:]}
+
+
+# ---------------------------------------------------------------------------
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single_pod", "multi_pod", "both"])
+    ap.add_argument("--mode", default="proof", choices=["proof", "cost"])
+    ap.add_argument("--out", default=os.path.normpath(ARTIFACTS))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = (["single_pod", "multi_pod"] if args.mesh == "both" else [args.mesh])
+    if args.mode == "cost":
+        meshes = ["single_pod"]  # roofline table is single-pod
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    artifacts = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            artifacts = json.load(f)
+    cells = artifacts.setdefault("cells", {})
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                key = f"{arch}/{shape}/{mesh_name}/{args.mode}"
+                if key in cells and cells[key]["status"] == "ok" and not args.force:
+                    print(f"[cached] {key}")
+                    n_ok += 1
+                    continue
+                t0 = time.time()
+                rec = run_cell(arch, shape, mesh_name, args.mode)
+                cells[key] = rec
+                with open(args.out, "w") as f:
+                    json.dump(artifacts, f, indent=1)
+                status = rec["status"]
+                n_ok += status == "ok"
+                n_skip += status == "skip"
+                n_err += status == "error"
+                extra = ""
+                if status == "ok":
+                    extra = (f" flops/dev={rec.get('flops_per_device', 0):.3e}"
+                             f" coll/dev={rec.get('collective_bytes_per_device', 0):.3e}B"
+                             f" temp={rec.get('temp_bytes', 0)/2**30:.2f}GiB")
+                elif status == "error":
+                    extra = " " + rec["error"][:120]
+                print(f"[{status}] {key} ({time.time()-t0:.1f}s){extra}", flush=True)
+    print(f"\ndone: {n_ok} ok, {n_skip} documented skips, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+from repro.models.config import (
+    AttentionConfig,
+    ModelConfig,
+    MoEConfig,
+    RWKVConfig,
+    SSMConfig,
+    reduced,
+)
+from repro.models.layers import ExecConfig, DEFAULT_EXEC
+from repro.models.backbone import (
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+    serve_step,
+)
+
+__all__ = [
+    "AttentionConfig", "ModelConfig", "MoEConfig", "RWKVConfig", "SSMConfig",
+    "reduced", "ExecConfig", "DEFAULT_EXEC", "forward", "init_cache",
+    "init_params", "loss_fn", "prefill", "serve_step",
+]

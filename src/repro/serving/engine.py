@@ -1,0 +1,293 @@
+"""Real-compute continuous-batching serving engine.
+
+Runs actual JAX forward passes (CPU-validatable with reduced configs; the
+same code paths drive TPU pools) with iteration-level scheduling over a
+paged KV pool:
+
+  - prefill requests take priority (one per iteration, vLLM-style),
+  - active sequences decode as one batch per iteration,
+  - spec/dsd modes run batched speculative rounds (core/spec_decode.py)
+    with *measured* acceptance rates,
+  - every iteration is also priced by the analytic chip model, so a run
+    yields (real tokens, real acceptance, modeled latency/energy/carbon).
+
+The engine is the ground-truth executor: the cluster simulator
+(simulator.py) takes its measured acceptance rate and reproduces its
+per-iteration timing model at scales the CPU cannot execute.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.carbon import CHIP_DB
+from repro.core.spec_decode import SpecConfig, spec_decode_round
+from repro.models import backbone
+from repro.models.config import ModelConfig
+from repro.models.layers import DEFAULT_EXEC, ExecConfig
+from repro.serving.kv_cache import PagedKVPool
+from repro.serving.perfmodel import Interconnect, decode_cost, dsd_round_time, prefill_cost
+from repro.serving.simulator import ChipUse
+
+
+@dataclasses.dataclass
+class EngineRequest:
+    req_id: int
+    prompt: np.ndarray               # (S,) int32
+    max_new_tokens: int
+    arrival_s: float = 0.0
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    ttft_s: float = float("nan")
+    first_token_s: float = float("nan")
+    last_token_s: float = float("nan")
+
+    @property
+    def done(self) -> bool:
+        return len(self.out_tokens) >= self.max_new_tokens
+
+    @property
+    def tpot_s(self) -> float:
+        n = len(self.out_tokens)
+        return 0.0 if n <= 1 else (self.last_token_s - self.first_token_s) / (n - 1)
+
+
+class ServingEngine:
+    """kind: standalone | spec | dsd | dpd (pools are logical on CPU;
+    placement only affects the timing/energy attribution)."""
+
+    def __init__(
+        self,
+        target_cfg: ModelConfig,
+        target_params,
+        kind: str = "standalone",
+        draft_cfg: Optional[ModelConfig] = None,
+        draft_params=None,
+        spec: SpecConfig = SpecConfig(),
+        new_chip: str = "a100",
+        old_chip: Optional[str] = None,
+        interconnect: Interconnect = Interconnect(),
+        max_batch: int = 8,
+        pool_blocks: int = 512,
+        block_size: int = 16,
+        temperature: float = 1.0,
+        seed: int = 0,
+        exec_cfg: ExecConfig = DEFAULT_EXEC,
+    ):
+        if kind in ("spec", "dsd"):
+            assert draft_cfg is not None and draft_params is not None
+        self.cfg = target_cfg
+        self.params = target_params
+        self.kind = kind
+        self.draft_cfg = draft_cfg
+        self.draft_params = draft_params
+        self.spec = dataclasses.replace(spec, temperature=temperature)
+        self.exec_cfg = exec_cfg
+        self.temperature = temperature
+        self.max_batch = max_batch
+        self.new_chip = CHIP_DB[new_chip]
+        self.old_chip = CHIP_DB[old_chip] if old_chip else None
+        self.interconnect = interconnect
+
+        self.pool = PagedKVPool(target_cfg, pool_blocks, block_size,
+                                dtype=jnp.dtype(target_cfg.dtype))
+        self.draft_pool = (
+            PagedKVPool(draft_cfg, pool_blocks, block_size,
+                        dtype=jnp.dtype(draft_cfg.dtype)) if draft_cfg else None
+        )
+        self.rng = jax.random.PRNGKey(seed)
+        self.clock = 0.0                      # modeled time
+        self.use = {self.new_chip.name: ChipUse()}
+        if self.old_chip:
+            self.use.setdefault(self.old_chip.name, ChipUse())
+        self.link_bytes = 0.0
+
+        self.waiting: deque[EngineRequest] = deque()
+        self.active: dict[int, EngineRequest] = {}
+        self.last_token: dict[int, int] = {}  # committed-but-unprocessed token
+        self.finished: list[EngineRequest] = []
+        # measured speculative statistics
+        self.rounds = 0
+        self.accepted = 0
+        self.proposed = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int, arrival_s: float = 0.0) -> EngineRequest:
+        r = EngineRequest(len(self.waiting) + len(self.active) + len(self.finished),
+                          np.asarray(prompt, np.int32), max_new_tokens, arrival_s)
+        self.waiting.append(r)
+        return r
+
+    def _charge(self, chip, cost):
+        self.use[chip.name].busy_s += cost.time_s
+        self.use[chip.name].energy_j += cost.energy_j
+        return cost.time_s
+
+    def _split(self):
+        self.rng, sub = jax.random.split(self.rng)
+        return sub
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        if self.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            self._split(), logits.astype(jnp.float32) / self.temperature, axis=-1
+        ).astype(jnp.int32)
+
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """One engine iteration. Returns False when fully idle."""
+        if self.waiting and len(self.active) < self.max_batch:
+            self._do_prefill(self.waiting.popleft())
+            return True
+        if self.active:
+            if self.kind in ("spec", "dsd"):
+                self._do_spec_round()
+            else:
+                self._do_decode_step()
+            return True
+        return False
+
+    def run_until_idle(self, max_iters: int = 100_000) -> list[EngineRequest]:
+        for _ in range(max_iters):
+            if not self.step():
+                break
+        return self.finished
+
+    # ------------------------------------------------------------------
+    def _do_prefill(self, r: EngineRequest) -> None:
+        self.clock = max(self.clock, r.arrival_s)
+        pl = len(r.prompt)
+        batch = {"tokens": jnp.asarray(r.prompt)[None, :]}
+        logits, cache = backbone.prefill(self.params, batch, self.cfg, self.exec_cfg)
+        self.pool.allocate(r.req_id, pl)
+        self.pool.scatter([r.req_id], cache["k"], cache["v"])
+        dur = self._charge(self.new_chip, prefill_cost(self.cfg, self.new_chip, 1, pl))
+
+        if self.kind in ("spec", "dsd"):
+            _, dcache = backbone.prefill(self.draft_params, batch, self.draft_cfg, self.exec_cfg)
+            self.draft_pool.allocate(r.req_id, pl)
+            self.draft_pool.scatter([r.req_id], dcache["k"], dcache["v"])
+            chip = self.new_chip if self.kind == "spec" else self.old_chip
+            ddur = self._charge(chip, prefill_cost(self.draft_cfg, chip, 1, pl))
+            dur = dur + ddur if self.kind == "spec" else max(dur, ddur)
+        elif self.kind == "dpd":
+            # KV crosses to the decode pool
+            nbytes = pl * self.cfg.kv_bytes_per_token()
+            self.link_bytes += nbytes
+            dur += self.interconnect.transfer_time(nbytes)
+
+        self.clock += dur
+        tok = int(np.asarray(self._sample(logits))[0])
+        r.out_tokens.append(tok)
+        r.ttft_s = self.clock - r.arrival_s
+        r.first_token_s = r.last_token_s = self.clock
+        if r.done:
+            self._finish(r)
+        else:
+            self.active[r.req_id] = r
+            self.last_token[r.req_id] = tok
+
+    def _gather(self, pool: PagedKVPool, sids: list[int], extra: int):
+        for sid in sids:
+            pool.extend(sid, extra)
+        max_len = max(pool.seq(sid).length for sid in sids)
+        k, v = pool.gather(sids, max_len)
+        pos = jnp.asarray([pool.seq(sid).length - extra for sid in sids], jnp.int32)
+        return {"k": k, "v": v, "pos": pos}
+
+    def _commit(self, pool: PagedKVPool, sids: list[int], cache, lengths) -> None:
+        pool.scatter(sids, cache["k"], cache["v"])
+        for sid, ln in zip(sids, lengths):
+            pool.seq(sid).length = int(ln)
+
+    def _do_decode_step(self) -> None:
+        sids = sorted(self.active)
+        cache = self._gather(self.pool, sids, 1)
+        tokens = jnp.asarray([self.last_token[s] for s in sids], jnp.int32)
+        logits, cache = backbone.serve_step(self.params, cache, tokens, self.cfg, self.exec_cfg)
+        new = np.asarray(self._sample(logits))
+        self._commit(self.pool, sids, cache, np.asarray(cache["pos"]))
+        ctx = int(np.mean([self.pool.seq(s).length for s in sids]))
+        chip = self.old_chip if self.kind == "dpd" else self.new_chip
+        self.clock += self._charge(chip, decode_cost(self.cfg, chip, len(sids), ctx))
+        for sid, tok in zip(sids, new):
+            self._emit(self.active[sid], [int(tok)])
+            self.last_token[sid] = int(tok)
+        self._reap()
+
+    def _do_spec_round(self) -> None:
+        k = self.spec.num_draft_tokens
+        sids = sorted(self.active)
+        b = len(sids)
+        tcache = self._gather(self.pool, sids, k + 1)
+        dcache = self._gather(self.draft_pool, sids, k + 1)
+        last = jnp.asarray([self.last_token[s] for s in sids], jnp.int32)
+        out = spec_decode_round(
+            self.params, self.cfg, tcache,
+            self.draft_params, self.draft_cfg, dcache,
+            last, self.spec, self._split(), self.exec_cfg)
+        n_acc = np.asarray(out["n_accepted"])
+        self._commit(self.pool, sids, out["target_cache"], np.asarray(out["target_cache"]["pos"]))
+        self._commit(self.draft_pool, sids, out["draft_cache"], np.asarray(out["draft_cache"]["pos"]))
+
+        # timing/energy: draft = K+1 *sequential* single-token steps (weights
+        # re-read per step); target = one verify pass over K+1 positions
+        ctx = int(np.mean([self.pool.seq(s).length for s in sids]))
+        draft_chip = self.new_chip if self.kind == "spec" else self.old_chip
+        c_d1 = decode_cost(self.draft_cfg, draft_chip, b, ctx)
+        c_d = dataclasses.replace(c_d1, time_s=c_d1.time_s * (k + 1),
+                                  energy_j=c_d1.energy_j * (k + 1))
+        c_t = decode_cost(self.cfg, self.new_chip, b, ctx, new_tokens=k + 1)
+        self._charge(draft_chip, c_d)
+        self._charge(self.new_chip, c_t)
+        if self.kind == "dsd":
+            self.link_bytes += out["bytes_token_ids"] + out["bytes_draft_probs"]
+            round_t = dsd_round_time(
+                c_d.time_s, c_t.time_s, self.interconnect,
+                out["bytes_token_ids"], out["bytes_draft_probs"])
+        else:
+            round_t = c_d.time_s + c_t.time_s
+        self.clock += round_t
+
+        toks = np.asarray(out["tokens"])
+        new_last = np.asarray(out["new_last"])
+        self.rounds += 1
+        self.accepted += int(n_acc.sum())
+        self.proposed += b * k
+        for i, sid in enumerate(sids):
+            r = self.active[sid]
+            emit = [int(t) for t in toks[i, : n_acc[i] + 1]]
+            overflow = len(r.out_tokens) + len(emit) - r.max_new_tokens
+            if overflow > 0:
+                emit = emit[: len(emit) - overflow]
+            self._emit(r, emit)
+            self.last_token[sid] = int(new_last[i])
+        self._reap()
+
+    def _emit(self, r: EngineRequest, tokens: list[int]) -> None:
+        r.out_tokens.extend(tokens)
+        r.last_token_s = self.clock
+
+    def _reap(self) -> None:
+        for sid in [s for s, r in self.active.items() if r.done]:
+            r = self.active.pop(sid)
+            self.last_token.pop(sid, None)
+            self.pool.free(sid)
+            if self.draft_pool is not None:
+                self.draft_pool.free(sid)
+            self._finish(r)
+
+    def _finish(self, r: EngineRequest) -> None:
+        if r.req_id in self.active:  # pragma: no cover
+            del self.active[r.req_id]
+        self.finished.append(r)
+
+    # ------------------------------------------------------------------
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / self.proposed if self.proposed else float("nan")

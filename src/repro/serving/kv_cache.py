@@ -1,0 +1,122 @@
+"""Paged KV-cache pool with block tables (vLLM-style, TPU-adapted).
+
+The pool owns (num_layers, num_blocks, kv_heads, block_size, head_dim)
+K and V arrays; sequences hold block tables (lists of block ids). The
+real-compute engine gathers a sequence batch's blocks into the contiguous
+(L, B, KV, S, D) layout the model's serve_step / the Pallas decode kernel
+expect, and scatters updated blocks back after each iteration.
+
+On TPU the gather/scatter is the block-table indirection a paged-attention
+kernel would do inline; here it doubles as the allocator realism for the
+serving layer (admission control, fragmentation-free alloc/free).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+class OutOfBlocks(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class SeqAlloc:
+    seq_id: int
+    block_table: list[int]
+    length: int = 0
+
+
+class PagedKVPool:
+    """Block-table allocator + storage for attention-family models."""
+
+    def __init__(self, cfg: ModelConfig, num_blocks: int, block_size: int = 16,
+                 dtype=jnp.bfloat16):
+        assert cfg.attn is not None, "paged KV pool is for attention families"
+        a = cfg.attn
+        self.cfg = cfg
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        shape = (cfg.num_attn_layers, num_blocks, a.num_kv_heads, block_size, a.head_dim)
+        self.k = jnp.zeros(shape, dtype)
+        self.v = jnp.zeros(shape, dtype)
+        self._free: list[int] = list(range(num_blocks))
+        self._seqs: dict[int, SeqAlloc] = {}
+
+    # ---------------- allocation ----------------
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def blocks_needed(self, tokens: int) -> int:
+        return -(-tokens // self.block_size)
+
+    def can_admit(self, tokens: int) -> bool:
+        return self.blocks_needed(tokens) <= len(self._free)
+
+    def allocate(self, seq_id: int, tokens: int) -> SeqAlloc:
+        need = self.blocks_needed(tokens)
+        if need > len(self._free):
+            raise OutOfBlocks(f"need {need} blocks, {len(self._free)} free")
+        blocks = [self._free.pop() for _ in range(need)]
+        alloc = SeqAlloc(seq_id, blocks, tokens)
+        self._seqs[seq_id] = alloc
+        return alloc
+
+    def extend(self, seq_id: int, new_tokens: int) -> None:
+        alloc = self._seqs[seq_id]
+        total = alloc.length + new_tokens
+        need = self.blocks_needed(total) - len(alloc.block_table)
+        if need > len(self._free):
+            raise OutOfBlocks(f"extend needs {need} blocks, {len(self._free)} free")
+        alloc.block_table.extend(self._free.pop() for _ in range(need))
+        alloc.length = total
+
+    def free(self, seq_id: int) -> None:
+        alloc = self._seqs.pop(seq_id)
+        self._free.extend(alloc.block_table)
+
+    def seq(self, seq_id: int) -> SeqAlloc:
+        return self._seqs[seq_id]
+
+    # ---------------- gather / scatter ----------------
+    def _tables(self, seq_ids: list[int], pad_blocks: int) -> np.ndarray:
+        tables = np.zeros((len(seq_ids), pad_blocks), np.int32)
+        for i, sid in enumerate(seq_ids):
+            bt = self._seqs[sid].block_table
+            tables[i, : len(bt)] = bt
+        return tables
+
+    def gather(self, seq_ids: list[int], max_len: int):
+        """Materialize (L, B, KV, max_len, D) contiguous caches for a batch."""
+        nb = self.blocks_needed(max_len)
+        tables = jnp.asarray(self._tables(seq_ids, nb))            # (B, nb)
+        def g(store):
+            got = store[:, tables]                                  # (L,B,nb,KV,bs,D)
+            got = jnp.moveaxis(got, 3, 2)                           # (L,B,KV,nb,bs,D)
+            l, b, kv, _, _, d = got.shape
+            return got.reshape(l, b, kv, nb * self.block_size, d)[:, :, :, :max_len]
+        return g(self.k), g(self.v)
+
+    def scatter(self, seq_ids: list[int], k: jax.Array, v: jax.Array) -> None:
+        """Write contiguous (L, B, KV, S, D) caches back into pool blocks."""
+        s = k.shape[3]
+        nb = self.blocks_needed(s)
+        pad = nb * self.block_size - s
+        if pad:
+            zp = [(0, 0)] * 5
+            zp[3] = (0, pad)
+            k = jnp.pad(k, zp)
+            v = jnp.pad(v, zp)
+        tables = jnp.asarray(self._tables(seq_ids, nb))             # (B, nb)
+        def form(x):
+            l, b, kv, _, d = x.shape
+            x = x.reshape(l, b, kv, nb, self.block_size, d)
+            return jnp.moveaxis(x, 2, 3)                            # (L,B,nb,KV,bs,D)
+        self.k = self.k.at[:, tables].set(form(k))
+        self.v = self.v.at[:, tables].set(form(v))

@@ -1,0 +1,79 @@
+"""Serving workloads: the paper's three datasets (Table 2) + arrivals.
+
+Each dataset is summarized by its latency SLOs and the P25/P50/P75
+(input, output) token lengths; samplers draw from a lognormal fitted
+through those percentiles, or run in fixed-size mode (the paper truncates
+prompts to a fixed size per experiment so results are comparable).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterator, Optional
+
+import numpy as np
+
+Z75 = 0.6744897501960817  # Phi^-1(0.75)
+
+
+@dataclasses.dataclass(frozen=True)
+class Dataset:
+    name: str
+    task: str
+    ttft_slo_s: float
+    tpot_slo_s: float
+    p25: tuple[int, int]
+    p50: tuple[int, int]
+    p75: tuple[int, int]
+
+    def size_at(self, percentile: str) -> tuple[int, int]:
+        return {"p25": self.p25, "p50": self.p50, "p75": self.p75}[percentile]
+
+
+DATASETS = {
+    "sharegpt": Dataset("sharegpt", "chatbot", 0.200, 0.080, (24, 24), (160, 140), (510, 357)),
+    "humaneval": Dataset("humaneval", "code-completion", 0.125, 0.200, (108, 31), (136, 55), (182, 88)),
+    "longbench": Dataset("longbench", "summarization", 15.0, 0.150, (1134, 201), (1495, 275), (1817, 352)),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    req_id: int
+    arrival_s: float
+    prompt_len: int
+    output_len: int
+
+
+def _lognormal_params(p25: float, p50: float, p75: float) -> tuple[float, float]:
+    mu = math.log(max(p50, 1.0))
+    sigma = math.log(max(p75, 1.0) / max(p25, 1.0)) / (2.0 * Z75)
+    return mu, max(sigma, 1e-3)
+
+
+def sample_requests(
+    dataset: Dataset,
+    qps: float,
+    duration_s: float,
+    seed: int = 0,
+    fixed_size: Optional[tuple[int, int]] = None,
+) -> list[Request]:
+    """Poisson arrivals at `qps` for `duration_s`; sizes lognormal or fixed."""
+    rng = np.random.default_rng(seed)
+    reqs: list[Request] = []
+    t = 0.0
+    mu_in, sg_in = _lognormal_params(dataset.p25[0], dataset.p50[0], dataset.p75[0])
+    mu_out, sg_out = _lognormal_params(dataset.p25[1], dataset.p50[1], dataset.p75[1])
+    i = 0
+    while True:
+        t += rng.exponential(1.0 / qps)
+        if t >= duration_s:
+            break
+        if fixed_size is not None:
+            pl, ol = fixed_size
+        else:
+            pl = int(np.clip(rng.lognormal(mu_in, sg_in), 1, 8192))
+            ol = int(np.clip(rng.lognormal(mu_out, sg_out), 1, 4096))
+        reqs.append(Request(i, t, pl, ol))
+        i += 1
+    return reqs

@@ -1,0 +1,130 @@
+"""Elastic training runner: checkpoint/restart + re-mesh on node loss.
+
+The runner owns the (mesh, params, opt_state, data) quartet and exposes a
+step loop that survives injected failures: on a `NodeFailure`, it rebuilds
+a mesh from the surviving devices (largest usable data-parallel degree),
+restores the newest intact checkpoint (training/checkpoint.py leaves are
+full arrays, so resharding onto the new mesh is a device_put), seeks the
+data pipeline to the restored step, and continues. This is the same
+protocol a 1000-node deployment runs on a hardware failure - there the
+checkpoint shards live on a distributed store and the re-mesh comes from
+the cluster scheduler, behind the same interfaces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed.sharding import param_pspecs, zero_pspecs
+from repro.models import backbone
+from repro.models.config import ModelConfig
+from repro.models.layers import DEFAULT_EXEC, ExecConfig
+from repro.training import checkpoint as ckpt
+from repro.training.data import DataPipeline
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train_step import make_sharded_train_step
+
+
+class NodeFailure(RuntimeError):
+    """Raised (or injected) when devices drop out mid-run."""
+
+
+def _usable_mesh(devices, model_axis: int) -> Mesh:
+    """Largest (data, model) mesh over the surviving devices."""
+    n = len(devices)
+    model_axis = min(model_axis, n)
+    while n % model_axis:
+        model_axis -= 1
+    data = n // model_axis
+    devs = np.asarray(devices[: data * model_axis]).reshape(data, model_axis)
+    return Mesh(devs, ("data", "model"))
+
+
+@dataclasses.dataclass
+class ElasticTrainer:
+    cfg: ModelConfig
+    batch: int
+    seq: int
+    ckpt_dir: str
+    opt_cfg: AdamWConfig = AdamWConfig()
+    exec_cfg: ExecConfig = DEFAULT_EXEC
+    model_axis: int = 1
+    ckpt_every: int = 10
+    seed: int = 0
+
+    def __post_init__(self):
+        self.devices = list(jax.devices())
+        self.mesh: Optional[Mesh] = None
+        self.step = 0
+        self._build(restore=True)
+
+    # ------------------------------------------------------------------
+    def _build(self, restore: bool) -> None:
+        self.mesh = _usable_mesh(self.devices, self.model_axis)
+        params = backbone.init_params(jax.random.PRNGKey(self.seed), self.cfg)
+        opt = init_opt_state(params)
+        pshard = jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                              param_pspecs(params, self.mesh))
+        zspec = zero_pspecs(params, self.mesh)
+        oshard = {
+            "step": NamedSharding(self.mesh, jax.sharding.PartitionSpec()),
+            "m": jax.tree.map(lambda s: NamedSharding(self.mesh, s), zspec),
+            "v": jax.tree.map(lambda s: NamedSharding(self.mesh, s), zspec),
+            "master": jax.tree.map(lambda s: NamedSharding(self.mesh, s), zspec),
+        }
+        if restore:
+            got_step, state = ckpt.restore_latest(
+                self.ckpt_dir, {"params": params, "opt": opt},
+                {"params": pshard, "opt": oshard})
+            if got_step is not None:
+                self.step = got_step
+                params, opt = state["params"], state["opt"]
+            else:
+                params = jax.device_put(params, pshard)
+                opt = jax.device_put(opt, oshard)
+        else:  # pragma: no cover
+            params = jax.device_put(params, pshard)
+            opt = jax.device_put(opt, oshard)
+        self.params, self.opt = params, opt
+        self.pipeline = DataPipeline(self.cfg, self.mesh, self.batch, self.seq,
+                                     seed=self.seed, start_step=self.step)
+        example = next(iter(self.pipeline))
+        self.pipeline.seek(self.step)
+        self._step_fn = make_sharded_train_step(
+            self.mesh, self.cfg, params, example, self.opt_cfg, self.exec_cfg,
+            donate=False)
+
+    # ------------------------------------------------------------------
+    def fail_devices(self, n: int) -> None:
+        """Simulate losing the last n devices; triggers a re-mesh + restore."""
+        if n >= len(self.devices):
+            raise ValueError("cannot lose every device")
+        self.devices = self.devices[: len(self.devices) - n]
+        self._build(restore=True)
+
+    def run(self, steps: int, on_step: Optional[Callable] = None,
+            fail_at: Optional[dict[int, int]] = None) -> list[float]:
+        """Run `steps` more steps; `fail_at={step: n_devices}` injects
+        failures. Returns the loss history (restarts visible as re-runs)."""
+        losses = []
+        target = self.step + steps
+        while self.step < target:
+            if fail_at and self.step in fail_at:
+                n = fail_at.pop(self.step)
+                self.fail_devices(n)
+                continue
+            batch = next(self.pipeline)
+            self.params, self.opt, metrics = self._step_fn(self.params, self.opt, batch)
+            self.step += 1
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if on_step:
+                on_step(self.step, metrics)
+            if self.step % self.ckpt_every == 0:
+                ckpt.save(self.ckpt_dir, self.step,
+                          {"params": self.params, "opt": self.opt})
+        return losses

@@ -1,0 +1,91 @@
+"""§5 closed-form carbon analysis: Eq. 4-6 and the three implications."""
+import pytest
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core.analysis import (
+    CaseInputs,
+    carbon_ratio,
+    disaggregated_carbon_g,
+    energy_condition_holds,
+    lifetime_sensitivity,
+    ratio_decomposition,
+    savings,
+    standalone_carbon_g,
+)
+
+YEAR = 365.25 * 24 * 3600.0
+
+BASE = CaseInputs(
+    n_a=1000.0, t_a=10.0,
+    n_a2=400.0, t_a2=6.0,
+    n_b=300.0, t_b=20.0,
+    emb_a_g=26340.0, emb_b_g=10300.0,
+    life_a_s=7 * YEAR, life_b_s=7 * YEAR,
+)
+
+
+def test_energy_condition_eq4():
+    assert energy_condition_holds(BASE)             # 700 < 1000
+    worse = CaseInputs(**{**BASE.__dict__, "n_b": 700.0})
+    assert not energy_condition_holds(worse)        # 1100 > 1000
+
+
+def test_savings_positive_when_energy_saved():
+    assert savings(BASE, alpha=261.0) > 0
+
+
+def test_implication2_savings_increase_with_ci():
+    """Carbon Implication 2: higher carbon intensity -> more savings,
+    provided the disaggregated system saves energy."""
+    s = [savings(BASE, a) for a in (17.0, 261.0, 501.0)]
+    assert s[0] < s[1] < s[2]
+
+
+def test_ratio_decomposition_consistent():
+    for alpha in (17.0, 261.0, 501.0):
+        er, resid = ratio_decomposition(BASE, alpha)
+        assert er + resid == pytest.approx(carbon_ratio(BASE, alpha), rel=1e-9)
+    # as alpha -> inf the ratio tends to the energy ratio
+    er, resid = ratio_decomposition(BASE, 1e9)
+    assert abs(resid) < 1e-3
+    assert er == pytest.approx(0.7)
+
+
+def test_implication3_lifetimes():
+    """Old chip living longer -> more savings; new chip living longer ->
+    less savings (its standalone embodied rate drops)."""
+    base_ratio = carbon_ratio(BASE, 261.0)
+    # longer-lived old chip: ratio falls
+    assert lifetime_sensitivity(BASE, 261.0, old_life_s=10 * YEAR) < base_ratio
+    # longer-lived NEW chip: ratio rises (savings drop)
+    assert lifetime_sensitivity(BASE, 261.0, new_life_s=14 * YEAR) > base_ratio
+    # shorter-lived new chip: savings rise
+    assert lifetime_sensitivity(BASE, 261.0, new_life_s=2 * YEAR) < base_ratio
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n_frac=st.floats(0.1, 0.95),
+    alpha=st.floats(5.0, 900.0),
+    t_b=st.floats(1.0, 100.0),
+)
+def test_property_energy_condition_drives_high_ci_savings(n_frac, alpha, t_b):
+    """Whenever disaggregation uses strictly less energy, there exists a
+    high-enough carbon intensity making it carbon-positive (Eq. 4/5)."""
+    c = CaseInputs(**{**BASE.__dict__,
+                      "n_a2": 500.0 * n_frac, "n_b": 400.0 * n_frac, "t_b": t_b})
+    # paper assumption A.3: adding the old chip increases embodied carbon
+    emb_disagg = c.t_a2 / c.life_a_s * c.emb_a_g + c.t_b / c.life_b_s * c.emb_b_g
+    emb_standalone = c.t_a / c.life_a_s * c.emb_a_g
+    assume(emb_disagg > emb_standalone)
+    assert energy_condition_holds(c)
+    assert savings(c, 1e8) > 0  # alpha -> inf limit is the energy ratio < 1
+    # monotonicity in alpha (Implication 2, valid under A.3 + Eq. 4)
+    assert savings(c, alpha * 2) >= savings(c, alpha) - 1e-12
+
+
+def test_standalone_vs_disagg_accounting():
+    s = standalone_carbon_g(BASE, 261.0)
+    d = disaggregated_carbon_g(BASE, 261.0)
+    assert s > 0 and d > 0
+    assert carbon_ratio(BASE, 261.0) == pytest.approx(d / s)

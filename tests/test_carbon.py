@@ -1,0 +1,86 @@
+"""Carbon accounting (Eq. 1-3) and chip DB."""
+import math
+
+import pytest
+
+from repro.core.carbon import (
+    CHIP_DB,
+    GRID_CI,
+    CarbonBreakdown,
+    J_PER_KWH,
+    SECONDS_PER_YEAR,
+    embodied_carbon_g,
+    operational_carbon_g,
+    request_carbon,
+    savings_fraction,
+    total_carbon_g,
+)
+
+
+def test_chip_db_matches_paper_table1():
+    assert CHIP_DB["a100"].embodied_kg == 26.34
+    assert CHIP_DB["v100"].embodied_kg == 20.0
+    assert CHIP_DB["t4"].embodied_kg == 10.3
+    assert CHIP_DB["a100"].hbm_bandwidth == 1555e9
+    assert CHIP_DB["t4"].max_power_w == 70.0
+    assert CHIP_DB["tpu_v5e"].peak_flops == 197e12
+
+
+def test_grid_ci_regions():
+    assert GRID_CI["ncsw"] == 17.0
+    assert GRID_CI["ciso"] == 261.0
+    assert GRID_CI["miso"] == 501.0
+
+
+def test_operational_eq2():
+    # 1 kWh at CISO = 261 g
+    assert operational_carbon_g(J_PER_KWH, 261.0) == pytest.approx(261.0)
+    assert operational_carbon_g(0.0) == 0.0
+
+
+def test_embodied_eq1_amortization():
+    chip = CHIP_DB["a100"]
+    # running for the whole lifetime emits exactly the embodied total
+    full = embodied_carbon_g(chip.lifetime_years * SECONDS_PER_YEAR, chip)
+    assert full == pytest.approx(chip.embodied_g)
+    # linear in time and chips
+    one = embodied_carbon_g(100.0, chip)
+    assert embodied_carbon_g(200.0, chip) == pytest.approx(2 * one)
+    assert embodied_carbon_g(100.0, chip, num_chips=3) == pytest.approx(3 * one)
+
+
+def test_total_eq3_is_sum():
+    chip = CHIP_DB["t4"]
+    t, e = 12.5, 800.0
+    assert total_carbon_g(t, e, chip) == pytest.approx(
+        embodied_carbon_g(t, chip) + operational_carbon_g(e))
+
+
+def test_lifetime_override():
+    chip = CHIP_DB["v100"]
+    # doubling the lifetime halves the amortized rate
+    assert embodied_carbon_g(50.0, chip, lifetime_years=14.0) == pytest.approx(
+        embodied_carbon_g(50.0, chip) / 2)
+
+
+def test_breakdown_algebra():
+    a = CarbonBreakdown(2.0, 3.0)
+    b = CarbonBreakdown(1.0, 1.5)
+    assert (a + b).total_g == pytest.approx(7.5)
+    assert a.scale(2.0).operational_g == pytest.approx(4.0)
+    assert savings_fraction(a, b) == pytest.approx(1 - 2.5 / 5.0)
+    assert savings_fraction(CarbonBreakdown.zero(), a) == 0.0
+
+
+def test_request_carbon_roundtrip():
+    chip = CHIP_DB["a100"]
+    r = request_carbon(10.0, 1000.0, chip, ci_g_per_kwh=261.0)
+    assert r.embodied_g == pytest.approx(embodied_carbon_g(10.0, chip))
+    assert r.operational_g == pytest.approx(operational_carbon_g(1000.0, 261.0))
+
+
+def test_negative_inputs_rejected():
+    with pytest.raises(ValueError):
+        operational_carbon_g(-1.0)
+    with pytest.raises(ValueError):
+        embodied_carbon_g(-1.0, CHIP_DB["t4"])

@@ -1,0 +1,132 @@
+"""Per-architecture smoke tests: reduced same-family configs, one
+forward/train step on CPU, output shapes + no NaNs + prefill/decode
+consistency (required by the assignment for each of the 10 archs)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced_config
+from repro.models import (
+    ExecConfig,
+    forward,
+    init_cache,
+    init_params,
+    prefill,
+    serve_step,
+)
+from repro.models.backbone import _grow_cache, extend_step
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train_step import train_step
+
+EC = ExecConfig(q_block=16)
+B, S = 2, 32
+
+
+def _nodrop(cfg):
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=float(cfg.moe.num_experts)))
+    return cfg
+
+
+def _batch(cfg, rng, s=S):
+    batch = {}
+    if cfg.frontend:
+        batch["embeds"] = (jax.random.normal(rng, (B, s, cfg.d_model)) * 0.1).astype(jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.random.randint(rng, (B, s), 0, cfg.vocab_size)
+    if cfg.attn is not None and cfg.attn.m_rope_sections is not None:
+        batch["positions"] = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (3, B, s))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = _nodrop(get_reduced_config(arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    logits = forward(params, batch, cfg, EC)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_matches_forward(arch):
+    cfg = _nodrop(get_reduced_config(arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    logits = forward(params, batch, cfg, EC)
+    pre = {k: (v[:, :, : S - 1] if k == "positions" else v[:, : S - 1])
+           for k, v in batch.items()}
+    _, cache = prefill(params, pre, cfg, EC)
+    cache = _grow_cache(cache, cfg, S)
+    if cfg.frontend:
+        got, _ = serve_step(params, cache, jnp.zeros((B,), jnp.int32), cfg, EC,
+                            embeds=batch["embeds"][:, S - 1])
+    else:
+        got, _ = serve_step(params, cache, batch["tokens"][:, S - 1], cfg, EC)
+    want = logits[:, S - 1].astype(jnp.float32)
+    err = jnp.max(jnp.abs(got.astype(jnp.float32) - want))
+    scale = jnp.max(jnp.abs(want)) + 1e-6
+    assert float(err / scale) < 0.06, f"{arch}: decode inconsistent ({float(err/scale):.4f})"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_no_nans(arch):
+    cfg = _nodrop(get_reduced_config(arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    batch["labels"] = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)
+    opt = init_opt_state(params)
+    params, opt, metrics = train_step(params, opt, batch, cfg,
+                                      AdamWConfig(lr=1e-3), EC)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    for leaf in jax.tree.leaves(params):
+        assert bool(jnp.isfinite(leaf.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "qwen2-moe-a2.7b"])
+def test_extend_step_matches_serial_decode(arch):
+    """extend_step(K tokens) == K sequential serve_steps (spec-decode verify)."""
+    cfg = _nodrop(get_reduced_config(arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, jax.random.PRNGKey(1), s=8)
+    _, cache = prefill(params, batch, cfg, EC)
+    cache = _grow_cache(cache, cfg, 16)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, 3), 0, cfg.vocab_size)
+    lg_ext, _ = extend_step(params, cache, toks, cfg, EC)
+    c = cache
+    for i in range(3):
+        lg_one, c = serve_step(params, c, toks[:, i], cfg, EC)
+        err = jnp.max(jnp.abs(lg_ext[:, i].astype(jnp.float32) - lg_one.astype(jnp.float32)))
+        scale = jnp.max(jnp.abs(lg_one.astype(jnp.float32))) + 1e-6
+        assert float(err / scale) < 0.06
+
+
+def test_full_configs_match_assignment():
+    """The full (non-reduced) configs carry the exact assigned dimensions."""
+    spec = {
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "glm4-9b": (40, 4096, 32, 2, 13696, 151552),
+        "granite-20b": (52, 6144, 48, 1, 24576, 49152),
+        "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+        "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+    }
+    for arch, (l, d, h, kv, ff, v) in spec.items():
+        cfg = get_config(arch)
+        assert cfg.num_layers == l and cfg.d_model == d and cfg.vocab_size == v, arch
+        assert cfg.attn.num_heads == h and cfg.attn.num_kv_heads == kv, arch
+        expected_ff = cfg.moe.d_ff_expert if cfg.family == "moe" else cfg.d_ff
+        assert expected_ff == ff, arch
+    rw = get_config("rwkv6-7b")
+    assert (rw.num_layers, rw.d_model, rw.d_ff, rw.vocab_size) == (32, 4096, 14336, 65536)
+    assert rw.attn is None  # attention-free
+    za = get_config("zamba2-2.7b")
+    assert za.ssm.state_dim == 64 and za.family == "hybrid"

@@ -1,0 +1,148 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.carbon import CHIP_DB, request_carbon, savings_fraction
+from repro.core.spec_decode import expected_tokens_per_round, verify
+from repro.launch.dryrun import collective_bytes
+from repro.serving.perfmodel import Interconnect, decode_cost, dsd_round_time
+from repro.serving.workload import DATASETS, sample_requests
+
+
+@settings(max_examples=50, deadline=None)
+@given(t=st.floats(0, 1e6), e=st.floats(0, 1e9),
+       ci=st.floats(1.0, 1000.0), chips=st.integers(1, 1024))
+def test_carbon_nonnegative_and_additive(t, e, ci, chips):
+    chip = CHIP_DB["a100"]
+    c = request_carbon(t, e, chip, ci_g_per_kwh=ci, num_chips=chips)
+    assert c.total_g >= 0
+    half = request_carbon(t / 2, e / 2, chip, ci_g_per_kwh=ci, num_chips=chips)
+    assert (half + half).total_g == pytest.approx(c.total_g, rel=1e-9)
+    assert savings_fraction(c, c) == pytest.approx(0.0, abs=1e-12)
+
+
+@settings(max_examples=30, deadline=None)
+@given(alpha=st.floats(0.0, 1.0), k=st.integers(1, 16))
+def test_expected_tokens_bounds(alpha, k):
+    e = expected_tokens_per_round(alpha, k)
+    assert 1.0 - 1e-9 <= e <= k + 1 + 1e-9
+    # monotone in alpha
+    assert expected_tokens_per_round(min(alpha + 0.05, 1.0), k) >= e - 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data(), k=st.integers(1, 4))
+def test_verify_never_emits_more_than_k_plus_1(data, k):
+    v = 8
+    b = 2
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    tlogits = jax.random.normal(keys[0], (b, k + 1, v))
+    dprobs = jax.nn.softmax(jax.random.normal(keys[1], (b, k, v)), axis=-1)
+    toks = jax.random.randint(keys[2], (b, k), 0, v)
+    out, n_em, n_acc = verify(keys[3], tlogits, dprobs, toks, 1.0)
+    n_em = np.asarray(n_em)
+    n_acc = np.asarray(n_acc)
+    assert ((1 <= n_em) & (n_em <= k + 1)).all()
+    assert (n_em == n_acc + 1).all()
+    # accepted prefix must be the draft tokens verbatim
+    out = np.asarray(out)
+    toks = np.asarray(toks)
+    for i in range(b):
+        assert (out[i, : n_acc[i]] == toks[i, : n_acc[i]]).all()
+        assert (out[i, n_acc[i] + 1:] == 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(bw=st.floats(0.5, 100.0), tb=st.floats(1e-4, 0.1), tt=st.floats(1e-4, 0.1),
+       nbytes=st.integers(16, 10_000_000))
+def test_overlap_never_slower(bw, tb, tt, nbytes):
+    """Fig. 7 overlap is a pure win: never slower than sequential."""
+    link = Interconnect(bandwidth_gbps=bw)
+    t_ov = dsd_round_time(tb, tt, link, 16, nbytes, overlap=True)
+    t_no = dsd_round_time(tb, tt, link, 16, nbytes, overlap=False)
+    assert t_ov <= t_no + 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(b1=st.integers(1, 8), ctx=st.integers(64, 4096))
+def test_decode_cost_monotone(b1, ctx):
+    from repro.configs import get_config
+
+    cfg = get_config("llama-7b")
+    chip = CHIP_DB["a100"]
+    c1 = decode_cost(cfg, chip, b1, ctx)
+    c2 = decode_cost(cfg, chip, b1 + 1, ctx)
+    c3 = decode_cost(cfg, chip, b1, ctx + 64)
+    assert c2.time_s >= c1.time_s - 1e-12
+    assert c3.time_s >= c1.time_s - 1e-12
+    assert c1.energy_j > 0 and c1.util <= 1.0 + 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(qps=st.floats(0.2, 20.0), seed=st.integers(0, 1000))
+def test_workload_sampler_rates(qps, seed):
+    ds = DATASETS["sharegpt"]
+    dur = 200.0
+    reqs = sample_requests(ds, qps, dur, seed=seed)
+    assert all(0 <= r.arrival_s < dur for r in reqs)
+    assert all(r.prompt_len >= 1 and r.output_len >= 1 for r in reqs)
+    # poisson count within 5 sigma
+    lam = qps * dur
+    assert abs(len(reqs) - lam) < 5 * np.sqrt(lam) + 5
+
+
+def test_workload_median_tracks_p50():
+    ds = DATASETS["longbench"]
+    reqs = sample_requests(ds, 50.0, 100.0, seed=0)
+    med_in = np.median([r.prompt_len for r in reqs])
+    assert abs(med_in - ds.p50[0]) / ds.p50[0] < 0.15
+
+
+def test_collective_bytes_parser():
+    hlo = """
+  %ag = bf16[2,128]{1,0} all-gather(%x), dimensions={0}
+  %ar = f32[64]{0} all-reduce(%y), to_apply=%add
+  %rs = f32[4,4]{1,0} reduce-scatter(%z), dimensions={0}
+  %cp = u8[1024]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %tup = (f32[8]{0}, f32[8]{0}) all-to-all(%a, %b), dimensions={0}
+"""
+    got = collective_bytes(hlo)
+    assert got["all-gather"]["bytes"] == 2 * 128 * 2
+    assert got["all-reduce"]["bytes"] == 64 * 4 * 2          # ring 2x
+    assert got["reduce-scatter"]["bytes"] == 16 * 4
+    assert got["collective-permute"]["bytes"] == 1024
+    assert got["all-to-all"]["bytes"] == 8 * 4 * 2
+    assert sum(c["count"] for c in got.values()) == 5
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_moe_dispatch_conservation(seed):
+    """With capacity >= tokens, MoE with identical experts equals the
+    plain swiglu with the same weights (routing becomes irrelevant)."""
+    import dataclasses
+
+    from repro.configs import get_reduced_config
+    from repro.models.layers import init_moe, moe_ffn, swiglu
+
+    cfg = get_reduced_config("qwen2-moe-a2.7b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, num_experts=4, top_k=1,
+                                     capacity_factor=4.0, num_shared_experts=0))
+    p = init_moe(jax.random.PRNGKey(seed), cfg)
+    # make all experts identical
+    p = dict(p)
+    for k in ("w_gate", "w_up", "w_down"):
+        p[k] = jnp.broadcast_to(p[k][:1], p[k].shape)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 16, cfg.d_model),
+                          jnp.float32).astype(jnp.bfloat16)
+    out = moe_ffn(p, x, cfg)
+    ref = swiglu({"w_gate": p["w_gate"][0], "w_up": p["w_up"][0],
+                  "w_down": p["w_down"][0]}, x)
+    err = np.max(np.abs(np.asarray(out, np.float32) - np.asarray(ref, np.float32)))
+    scale = np.max(np.abs(np.asarray(ref, np.float32))) + 1e-6
+    assert err / scale < 0.05

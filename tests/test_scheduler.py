@@ -1,0 +1,80 @@
+"""Algorithm 1 (SLO-aware scheduler) + collaborative filtering."""
+import numpy as np
+import pytest
+
+from repro.core.profiler import ProfileDB, ProfileEntry
+from repro.core.scheduler import als_complete, collaborative_filtering, schedule
+
+
+def _db(c, s, configs=None, workloads=None, hide=()):
+    configs = configs or [f"cfg{i}" for i in range(c.shape[0])]
+    workloads = workloads or [f"w{j}" for j in range(c.shape[1])]
+    entries = {}
+    for i, ci in enumerate(configs):
+        for j, wj in enumerate(workloads):
+            if (i, j) in hide:
+                continue
+            entries[(ci, wj)] = ProfileEntry(c[i, j], s[i, j], 0.1, 0.05, 1.0, 100)
+    return ProfileDB(configs, workloads, entries)
+
+
+def test_schedule_picks_min_carbon_among_feasible():
+    c = np.array([[5.0, 5.0], [1.0, 1.0], [3.0, 3.0]])
+    s = np.array([[0.99, 0.99], [0.5, 0.99], [0.95, 0.2]])
+    db = _db(c, s)
+    dec = schedule(db, slo_target=0.9)
+    assert dec["w0"].config == "cfg2"      # cfg1 infeasible (0.5), cfg2 cheaper than cfg0
+    assert dec["w1"].config == "cfg1"      # cheapest feasible
+    assert dec["w0"].feasible and dec["w1"].feasible
+
+
+def test_schedule_fallback_priority_slo():
+    c = np.array([[1.0], [2.0]])
+    s = np.array([[0.4], [0.7]])
+    dec = schedule(_db(c, s), slo_target=0.9, priority="slo")
+    assert dec["w0"].config == "cfg1"      # argmax SLO attainment
+    assert not dec["w0"].feasible
+
+
+def test_schedule_fallback_default():
+    c = np.array([[1.0], [2.0]])
+    s = np.array([[0.4], [0.7]])
+    dec = schedule(_db(c, s), slo_target=0.9, priority="default", default_config="cfg0")
+    assert dec["w0"].config == "cfg0"
+
+
+def test_als_recovers_low_rank():
+    rng = np.random.default_rng(0)
+    m = rng.normal(size=(15, 2)) @ rng.normal(size=(2, 10))
+    mask = rng.random(m.shape) < 0.6
+    filled = als_complete(m, mask, rank=2, iters=120)
+    rel = np.abs(filled[~mask] - m[~mask]).mean() / np.abs(m).mean()
+    assert rel < 0.25
+    # observed entries are passed through exactly
+    assert np.allclose(filled[mask], m[mask])
+
+
+def test_als_full_mask_identity():
+    m = np.arange(12.0).reshape(3, 4)
+    out = als_complete(m, np.ones_like(m, bool))
+    assert np.allclose(out, m)
+
+
+def test_als_needs_observations():
+    with pytest.raises(ValueError):
+        als_complete(np.zeros((2, 2)), np.zeros((2, 2), bool))
+
+
+def test_cf_on_db_with_holes():
+    rng = np.random.default_rng(1)
+    u = rng.normal(size=(6, 2))
+    v = rng.normal(size=(4, 2))
+    c = np.exp(u @ v.T)                     # positive "carbon"
+    s = 1 / (1 + np.exp(-(u @ v.T)))        # (0,1) "slo"
+    db = _db(c, s, hide={(0, 1), (2, 3), (5, 0)})
+    c_full, s_full = collaborative_filtering(db, rank=2)
+    assert np.isfinite(c_full).all() and np.isfinite(s_full).all()
+    assert (s_full >= 0).all() and (s_full <= 1).all()
+    # the matrices() mask has exactly 3 holes
+    _, _, mask = db.matrices()
+    assert (~mask).sum() == 3

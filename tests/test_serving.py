@@ -1,0 +1,176 @@
+"""Serving layer: paged KV pool, engine lifecycles, cluster simulator."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_reduced_config
+from repro.models import init_params
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_cache import OutOfBlocks, PagedKVPool
+from repro.serving.perfmodel import (
+    Interconnect,
+    decode_cost,
+    dsd_round_time,
+    max_concurrency,
+    prefill_cost,
+)
+from repro.serving.simulator import ServingMode, simulate
+from repro.serving.workload import DATASETS, sample_requests
+
+
+# ---------------------------------------------------------------- kv pool
+def test_paged_pool_alloc_free_cycle():
+    cfg = get_reduced_config("yi-6b", num_layers=2)
+    pool = PagedKVPool(cfg, num_blocks=16, block_size=4)
+    a = pool.allocate(1, 10)            # 3 blocks
+    assert len(a.block_table) == 3 and pool.free_blocks == 13
+    pool.extend(1, 3)                   # 10 -> 13 tokens: 4 blocks
+    assert len(pool.seq(1).block_table) == 4
+    pool.free(1)
+    assert pool.free_blocks == 16
+
+
+def test_paged_pool_oom():
+    cfg = get_reduced_config("yi-6b", num_layers=2)
+    pool = PagedKVPool(cfg, num_blocks=4, block_size=4)
+    pool.allocate(1, 12)
+    with pytest.raises(OutOfBlocks):
+        pool.allocate(2, 8)
+    assert pool.can_admit(4) and not pool.can_admit(8)
+
+
+def test_paged_pool_gather_scatter_roundtrip():
+    cfg = get_reduced_config("yi-6b", num_layers=2)
+    pool = PagedKVPool(cfg, num_blocks=32, block_size=4, dtype=jnp.float32)
+    pool.allocate(7, 9)
+    a = cfg.attn
+    k = jax.random.normal(jax.random.PRNGKey(0), (cfg.num_layers, 1, a.num_kv_heads, 9, a.head_dim))
+    v = jax.random.normal(jax.random.PRNGKey(1), k.shape)
+    pool.scatter([7], k, v)
+    k2, v2 = pool.gather([7], 9)
+    assert np.allclose(k2, k) and np.allclose(v2, v)
+
+
+# ---------------------------------------------------------------- perf model
+def test_prefill_compute_bound_decode_memory_bound():
+    """Takeaway 1: prefill is compute-bound, decode memory-bound."""
+    cfg = get_config("llama-7b")
+    from repro.core.carbon import CHIP_DB
+
+    chip = CHIP_DB["a100"]
+    pre = prefill_cost(cfg, chip, batch=1, prompt_len=512)
+    dec = decode_cost(cfg, chip, batch=1, context_len=512)
+    t_f_pre = pre.flops / (chip.peak_flops * 0.55)
+    t_b_pre = pre.bytes_hbm / (chip.hbm_bandwidth * 0.75)
+    assert t_f_pre > t_b_pre, "prefill should be compute-bound"
+    t_f_dec = dec.flops / (chip.peak_flops * 0.55)
+    t_b_dec = dec.bytes_hbm / (chip.hbm_bandwidth * 0.75)
+    assert t_b_dec > t_f_dec, "decode should be memory-bound"
+
+
+def test_energy_per_token_falls_with_batch():
+    """Takeaway 2 / Fig. 3 shape: batching amortizes energy per token."""
+    cfg = get_config("llama-7b")
+    from repro.core.carbon import CHIP_DB
+
+    chip = CHIP_DB["a100"]
+    e1 = decode_cost(cfg, chip, batch=1, context_len=300).energy_j / 1
+    e16 = decode_cost(cfg, chip, batch=16, context_len=300).energy_j / 16
+    assert e16 < e1 / 3
+
+
+def test_max_concurrency_accounts_weights():
+    cfg = get_config("llama-7b")
+    from repro.core.carbon import CHIP_DB
+
+    assert max_concurrency(cfg, CHIP_DB["a100"], 4096) > 0
+    # 7B bf16 weights alone exceed T4's 16 GB
+    assert max_concurrency(cfg, CHIP_DB["t4"], 4096) == 0
+
+
+def test_dsd_overlap_hides_probs_transfer():
+    link = Interconnect(bandwidth_gbps=1.0)
+    ids_b, probs_b = 16, 4 * 32000 * 4
+    t_ov = dsd_round_time(5e-3, 20e-3, link, ids_b, probs_b, overlap=True)
+    t_no = dsd_round_time(5e-3, 20e-3, link, ids_b, probs_b, overlap=False)
+    assert t_ov < t_no
+    # with overlap, the probs transfer (4.1ms @1Gbps) hides under 20ms target
+    assert t_ov == pytest.approx(5e-3 + link.transfer_time(ids_b) + 20e-3)
+
+
+# ---------------------------------------------------------------- engine
+def test_engine_dpd_accounts_kv_transfer():
+    cfg = get_reduced_config("yi-6b", num_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, kind="dpd", old_chip="t4", temperature=0.0)
+    eng.submit(np.arange(10) % cfg.vocab_size, max_new_tokens=5)
+    done = eng.run_until_idle()
+    assert len(done) == 1 and len(done[0].out_tokens) == 5
+    assert eng.link_bytes == 10 * cfg.kv_bytes_per_token()
+    assert eng.use["t4"].busy_s > 0          # decode ran on the old chip
+
+
+def test_engine_measures_acceptance():
+    tcfg = get_reduced_config("yi-6b", num_layers=2)
+    tparams = init_params(jax.random.PRNGKey(0), tcfg)
+    # draft == target => acceptance ~ 1
+    eng = ServingEngine(tcfg, tparams, kind="spec", draft_cfg=tcfg,
+                        draft_params=tparams, temperature=1.0, seed=3)
+    eng.submit(np.arange(8), max_new_tokens=12)
+    eng.run_until_idle()
+    assert eng.acceptance_rate > 0.9
+
+
+# ---------------------------------------------------------------- simulator
+def _reqs(qps=2.0, dur=60.0):
+    ds = DATASETS["sharegpt"]
+    return ds, sample_requests(ds, qps, dur, seed=0, fixed_size=ds.p50)
+
+
+def test_simulator_standalone_meets_slo_low_qps():
+    ds, reqs = _reqs(qps=1.0)
+    res = simulate(ServingMode("standalone", "standalone", "a100"),
+                   get_config("llama-7b"), reqs)
+    assert res.slo_attainment(ds) > 0.95
+    assert res.total_tokens > 0
+
+
+def test_simulator_dsd_saves_carbon_and_meets_slo():
+    """The paper's headline: DSD on new+old chips cuts carbon vs standalone
+    while meeting SLOs (Fig. 9)."""
+    ds, reqs = _reqs(qps=2.0, dur=90.0)
+    t7, d1 = get_config("llama-7b"), get_config("llama-1b")
+    base = simulate(ServingMode("standalone", "standalone", "a100"), t7, reqs)
+    dsd = simulate(ServingMode("dsd", "dsd", "a100", "t4"), t7, reqs, draft_cfg=d1)
+    assert dsd.slo_attainment(ds) >= 0.9
+    saving = 1 - dsd.carbon_per_token() / base.carbon_per_token()
+    assert saving > 0.15, f"expected carbon savings, got {saving:.3f}"
+
+
+def test_simulator_dpd_hits_bandwidth_wall():
+    """Fig. 4: at 16 Gbps and QPS 2 the KV transfers saturate the link and
+    TPOT collapses; at very low QPS DPD is feasible."""
+    ds, reqs = _reqs(qps=2.0, dur=120.0)
+    t7 = get_config("llama-7b")
+    jam = simulate(ServingMode("dpd", "dpd", "a100", "t4"), t7, reqs)
+    assert jam.mean_tpot() > ds.tpot_slo_s          # saturated
+    assert jam.peak_link_gbps() > 10.0              # "over 10 Gbps" (§1)
+    ds2, slow = _reqs(qps=0.2, dur=120.0)
+    ok = simulate(ServingMode("dpd", "dpd", "a100", "t4"), t7, slow)
+    assert ok.mean_tpot() < jam.mean_tpot()
+
+
+def test_simulator_carbon_sweeps_without_resim():
+    ds, reqs = _reqs(qps=1.0)
+    t7 = get_config("llama-7b")
+    res = simulate(ServingMode("standalone", "standalone", "a100"), t7, reqs)
+    low = res.account(ci=17.0).total_g
+    high = res.account(ci=501.0).total_g
+    assert high > low
+    # longer lifetime => less embodied carbon
+    a = res.account(lifetimes={"a100": 14.0}).embodied_g
+    b = res.account(lifetimes={"a100": 7.0}).embodied_g
+    assert a == pytest.approx(b / 2)

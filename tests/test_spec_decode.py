@@ -1,0 +1,121 @@
+"""Speculative decoding: exactness of the rejection sampler and
+end-to-end greedy equivalence through the engine."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core.spec_decode import (
+    SpecConfig,
+    expected_tokens_per_round,
+    spec_decode_round,
+    verify,
+)
+from repro.models import init_params
+from repro.serving.engine import ServingEngine
+
+
+def test_verify_all_accept_when_distributions_equal():
+    """q == p => every draft token accepted (ratio = 1)."""
+    b, k, v = 4, 3, 7
+    rng = jax.random.PRNGKey(0)
+    logits = jax.random.normal(rng, (b, k + 1, v))
+    probs = jax.nn.softmax(logits[:, :k], axis=-1)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, k), 0, v)
+    out, n_em, n_acc = verify(jax.random.PRNGKey(2), logits, probs, toks, 1.0)
+    assert (np.asarray(n_acc) == k).all()
+    assert (np.asarray(n_em) == k + 1).all()
+    assert (np.asarray(out)[:, :k] == np.asarray(toks)).all()
+
+
+def test_verify_rejects_impossible_tokens():
+    """Draft token with q = 0 must always be rejected at its position."""
+    b, k, v = 2, 2, 5
+    tlogits = jnp.full((b, k + 1, v), 0.0).at[:, :, 0].set(-1e9)  # q(token 0) ~ 0
+    dprobs = jnp.full((b, k, v), 1.0 / v)
+    toks = jnp.zeros((b, k), jnp.int32)  # proposes token 0
+    out, n_em, n_acc = verify(jax.random.PRNGKey(0), tlogits, dprobs, toks, 1.0)
+    assert (np.asarray(n_acc) == 0).all()
+    assert (np.asarray(out)[:, 0] != 0).all()  # resampled from residual
+
+
+def test_verify_preserves_target_distribution():
+    """Leviathan et al. Theorem: the emitted token at the first position is
+    distributed exactly as the target q (Monte Carlo, K=1)."""
+    v = 6
+    q_logits = jnp.asarray([[0.5, -0.2, 1.0, 0.1, -1.0, 0.3]])
+    p = jax.nn.softmax(jnp.asarray([[1.2, 0.0, -0.5, 0.4, 0.2, -0.8]]))
+    q = jax.nn.softmax(q_logits)
+    n = 30_000
+
+    def one(key):
+        kd, kv_ = jax.random.split(key)
+        tok = jax.random.categorical(kd, jnp.log(p))          # draft proposal
+        tlogits = jnp.broadcast_to(q_logits, (1, 2, v))
+        out, _, _ = verify(kv_, tlogits, p[None], tok[None], 1.0)
+        return out[0, 0]
+
+    toks = jax.vmap(one)(jax.random.split(jax.random.PRNGKey(0), n))
+    freq = np.bincount(np.asarray(toks), minlength=v) / n
+    tv = 0.5 * np.abs(freq - np.asarray(q)[0]).sum()
+    assert tv < 0.02, f"total variation {tv:.4f}"
+
+
+def test_expected_tokens_formula():
+    assert expected_tokens_per_round(0.0, 4) == 1.0
+    assert expected_tokens_per_round(1.0, 4) == 5.0
+    a, k = 0.8, 4
+    assert expected_tokens_per_round(a, k) == pytest.approx((1 - a ** 5) / (1 - a))
+
+
+def _mk(arch, seed, **kw):
+    cfg = get_reduced_config(arch, **kw)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=float(cfg.moe.num_experts)))
+    return cfg, init_params(jax.random.PRNGKey(seed), cfg)
+
+
+def test_engine_greedy_equivalence_spec_and_dsd():
+    """Greedy speculative decoding must emit token-for-token the target
+    model's greedy continuation, through the full engine (paged cache,
+    per-sequence rollback, batching). fp32 models: serve_step and
+    extend_step reduce in different orders, and bf16 near-ties would flip
+    the argmax between the two (not a correctness difference)."""
+    tcfg, tparams = _mk("yi-6b", 0, num_layers=3, dtype="float32")
+    dcfg, dparams = _mk("yi-6b", 7, num_layers=2, d_model=128, dtype="float32")
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, tcfg.vocab_size, size=rng.integers(5, 16))
+               for _ in range(5)]
+
+    def run(kind):
+        eng = ServingEngine(
+            tcfg, tparams, kind=kind,
+            draft_cfg=dcfg if kind != "standalone" else None,
+            draft_params=dparams if kind != "standalone" else None,
+            temperature=0.0, max_batch=4,
+            old_chip="t4" if kind == "dsd" else None,
+            spec=SpecConfig(num_draft_tokens=3))
+        for i, pr in enumerate(prompts):
+            eng.submit(pr, max_new_tokens=10, arrival_s=0.01 * i)
+        return {r.req_id: r.out_tokens for r in eng.run_until_idle()}
+
+    base = run("standalone")
+    assert run("spec") == base
+    assert run("dsd") == base
+    assert all(len(v) == 10 for v in base.values())
+
+
+def test_spec_round_rejects_recurrent_families():
+    tcfg, tparams = _mk("yi-6b", 0, num_layers=2)
+    rcfg, rparams = _mk("rwkv6-7b", 1)
+    from repro.models.backbone import init_cache
+
+    with pytest.raises(NotImplementedError):
+        spec_decode_round(
+            tcfg and rcfg, rcfg, init_cache(rcfg, 1, 8),
+            rcfg, rcfg, init_cache(rcfg, 1, 8),
+            jnp.zeros((1,), jnp.int32), SpecConfig(2), jax.random.PRNGKey(0))

@@ -1,0 +1,75 @@
+"""VMEM budgeting for the Pallas kernels + profiler/workload coverage."""
+import numpy as np
+import pytest
+
+from repro.core.disagg import standard_catalog
+from repro.core.profiler import WorkloadPoint, profile
+from repro.kernels.vmem import (
+    VMEM_BYTES,
+    autotune_block,
+    decode_attention_vmem,
+    flash_attention_vmem,
+    mamba2_vmem,
+    rwkv6_vmem,
+)
+
+
+def test_default_kernel_blocks_fit_vmem():
+    """The shipped default block sizes must fit the 16 MiB VMEM budget."""
+    flash_attention_vmem(256, 256, 128).assert_fits("flash_attention")
+    decode_attention_vmem(8, 512, 128).assert_fits("decode_attention")
+    rwkv6_vmem(16, 64).assert_fits("rwkv6_wkv")
+    mamba2_vmem(128, 64, 64).assert_fits("mamba2_ssd")
+
+
+def test_oversized_blocks_rejected():
+    est = flash_attention_vmem(4096, 4096, 256)
+    assert not est.fits
+    with pytest.raises(ValueError):
+        est.assert_fits("flash_attention")
+
+
+def test_autotune_block_monotone():
+    fit = lambda b: flash_attention_vmem(b, b, 128)
+    best = autotune_block(fit, lo=128, hi=8192)
+    assert fit(best).fits
+    assert not fit(best * 2).fits or best == 8192
+    assert best >= 256  # the default is supposed to be safe
+
+
+def test_vmem_totals_sane():
+    e = flash_attention_vmem(256, 256, 128)
+    assert 0 < e.total_bytes < VMEM_BYTES
+    assert e.scratch_bytes > 0
+
+
+# ---------------------------------------------------------------- profiler
+def test_profile_full_coverage_fills_matrices():
+    catalog = standard_catalog(old_chips=("t4",), drafts=("llama-1b",))
+    wls = [WorkloadPoint("sharegpt", "p50", q) for q in (1.0, 4.0)]
+    db = profile(catalog, wls, duration_s=30.0, coverage=1.0, seed=0)
+    c, s, mask = db.matrices()
+    assert mask.all()
+    assert np.isfinite(c).all() and (c > 0).all()
+    assert ((0 <= s) & (s <= 1)).all()
+
+
+def test_profile_partial_coverage_leaves_holes():
+    catalog = standard_catalog(old_chips=("t4",), drafts=("llama-1b",))
+    wls = [WorkloadPoint("sharegpt", "p50", q) for q in (1.0, 2.0, 4.0)]
+    db = profile(catalog, wls, duration_s=20.0, coverage=0.5, seed=1)
+    _, _, mask = db.matrices()
+    assert 0 < mask.sum() < mask.size
+
+
+def test_scheduler_end_to_end_on_profile():
+    from repro.core.scheduler import schedule
+
+    catalog = standard_catalog(old_chips=("t4",), drafts=("llama-1b",))
+    wls = [WorkloadPoint("sharegpt", "p50", q) for q in (1.0, 4.0)]
+    db = profile(catalog, wls, duration_s=30.0, coverage=0.8, seed=2)
+    dec = schedule(db, slo_target=0.9)
+    assert set(dec) == {w.key for w in wls}
+    for d in dec.values():
+        assert d.config in db.configs
+        assert np.isfinite(d.expected_carbon_g_per_token)
