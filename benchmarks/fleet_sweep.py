@@ -1,0 +1,114 @@
+"""Fleet sweep: QPS x fleet-size x carbon-trace, allocator vs all-new.
+
+The fleet-level extension of Figs. 9/14: for each (dataset, QPS, grid
+trace), the Mélange-style allocator (core/allocator.py) provisions a
+min-carbon heterogeneous fleet, an all-new baseline allocation is computed
+over new-chip-only configs, and both fleets replay the same percentile-
+mixture request stream through the multi-instance simulator with bucketed
+routing. Carbon integrates over the time-varying trace (CarbonTrace), so
+the same simulated energy timeline prices differently under flat / step /
+diurnal grids.
+
+Headline: at matched (near-perfect) SLO attainment the mixed old+new fleet
+emits less total gCO2 than the all-new fleet for at least one sweep point.
+
+Writes benchmarks/artifacts/fleet_sweep.json with the full rows.
+"""
+import json
+import os
+
+from benchmarks.common import ARTIFACTS, csv
+from repro.core.allocator import (
+    allocate,
+    bucket_workload,
+    build_gpu_info,
+    fleet_assignment,
+)
+from repro.core.carbon import CarbonTrace, GRID_CI
+from repro.core.disagg import standard_catalog
+from repro.serving.fleet import FleetSpec, SizeBuckets, simulate_fleet
+from repro.serving.workload import DATASETS, sample_mixture_requests
+
+DUR_S = 45.0
+QPS = [6.0, 12.0, 20.0]
+SEED = 0
+
+TRACES = {
+    "flat-ciso": CarbonTrace.flat(GRID_CI["ciso"]),
+    # grid swinging between the paper's cleanest and dirtiest regions
+    "step-ncsw-miso": CarbonTrace.step(30.0, GRID_CI["ncsw"], GRID_CI["miso"],
+                                       horizon_s=3600.0),
+    "diurnal-ciso": CarbonTrace.sinusoid(GRID_CI["ciso"], 200.0, 90.0,
+                                         horizon_s=3600.0),
+}
+
+
+def _simulate_allocation(alloc, catalog, reqs, buckets, trace, ds):
+    fleet = FleetSpec.of_counts(catalog, alloc.fleet_counts())
+    fr = simulate_fleet(fleet, reqs, policy="bucketed", buckets=buckets,
+                        assignment=fleet_assignment(alloc, fleet.replicas()),
+                        seed=SEED)
+    g = fr.account(trace)
+    return fleet, fr.slo_attainment(ds), g.total_g
+
+
+def run(quick: bool = False):
+    catalog = standard_catalog()
+    by_name = {c.name: c for c in catalog}
+    qps_list = QPS[1:2] if quick else QPS
+    traces = dict(list(TRACES.items())[:2]) if quick else TRACES
+    rows = []
+    for dataset in ("sharegpt",):
+        ds = DATASETS[dataset]
+        buckets = SizeBuckets.from_dataset(ds)
+        for qps in qps_list:
+            reqs = sample_mixture_requests(ds, qps, DUR_S, seed=SEED)
+            dist = bucket_workload(reqs, buckets)
+            for tname, trace in traces.items():
+                info = build_gpu_info(catalog, ds, buckets, ci=trace)
+                mixed = allocate(dist, qps, info)
+                all_new = allocate(dist, qps, {
+                    k: v for k, v in info.items() if not by_name[k].mode.old_chip})
+                m_fleet, m_slo, m_g = _simulate_allocation(
+                    mixed, catalog, reqs, buckets, trace, ds)
+                n_fleet, n_slo, n_g = _simulate_allocation(
+                    all_new, catalog, reqs, buckets, trace, ds)
+                rows.append({
+                    "dataset": dataset, "qps": qps, "trace": tname,
+                    "mixed_fleet": m_fleet.describe().replace(",", ";"),
+                    "allnew_fleet": n_fleet.describe().replace(",", ";"),
+                    "mixed_instances": m_fleet.total_count,
+                    "allnew_instances": n_fleet.total_count,
+                    "mixed_old_chips": sum(
+                        n for c, n in m_fleet.chips().items()
+                        if c in ("t4", "v100", "tpu_v3", "tpu_v2")),
+                    "mixed_slo_att": m_slo, "allnew_slo_att": n_slo,
+                    "mixed_total_g": m_g, "allnew_total_g": n_g,
+                    "savings_pct": 100.0 * (1.0 - m_g / n_g) if n_g > 0 else 0.0,
+                    "alloc_mixed_g_per_h": mixed.carbon_g_per_hour,
+                    "alloc_allnew_g_per_h": all_new.carbon_g_per_hour,
+                })
+    csv(rows)
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(os.path.join(ARTIFACTS, "fleet_sweep.json"), "w") as f:
+        json.dump({"duration_s": DUR_S, "seed": SEED, "rows": rows}, f, indent=1)
+    wins = [r for r in rows
+            if r["mixed_old_chips"] > 0 and r["savings_pct"] > 0
+            and r["mixed_slo_att"] >= r["allnew_slo_att"] - 1e-9]
+    best = max(wins, key=lambda r: r["savings_pct"]) if wins else None
+    if best:
+        print(f"# mixed old+new beats all-new at {len(wins)}/{len(rows)} points; "
+              f"best {best['savings_pct']:.1f}% at qps={best['qps']:g} "
+              f"trace={best['trace']}")
+    else:
+        print("# WARNING: no sweep point had a mixed fleet winning")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="one QPS point, two traces")
+    run(quick=ap.parse_args().quick)

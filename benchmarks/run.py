@@ -29,6 +29,7 @@ def main() -> None:
         fig13_bandwidth_sweep,
         fig14_carbon_intensity,
         fig15_lifetime,
+        fleet_sweep,
         roofline,
     )
 
@@ -55,6 +56,9 @@ def main() -> None:
          lambda r: f"ncsw_savings_pct={max(x['savings_pct'] for x in r if x['region'] == 'ncsw'):.1f}"),
         ("fig15_lifetime", fig15_lifetime.run,
          lambda r: f"savings_range_pct={min(x['savings_pct'] for x in r):.1f}-{max(x['savings_pct'] for x in r):.1f}"),
+        ("fleet_sweep", fleet_sweep.run,
+         lambda r: "mixed_best_savings_pct="
+                   f"{max((x['savings_pct'] for x in r if x['mixed_old_chips'] > 0 and x['mixed_slo_att'] >= x['allnew_slo_att'] - 1e-9), default=float('nan')):.1f}"),
         ("roofline", roofline.run,
          lambda r: f"cells_ok={sum(1 for x in r if x['status'] == 'ok')}/"
                    f"{sum(1 for x in r if x['status'] != 'skip')}"),

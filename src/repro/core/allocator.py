@@ -1,0 +1,495 @@
+"""Mélange-style min-carbon fleet allocator (provisioning-time decisions).
+
+GreenLLM's scheduler answers "which configuration serves this workload";
+this module answers the fleet question above it: "how many instances of
+each (chip, mode) do we provision, and which request sizes go where".
+It follows Mélange's formulation (litone01/melange-release) with carbon as
+the objective instead of dollars, and EcoServe-style provisioning-time
+accounting: a provisioned instance pays its embodied amortization + idle
+power for the whole window whether or not it is busy, so the optimizer is
+rewarded for packing load onto few, well-utilized, low-carbon instances.
+
+Inputs mirror Mélange's contract:
+
+  workload_distribution  - 2D matrix over (prompt-bucket, output-bucket),
+                           cell = fraction of traffic in that size range
+                           (rows prompt, cols output; sums to 1)
+  gpu_info               - per instance type: max sustained QPS per bucket
+                           under the dataset's TTFT/TPOT SLOs (`tputs`,
+                           0 = SLO-infeasible), fixed carbon g/hour when
+                           provisioned, dynamic carbon g/request per bucket
+  total_request_rate     - overall arrival rate (QPS)
+
+`build_gpu_info` derives `gpu_info` analytically from the same perfmodel
+rooflines the cluster simulator charges, so allocations validated here
+hold up when replayed through `serving.fleet.simulate_fleet`. The solver
+is greedy first-fit-decreasing over load slices plus a close/swap local
+search - no external ILP dependency, deterministic for fixed inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+from repro.core.carbon import (
+    CHIP_DB,
+    DEFAULT_CI,
+    J_PER_KWH,
+    CarbonTrace,
+    resolve_ci,
+)
+from repro.core.disagg import DisaggConfig
+from repro.core.spec_decode import expected_tokens_per_round
+from repro.serving.perfmodel import (
+    decode_cost,
+    dsd_round_time,
+    max_concurrency,
+    prefill_cost,
+)
+from repro.serving.workload import Dataset, Request
+from repro.serving.fleet import SizeBuckets
+
+Matrix = tuple[tuple[float, ...], ...]
+
+
+# ---------------------------------------------------------------------------
+# Workload bucketing
+# ---------------------------------------------------------------------------
+def bucket_workload(requests: Sequence[Request],
+                    buckets: SizeBuckets) -> Matrix:
+    """Empirical `workload_distribution`: per-bucket traffic fractions."""
+    np_, no = buckets.shape
+    counts = [[0] * no for _ in range(np_)]
+    for r in requests:
+        i, j = buckets.index(r.prompt_len, r.output_len)
+        counts[i][j] += 1
+    n = max(len(requests), 1)
+    return tuple(tuple(c / n for c in row) for row in counts)
+
+
+# ---------------------------------------------------------------------------
+# Per-instance-type profile (the gpu_info entry)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class InstanceProfile:
+    """One Mélange `gpu_info` row, in carbon units."""
+
+    name: str
+    tputs: Matrix                    # max sustained QPS per bucket (0 = infeasible)
+    carbon_fixed_g_per_hour: float   # embodied amortization + idle power, provisioned
+    carbon_per_request_g: Matrix     # dynamic (busy energy) carbon per request
+
+    def feasible_anywhere(self) -> bool:
+        return any(t > 0 for row in self.tputs for t in row)
+
+
+def _engine_profile(cfg: DisaggConfig, pl: int, ol: int,
+                    ds: Dataset, utilization: float):
+    """(qps_max, energy_per_request_j, busy_s_per_request_by_chip) of one
+    instance on fixed-size load, or (0, inf, {}) when the bucket cannot
+    meet the dataset's SLOs.
+
+    Mirrors the simulator's serialized engine: prefills preempt decode, so
+    a request's service demand is its prefill time plus its share of the
+    decode rounds; `utilization` head-room absorbs Poisson queueing (tail
+    TTFT under bursts - do not run interactive engines near 1.0).
+
+    Energy is evaluated at the *operating* batch, not the largest
+    SLO-feasible batch: a Little's-law fixed point of `active sequences =
+    arrival rate x decode residence` at the utilization target. At low
+    target rates engines run small batches where weight reads do not
+    amortize - exactly the regime where GreenLLM's old-chip speculative
+    modes save energy - and allocating off max-batch numbers would hide
+    that."""
+    mode = cfg.mode
+    new_chip = CHIP_DB[mode.new_chip]
+    old_chip = CHIP_DB[mode.old_chip] if mode.old_chip else None
+    ctx = pl + ol
+    decode_chip = old_chip if mode.kind == "dpd" else new_chip
+    cap = min(mode.max_batch, max_concurrency(cfg.target, decode_chip, ctx))
+    if mode.kind == "spec":
+        cap = min(cap, max_concurrency(cfg.draft, new_chip, ctx))
+    if cap < 1:
+        return 0.0, math.inf, {}
+
+    pre = prefill_cost(cfg.target, new_chip, 1, pl)
+    ttft = pre.time_s
+    pre_energy = pre.energy_j
+    pre_busy = {new_chip.name: pre.time_s}
+    if mode.kind == "spec":
+        d = prefill_cost(cfg.draft, new_chip, 1, pl)
+        ttft += d.time_s
+        pre_energy += d.energy_j
+        pre_busy[new_chip.name] += d.time_s
+    elif mode.kind == "dsd":
+        d = prefill_cost(cfg.draft, old_chip, 1, pl)
+        ttft = max(ttft, d.time_s)
+        pre_energy += d.energy_j
+        pre_busy[old_chip.name] = d.time_s
+    if ttft > ds.ttft_slo_s:
+        return 0.0, math.inf, {}
+
+    def round_cost(b: int):
+        """(round s, tokens/req/round, round J, busy s by chip) at batch b."""
+        if mode.kind in ("standalone", "dpd"):
+            c = decode_cost(cfg.target, decode_chip, b, ctx)
+            return c.time_s, 1.0, c.energy_j, {decode_chip.name: c.time_s}
+        k = mode.spec_k
+        draft_chip = new_chip if mode.kind == "spec" else old_chip
+        c_d = decode_cost(cfg.draft, draft_chip, b, ctx)
+        t_d, e_d = c_d.time_s * (k + 1), c_d.energy_j * (k + 1)
+        c_t = decode_cost(cfg.target, new_chip, b, ctx, new_tokens=k + 1)
+        busy = {draft_chip.name: t_d}
+        busy[new_chip.name] = busy.get(new_chip.name, 0.0) + c_t.time_s
+        if mode.kind == "spec":
+            t_round = t_d + c_t.time_s
+        else:
+            ids_b = b * k * 4
+            probs_b = b * k * cfg.draft.vocab_size * 2
+            t_round = dsd_round_time(t_d, c_t.time_s, mode.interconnect,
+                                     ids_b, probs_b, overlap=mode.overlap_comm)
+        return t_round, expected_tokens_per_round(mode.acceptance, k), \
+            e_d + c_t.energy_j, busy
+
+    def feasible_at(b: int) -> bool:
+        t_round, e_tok, _, _ = round_cost(b)
+        return t_round / e_tok <= ds.tpot_slo_s
+
+    if not feasible_at(1):
+        return 0.0, math.inf, {}
+    b_slo = max(b for b in sorted({1, 2, 4, 8, 16, 32, cap})
+                if b <= cap and feasible_at(b))
+
+    def rounds_per_req_at(b: int) -> float:
+        _, e_tok, _, _ = round_cost(b)
+        return max(ol - 1, 0) / e_tok
+
+    def lambda_max_at(b: int) -> float:
+        """Arrival rate a continuous-batching engine sustains at batch b:
+        Little's law with the prefill time share carved out -
+        b = lam * rounds * t_round / (1 - lam * p)  =>
+        lam = b / (rounds * t_round + b * p)."""
+        t_round, _, _, _ = round_cost(b)
+        denom = rounds_per_req_at(b) * t_round + b * ttft
+        if mode.kind == "dpd":
+            # pools run concurrently; the binding resource is the slowest
+            # of prefill pool, decode pool, and the KV link
+            kv_bytes = pl * cfg.target.kv_bytes_per_token() + cfg.target.state_bytes()
+            return min(1.0 / max(ttft, 1e-12),
+                       b / max(rounds_per_req_at(b) * t_round, 1e-12),
+                       1.0 / max(mode.interconnect.transfer_time(kv_bytes), 1e-12))
+        return b / max(denom, 1e-12)
+
+    qps = utilization * lambda_max_at(b_slo)
+
+    # operating batch at that rate: b = qps * rounds * t_round(b) / (1 - qps*p)
+    b_op = b_slo
+    phi = min(qps * ttft, 0.9) if mode.kind != "dpd" else 0.0
+    for _ in range(8):
+        t_round, _, _, _ = round_cost(b_op)
+        b_next = min(max(int(round(
+            qps * rounds_per_req_at(b_op) * t_round / (1.0 - phi))), 1), b_slo)
+        if b_next == b_op:
+            break
+        b_op = b_next
+
+    t_round, e_tok, en_round, busy_round = round_cost(b_op)
+    rounds_per_req = max(ol - 1, 0) / e_tok
+    energy = pre_energy + rounds_per_req * en_round / b_op
+    busy = dict(pre_busy)
+    for chip_name, t in busy_round.items():
+        busy[chip_name] = busy.get(chip_name, 0.0) + rounds_per_req * t / b_op
+    return qps, energy, busy
+
+
+def provisioned_carbon_g_per_hour(mode_chips: Sequence[str], ci: float,
+                                  include_idle: bool = False) -> float:
+    """Fixed hourly carbon of one provisioned instance.
+
+    Default (EcoServe-style, matches the paper's Eq. 1 applied to the
+    reservation window): chips reserved for this service amortize their
+    embodied carbon over the reservation whether busy or not. With
+    `include_idle`, reserved chips also draw idle power for the whole
+    window - the strict beyond-paper accounting of `fig9 --strict`."""
+    total = 0.0
+    for name in mode_chips:
+        chip = CHIP_DB[name]
+        total += chip.embodied_rate_g_per_s() * 3600.0
+        if include_idle:
+            total += chip.idle_power_w * 3600.0 / J_PER_KWH * ci
+    return total
+
+
+def build_gpu_info(
+    catalog: Sequence[DisaggConfig],
+    dataset: Dataset,
+    buckets: SizeBuckets,
+    ci: "float | CarbonTrace" = DEFAULT_CI,
+    utilization: float = 0.6,
+    include_idle: bool = False,
+    window_s: float = 3600.0,
+) -> dict[str, InstanceProfile]:
+    """Profile every catalog config over the bucket grid (Mélange gpu_info).
+
+    `utilization` is the per-instance load target: tputs are scaled so the
+    solver leaves head-room for Poisson bursts and tail TTFT, and dynamic
+    energy is evaluated at the operating batch that target implies. With a
+    `CarbonTrace`, the window-average intensity prices the energy - the
+    provisioning decision sees the same grid the fleet will run under."""
+    if not 0 < utilization <= 1:
+        raise ValueError(f"utilization must be in (0, 1]: {utilization}")
+    ci_val = resolve_ci(ci, 0.0, window_s)
+    out: dict[str, InstanceProfile] = {}
+    for cfg in catalog:
+        np_, no = buckets.shape
+        tputs, dyn = [], []
+        for i in range(np_):
+            trow, drow = [], []
+            for j in range(no):
+                pl, ol = buckets.rep_size(i, j)
+                qps, energy_j, _busy = _engine_profile(cfg, pl, ol, dataset,
+                                                       utilization)
+                trow.append(qps)
+                drow.append(0.0 if math.isinf(energy_j)
+                            else energy_j / J_PER_KWH * ci_val)
+            tputs.append(tuple(trow))
+            dyn.append(tuple(drow))
+        out[cfg.name] = InstanceProfile(
+            name=cfg.name,
+            tputs=tuple(tputs),
+            carbon_fixed_g_per_hour=provisioned_carbon_g_per_hour(
+                cfg.mode.chips(), ci_val, include_idle=include_idle),
+            carbon_per_request_g=tuple(dyn),
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The allocation problem
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Allocation:
+    """Solver output: instance counts + size-aware routing fractions."""
+
+    counts: dict[str, int]
+    # bucket (i, j) -> {type name: requests/s routed there}
+    assignment: dict[tuple[int, int], dict[str, float]]
+    carbon_g_per_hour: float
+    feasible: bool                  # False => some load had no SLO-feasible type
+    utilization: dict[str, float]   # mean busy fraction per provisioned type
+
+    def total_instances(self) -> int:
+        return sum(self.counts.values())
+
+    def fleet_counts(self) -> dict[str, int]:
+        return {k: v for k, v in self.counts.items() if v > 0}
+
+
+@dataclasses.dataclass
+class _Slice:
+    bucket: tuple[int, int]
+    rate: float
+
+
+@dataclasses.dataclass
+class _Instance:
+    type_name: str
+    load: float = 0.0               # fraction of capacity consumed (<= 1)
+    rates: dict[tuple[int, int], float] = dataclasses.field(default_factory=dict)
+
+    def fits(self, frac: float) -> bool:
+        return self.load + frac <= 1.0 + 1e-9
+
+    def add(self, bucket: tuple[int, int], rate: float, frac: float) -> None:
+        self.load += frac
+        self.rates[bucket] = self.rates.get(bucket, 0.0) + rate
+
+
+def _capacity_frac(info: InstanceProfile, bucket: tuple[int, int],
+                   rate: float) -> float:
+    t = info.tputs[bucket[0]][bucket[1]]
+    return math.inf if t <= 0 else rate / t
+
+
+def _dynamic_g_per_hour(info: InstanceProfile, bucket: tuple[int, int],
+                        rate: float) -> float:
+    return rate * 3600.0 * info.carbon_per_request_g[bucket[0]][bucket[1]]
+
+
+def allocate(
+    workload_distribution: Matrix,
+    total_request_rate: float,
+    gpu_info: dict[str, InstanceProfile],
+    slice_factor: int = 4,
+    local_search_rounds: int = 3,
+) -> Allocation:
+    """Choose instance counts + routing minimizing provisioned carbon/hour.
+
+    Greedy first-fit-decreasing over `slice_factor` slices per bucket, then
+    a local search that (a) tries to close each instance by repacking its
+    load elsewhere and (b) tries to retype each instance. Deterministic:
+    ties break on (carbon, name)."""
+    if total_request_rate < 0:
+        raise ValueError("negative request rate")
+    if not gpu_info:
+        raise ValueError("gpu_info is empty")
+    mass = sum(c for row in workload_distribution for c in row)
+    if mass <= 0:
+        return Allocation({}, {}, 0.0, True, {})
+    names = sorted(gpu_info)
+
+    # --- slices, hardest (fewest feasible types, biggest) first ----------
+    slices: list[_Slice] = []
+    for i, row in enumerate(workload_distribution):
+        for j, frac in enumerate(row):
+            rate = frac / mass * total_request_rate
+            if rate <= 0:
+                continue
+            per = rate / slice_factor
+            slices.extend(_Slice((i, j), per) for _ in range(slice_factor))
+    feasible = True
+
+    def n_feasible(s: _Slice) -> int:
+        return sum(gpu_info[n].tputs[s.bucket[0]][s.bucket[1]] > 0 for n in names)
+
+    slices.sort(key=lambda s: (n_feasible(s),
+                               -max(_capacity_frac(gpu_info[n], s.bucket, s.rate)
+                                    if n_feasible(s) else 0.0
+                                    for n in names
+                                    if gpu_info[n].tputs[s.bucket[0]][s.bucket[1]] > 0)
+                               if n_feasible(s) else 0.0,
+                               s.bucket))
+
+    instances: list[_Instance] = []
+
+    def place(s: _Slice, pool: list[_Instance]) -> bool:
+        """Best-fit into an open instance; open the cheapest new one else."""
+        best_open = None
+        for inst in pool:
+            frac = _capacity_frac(gpu_info[inst.type_name], s.bucket, s.rate)
+            if math.isinf(frac) or not inst.fits(frac):
+                continue
+            # best fit: leave the least slack (packs tightest)
+            key = (-(inst.load + frac), inst.type_name)
+            if best_open is None or key < best_open[0]:
+                best_open = (key, inst, frac)
+        if best_open is not None:
+            _, inst, frac = best_open
+            inst.add(s.bucket, s.rate, frac)
+            return True
+        candidates = []
+        for n in names:
+            frac = _capacity_frac(gpu_info[n], s.bucket, s.rate)
+            if math.isinf(frac) or frac > 1.0 + 1e-9:
+                continue
+            # amortize the new instance's fixed cost over the capacity this
+            # slice consumes - assumes later slices fill the rest, which the
+            # close/retype local search corrects when they do not
+            cost = (frac * gpu_info[n].carbon_fixed_g_per_hour
+                    + _dynamic_g_per_hour(gpu_info[n], s.bucket, s.rate))
+            candidates.append((cost, n, frac))
+        if not candidates:
+            return False
+        cost, n, frac = min(candidates)
+        inst = _Instance(n)
+        inst.add(s.bucket, s.rate, frac)
+        pool.append(inst)
+        return True
+
+    for s in slices:
+        if not place(s, instances):
+            feasible = False
+            # best-effort: dump onto the max-throughput type regardless of SLO
+            fallback = max(names, key=lambda n: max(
+                t for row in gpu_info[n].tputs for t in row))
+            inst = _Instance(fallback)
+            frac = _capacity_frac(gpu_info[fallback], s.bucket, s.rate)
+            inst.add(s.bucket, s.rate, min(frac, 1.0) if math.isfinite(frac) else 1.0)
+            instances.append(inst)
+
+    # --- local search ----------------------------------------------------
+    def repack(load: dict[tuple[int, int], float],
+               pool: list[_Instance]) -> bool:
+        """Try to absorb `load` into `pool` (mutates on success)."""
+        staged = [(inst, dict(inst.rates), inst.load) for inst in pool]
+        for bucket, rate in sorted(load.items(), key=lambda kv: -kv[1]):
+            remaining = rate
+            for inst in pool:
+                frac_unit = _capacity_frac(gpu_info[inst.type_name], bucket, 1.0)
+                if math.isinf(frac_unit):
+                    continue
+                room_rate = max((1.0 - inst.load) / frac_unit, 0.0)
+                take = min(remaining, room_rate)
+                if take > 1e-12:
+                    inst.add(bucket, take, take * frac_unit)
+                    remaining -= take
+                if remaining <= 1e-12:
+                    break
+            if remaining > 1e-12:
+                for inst, rates, ld in staged:   # roll back
+                    inst.rates, inst.load = rates, ld
+                return False
+        return True
+
+    for _ in range(local_search_rounds):
+        improved = False
+        # (a) close instances, emptiest first
+        for inst in sorted(instances, key=lambda x: x.load):
+            others = [x for x in instances if x is not inst]
+            if others and repack(inst.rates, others):
+                instances = others
+                improved = True
+        # (b) retype: move an instance's whole load to a cheaper type
+        for inst in instances:
+            cur = gpu_info[inst.type_name]
+            cur_cost = cur.carbon_fixed_g_per_hour + sum(
+                _dynamic_g_per_hour(cur, b, r) for b, r in inst.rates.items())
+            for n in names:
+                if n == inst.type_name:
+                    continue
+                cand = gpu_info[n]
+                fracs = [_capacity_frac(cand, b, r) for b, r in inst.rates.items()]
+                if any(math.isinf(f) for f in fracs) or sum(fracs) > 1.0 + 1e-9:
+                    continue
+                cost = cand.carbon_fixed_g_per_hour + sum(
+                    _dynamic_g_per_hour(cand, b, r) for b, r in inst.rates.items())
+                if cost < cur_cost - 1e-9:
+                    inst.type_name, inst.load = n, sum(fracs)
+                    cur, cur_cost = cand, cost
+                    improved = True
+        if not improved:
+            break
+
+    # --- summarize -------------------------------------------------------
+    counts: dict[str, int] = {}
+    assignment: dict[tuple[int, int], dict[str, float]] = {}
+    load_by_type: dict[str, float] = {}
+    carbon = 0.0
+    for inst in instances:
+        counts[inst.type_name] = counts.get(inst.type_name, 0) + 1
+        load_by_type[inst.type_name] = load_by_type.get(inst.type_name, 0.0) + inst.load
+        info = gpu_info[inst.type_name]
+        carbon += info.carbon_fixed_g_per_hour
+        for bucket, rate in inst.rates.items():
+            carbon += _dynamic_g_per_hour(info, bucket, rate)
+            assignment.setdefault(bucket, {})
+            assignment[bucket][inst.type_name] = \
+                assignment[bucket].get(inst.type_name, 0.0) + rate
+    utilization = {n: load_by_type.get(n, 0.0) / counts[n] for n in counts}
+    return Allocation(counts, assignment, carbon, feasible, utilization)
+
+
+def fleet_assignment(alloc: Allocation, fleet_replicas: Sequence[DisaggConfig],
+                     ) -> dict[tuple[int, int], tuple[int, ...]]:
+    """Translate routing fractions into `route_bucketed` replica pools."""
+    by_type: dict[str, list[int]] = {}
+    for idx, cfg in enumerate(fleet_replicas):
+        by_type.setdefault(cfg.name, []).append(idx)
+    out: dict[tuple[int, int], tuple[int, ...]] = {}
+    for bucket, shares in alloc.assignment.items():
+        pool = [i for n, r in sorted(shares.items()) if r > 0
+                for i in by_type.get(n, [])]
+        if pool:
+            out[bucket] = tuple(pool)
+    return out

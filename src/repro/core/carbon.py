@@ -160,3 +160,133 @@ def savings_fraction(baseline: CarbonBreakdown, candidate: CarbonBreakdown) -> f
     if baseline.total_g <= 0:
         return 0.0
     return 1.0 - candidate.total_g / baseline.total_g
+
+
+# ---------------------------------------------------------------------------
+# Time-varying grid carbon intensity.
+#
+# The paper (§7.5) evaluates at three *static* regional intensities; real
+# grids swing by 2-3x over a day (solar duck curve). `CarbonTrace` is a
+# piecewise-constant CI signal that `SimResult.account()` integrates the
+# simulated energy timeline against, so provisioning decisions (the fleet
+# allocator) and sweeps (benchmarks/fleet_sweep.py) can be carbon-aware in
+# time, not just in region. A flat trace reproduces scalar-CI accounting
+# exactly (tests/test_fleet.py pins this).
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CarbonTrace:
+    """Piecewise-constant gCO2eq/kWh over time.
+
+    `times_s[i]` is the start of segment i; segment i holds `ci[i]` until
+    `times_s[i+1]` (the last value extends to +inf, and `ci[0]` extends
+    back to -inf so pre-window energy is still priced). Times must be
+    strictly increasing and start at 0.
+    """
+
+    times_s: tuple[float, ...]
+    ci: tuple[float, ...]
+
+    def __post_init__(self):
+        if len(self.times_s) != len(self.ci) or not self.times_s:
+            raise ValueError("times_s and ci must be same non-zero length")
+        if any(b <= a for a, b in zip(self.times_s, self.times_s[1:])):
+            raise ValueError("times_s must be strictly increasing")
+        if any(v < 0 for v in self.ci):
+            raise ValueError("carbon intensity must be non-negative")
+
+    # ---------------------------------------------------------- constructors
+    @staticmethod
+    def flat(ci_g_per_kwh: float = DEFAULT_CI) -> "CarbonTrace":
+        return CarbonTrace((0.0,), (float(ci_g_per_kwh),))
+
+    @staticmethod
+    def step(period_s: float, low: float, high: float,
+             start_low: bool = True, horizon_s: float | None = None) -> "CarbonTrace":
+        """Square wave alternating `low`/`high` every `period_s` seconds."""
+        if period_s <= 0:
+            raise ValueError("period_s must be positive")
+        horizon = horizon_s if horizon_s is not None else 24 * period_s
+        times, vals = [], []
+        t, lo = 0.0, start_low
+        while t < horizon:
+            times.append(t)
+            vals.append(low if lo else high)
+            t += period_s
+            lo = not lo
+        return CarbonTrace(tuple(times), tuple(vals))
+
+    @staticmethod
+    def sinusoid(mean: float, amplitude: float, period_s: float,
+                 steps_per_period: int = 24, horizon_s: float | None = None,
+                 phase: float = 0.0) -> "CarbonTrace":
+        """Diurnal-style swing, sampled into `steps_per_period` flat steps."""
+        import math as _math
+
+        if amplitude > mean:
+            raise ValueError("amplitude > mean would give negative CI")
+        horizon = horizon_s if horizon_s is not None else period_s
+        dt = period_s / steps_per_period
+        times, vals = [], []
+        t = 0.0
+        while t < horizon:
+            mid = t + dt / 2
+            times.append(t)
+            vals.append(mean + amplitude * _math.sin(2 * _math.pi * mid / period_s + phase))
+            t += dt
+        return CarbonTrace(tuple(times), tuple(vals))
+
+    @staticmethod
+    def from_csv(path: str) -> "CarbonTrace":
+        """Load `t_seconds,ci_g_per_kwh` rows (header optional, '#' comments)."""
+        times, vals = [], []
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line or line.startswith("#"):
+                    continue
+                a, b = line.split(",")[:2]
+                try:
+                    times.append(float(a))
+                except ValueError:
+                    continue              # header row
+                vals.append(float(b))
+        return CarbonTrace(tuple(times), tuple(vals))
+
+    # ---------------------------------------------------------- evaluation
+    def ci_at(self, t_s: float) -> float:
+        import bisect
+
+        i = bisect.bisect_right(self.times_s, t_s) - 1
+        return self.ci[max(i, 0)]
+
+    def mean_ci(self, t0_s: float, t1_s: float) -> float:
+        """Time-average CI over [t0, t1] (== ci_at(t0) for zero-width)."""
+        import bisect
+
+        if t1_s < t0_s:
+            raise ValueError(f"inverted interval [{t0_s}, {t1_s}]")
+        if t1_s == t0_s:
+            return self.ci_at(t0_s)
+        # only segments overlapping [t0, t1] contribute; account() calls
+        # this once per charged step, so bound the scan to that window
+        first = max(bisect.bisect_right(self.times_s, t0_s) - 1, 0)
+        last = max(bisect.bisect_right(self.times_s, t1_s) - 1, 0)
+        total = 0.0
+        for i in range(first, last + 1):
+            start = float("-inf") if i == 0 else self.times_s[i]
+            end = self.times_s[i + 1] if i + 1 < len(self.times_s) else float("inf")
+            lo, hi = max(start, t0_s), min(end, t1_s)
+            if hi > lo:
+                total += self.ci[i] * (hi - lo)
+        return total / (t1_s - t0_s)
+
+    def operational_g(self, energy_j: float, t0_s: float, t1_s: float) -> float:
+        """Eq. 2 with time-varying CI: energy spread uniformly over [t0, t1]."""
+        return operational_carbon_g(energy_j, self.mean_ci(t0_s, t1_s))
+
+
+def resolve_ci(ci: "float | CarbonTrace", t0_s: float, t1_s: float) -> float:
+    """Scalar CI for energy spent uniformly over [t0, t1]."""
+    if isinstance(ci, CarbonTrace):
+        return ci.mean_ci(t0_s, t1_s)
+    return float(ci)

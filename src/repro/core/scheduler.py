@@ -67,6 +67,7 @@ class ScheduleDecision:
     expected_carbon_g_per_token: float
     expected_slo_attainment: float
     feasible: bool           # False => fallback path was taken
+    replicas: int = 0        # provisioned instances of `config` (fleet path)
 
 
 def collaborative_filtering(db: ProfileDB, rank: int = 3, seed: int = 0):
@@ -83,18 +84,40 @@ def schedule(
     default_config: Optional[str] = None,
     rank: int = 3,
     seed: int = 0,
+    allocation=None,                  # core.allocator.Allocation (fleet path)
 ) -> dict[str, ScheduleDecision]:
-    """Algorithm 1: per workload, argmin-carbon among SLO-feasible configs."""
+    """Algorithm 1: per workload, argmin-carbon among SLO-feasible configs.
+
+    Fleet-aware path: with `allocation` (the Mélange-style allocator's
+    output, core/allocator.py), the candidate set narrows to the configs
+    the fleet actually provisions (count > 0), so per-workload decisions
+    land on instances that exist; decisions carry the provisioned replica
+    count. Configs absent from the profile matrices are ignored; if the
+    allocation provisions none of the profiled configs, this falls back to
+    the unconstrained Algorithm 1 over all configs."""
     c, s = collaborative_filtering(db, rank=rank, seed=seed)
     default_config = default_config or db.configs[0]
+    counts = dict(getattr(allocation, "counts", None) or {})
+    candidates = [i for i, n in enumerate(db.configs) if counts.get(n, 0) > 0] \
+        if counts else list(range(len(db.configs)))
+    if not candidates:
+        candidates = list(range(len(db.configs)))
+    cand = np.asarray(candidates)
     out: dict[str, ScheduleDecision] = {}
     for j, w in enumerate(db.workloads):
-        feasible = np.where(s[:, j] >= slo_target)[0]
+        feasible = cand[s[cand, j] >= slo_target]
         if feasible.size:
             i = int(feasible[np.argmin(c[feasible, j])])
             ok = True
         else:                         # FallbackStrategy(priority)
-            i = int(np.argmax(s[:, j])) if priority == "slo" else db.configs.index(default_config)
+            default_i = db.configs.index(default_config)
+            if priority == "slo" or default_i not in candidates:
+                # 'default' must still land on a provisioned instance; an
+                # unprovisioned default falls through to best-SLO-in-fleet
+                i = int(cand[np.argmax(s[cand, j])])
+            else:
+                i = default_i
             ok = False
-        out[w] = ScheduleDecision(w, db.configs[i], float(c[i, j]), float(s[i, j]), ok)
+        out[w] = ScheduleDecision(w, db.configs[i], float(c[i, j]), float(s[i, j]),
+                                  ok, replicas=counts.get(db.configs[i], 0))
     return out

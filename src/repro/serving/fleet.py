@@ -1,0 +1,304 @@
+"""Fleet layer: multi-instance heterogeneous serving over one request stream.
+
+GreenLLM's scheduler (§4.3) picks *one* configuration per workload; serving
+heavy traffic needs *fleets* - N replicas of possibly different (chip, mode)
+instance types sharing a Poisson stream. This module simulates such fleets
+by (1) routing each arrival to a replica with a deterministic dispatcher,
+then (2) reusing the single-engine `simulate()` per replica on its
+partition (arrivals keep their absolute times; replicas share one clock),
+and (3) merging per-replica `SimResult`s with `SimResult.merge()` so fleet
+carbon/SLO roll up exactly additively.
+
+Routing policies:
+
+  least_loaded   - each arrival goes to the replica whose estimated
+                   completion of already-queued work (analytic perfmodel
+                   service-time estimate) is earliest. The Mélange load
+                   balancer's queue-aware policy, made deterministic for
+                   simulation.
+  bucketed       - Mélange-style size-aware routing: requests are bucketed
+                   by (prompt, output) length and each bucket is pinned to
+                   a subset of replicas (the allocator's assignment),
+                   least-loaded within the subset. Keeps small-request
+                   latency from hiding behind long-prompt head-of-line
+                   blocking on the same instance.
+
+Instance counts per type come from `core/allocator.py` (Mélange-style
+min-carbon allocation); `FleetSpec.from_allocation` bridges the two.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.core.carbon import CarbonBreakdown, CarbonTrace, DEFAULT_CI
+from repro.core.disagg import DisaggConfig
+from repro.core.spec_decode import expected_tokens_per_round
+from repro.serving.perfmodel import decode_cost, dsd_round_time, prefill_cost
+from repro.serving.simulator import CHIP_DB, SimResult, simulate
+from repro.serving.workload import Dataset, Request
+
+
+# ---------------------------------------------------------------------------
+# Fleet description
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ReplicaGroup:
+    """`count` identical instances of one serving configuration."""
+
+    config: DisaggConfig
+    count: int
+
+    def __post_init__(self):
+        if self.count < 0:
+            raise ValueError(f"negative replica count for {self.config.name}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """How many instances of each (chip, mode) configuration to provision."""
+
+    groups: tuple[ReplicaGroup, ...]
+
+    @staticmethod
+    def of_counts(catalog: Sequence[DisaggConfig],
+                  counts: dict[str, int]) -> "FleetSpec":
+        """Build from {config-name: count} over a configuration catalog."""
+        by_name = {c.name: c for c in catalog}
+        unknown = set(counts) - set(by_name)
+        if unknown:
+            raise KeyError(f"configs not in catalog: {sorted(unknown)}")
+        return FleetSpec(tuple(
+            ReplicaGroup(by_name[n], k) for n, k in sorted(counts.items()) if k > 0))
+
+    def replicas(self) -> list[DisaggConfig]:
+        """Expanded per-instance list (group order, then instance index)."""
+        return [g.config for g in self.groups for _ in range(g.count)]
+
+    @property
+    def total_count(self) -> int:
+        return sum(g.count for g in self.groups)
+
+    def counts(self) -> dict[str, int]:
+        return {g.config.name: g.count for g in self.groups if g.count > 0}
+
+    def chips(self) -> dict[str, int]:
+        """Physical chip counts across the fleet (dpd/dsd use two chips)."""
+        out: dict[str, int] = {}
+        for g in self.groups:
+            for chip in g.config.mode.chips():
+                out[chip] = out.get(chip, 0) + g.count
+        return out
+
+    def describe(self) -> str:
+        return " + ".join(f"{g.count}x {g.config.name}" for g in self.groups) or "(empty)"
+
+
+# ---------------------------------------------------------------------------
+# Analytic service-time estimate (dispatcher weight, not ground truth -
+# the per-replica simulation is the ground truth)
+# ---------------------------------------------------------------------------
+def estimate_service_s(cfg: DisaggConfig, prompt_len: int, output_len: int,
+                       batch_hint: int = 8) -> float:
+    """Rough busy-time a request adds to an instance of `cfg`.
+
+    Uses the same perfmodel rooflines the simulator charges, at a nominal
+    decode batch `batch_hint`, so relative weights across instance types
+    are faithful even though absolute queueing is not modeled here."""
+    mode = cfg.mode
+    new_chip = CHIP_DB[mode.new_chip]
+    old_chip = CHIP_DB[mode.old_chip] if mode.old_chip else None
+    ctx = prompt_len + output_len // 2
+    b = max(batch_hint, 1)
+    pre = prefill_cost(cfg.target, new_chip, 1, prompt_len).time_s
+    if mode.kind == "standalone":
+        dec = decode_cost(cfg.target, new_chip, b, ctx).time_s / b
+        return pre + max(output_len - 1, 0) * dec
+    if mode.kind == "dpd":
+        dec = decode_cost(cfg.target, old_chip, b, ctx).time_s / b
+        return pre + max(output_len - 1, 0) * dec
+    # spec / dsd: draft K+1 sequential steps + one target verify per round
+    k = mode.spec_k
+    e_tok = expected_tokens_per_round(mode.acceptance, k)
+    draft_chip = new_chip if mode.kind == "spec" else old_chip
+    t_d = decode_cost(cfg.draft, draft_chip, b, ctx).time_s * (k + 1)
+    t_t = decode_cost(cfg.target, new_chip, b, ctx, new_tokens=k + 1).time_s
+    if mode.kind == "spec":
+        pre += prefill_cost(cfg.draft, new_chip, 1, prompt_len).time_s
+        round_s = t_d + t_t
+    else:
+        # same Fig. 7 schedule the simulator prices: ids ship after the
+        # draft, the probs transfer can hide behind the target forward
+        ids_b = b * k * 4
+        probs_b = b * k * cfg.draft.vocab_size * 2
+        round_s = dsd_round_time(t_d, t_t, mode.interconnect, ids_b, probs_b,
+                                 overlap=mode.overlap_comm)
+    rounds = max(output_len - 1, 0) / max(e_tok, 1.0)
+    return pre + rounds * round_s / b
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SizeBuckets:
+    """Mélange-style (prompt, output) length grid.
+
+    `prompt_edges[i]` is the inclusive upper bound of prompt bucket i; the
+    last bucket is open-ended (same for outputs)."""
+
+    prompt_edges: tuple[int, ...]
+    output_edges: tuple[int, ...]
+
+    def __post_init__(self):
+        for e in (self.prompt_edges, self.output_edges):
+            if any(b <= a for a, b in zip(e, e[1:])):
+                raise ValueError(f"edges must be strictly increasing: {e}")
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (len(self.prompt_edges) + 1, len(self.output_edges) + 1)
+
+    def index(self, prompt_len: int, output_len: int) -> tuple[int, int]:
+        i = sum(prompt_len > e for e in self.prompt_edges)
+        j = sum(output_len > e for e in self.output_edges)
+        return i, j
+
+    def rep_size(self, i: int, j: int) -> tuple[int, int]:
+        """Representative (prompt, output) size of bucket (i, j): its upper
+        bound, or 1.5x the last edge for the open-ended tail."""
+        def rep(edges: tuple[int, ...], k: int) -> int:
+            if k < len(edges):
+                return edges[k]
+            return int(edges[-1] * 1.5) if edges else 1
+        return rep(self.prompt_edges, i), rep(self.output_edges, j)
+
+    @staticmethod
+    def from_dataset(ds: Dataset) -> "SizeBuckets":
+        """Grid at the dataset's P25/P50/P75 percentiles (Table 2)."""
+        p_edges = tuple(sorted({ds.p25[0], ds.p50[0], ds.p75[0]}))
+        o_edges = tuple(sorted({ds.p25[1], ds.p50[1], ds.p75[1]}))
+        return SizeBuckets(p_edges, o_edges)
+
+
+class _Dispatcher:
+    """Deterministic earliest-finish dispatcher over a replica subset."""
+
+    def __init__(self, replicas: list[DisaggConfig], start_s: float):
+        self.replicas = replicas
+        self.busy_until = [start_s] * len(replicas)
+        self._est_cache: dict[tuple[int, int, int], float] = {}
+
+    def _est(self, idx: int, req: Request) -> float:
+        key = (id(self.replicas[idx]), req.prompt_len, req.output_len)
+        if key not in self._est_cache:
+            self._est_cache[key] = estimate_service_s(
+                self.replicas[idx], req.prompt_len, req.output_len)
+        return self._est_cache[key]
+
+    def pick(self, req: Request, candidates: Sequence[int]) -> int:
+        best, best_finish = None, None
+        for idx in candidates:
+            finish = max(self.busy_until[idx], req.arrival_s) + self._est(idx, req)
+            if best_finish is None or finish < best_finish - 1e-12:
+                best, best_finish = idx, finish
+        self.busy_until[best] = best_finish
+        return best
+
+
+def route_least_loaded(requests: Sequence[Request], fleet: FleetSpec,
+                       start_s: float = 0.0) -> list[list[Request]]:
+    """Partition one arrival stream across all replicas, earliest-finish."""
+    replicas = fleet.replicas()
+    if not replicas:
+        raise ValueError("cannot route onto an empty fleet")
+    disp = _Dispatcher(replicas, start_s)
+    parts: list[list[Request]] = [[] for _ in replicas]
+    everyone = range(len(replicas))
+    for req in sorted(requests, key=lambda r: (r.arrival_s, r.req_id)):
+        parts[disp.pick(req, everyone)].append(req)
+    return parts
+
+
+def route_bucketed(requests: Sequence[Request], fleet: FleetSpec,
+                   buckets: SizeBuckets,
+                   assignment: dict[tuple[int, int], Sequence[int]],
+                   start_s: float = 0.0) -> list[list[Request]]:
+    """Pin each size bucket to a replica subset; least-loaded within it.
+
+    `assignment` maps bucket index (i, j) -> replica indices into
+    `fleet.replicas()`. Buckets without an entry fall back to the whole
+    fleet (so a coarse allocator assignment still routes everything)."""
+    replicas = fleet.replicas()
+    if not replicas:
+        raise ValueError("cannot route onto an empty fleet")
+    for b, idxs in assignment.items():
+        bad = [i for i in idxs if not 0 <= i < len(replicas)]
+        if bad or not idxs:
+            raise ValueError(f"bucket {b}: bad replica indices {idxs}")
+    disp = _Dispatcher(replicas, start_s)
+    parts: list[list[Request]] = [[] for _ in replicas]
+    everyone = tuple(range(len(replicas)))
+    for req in sorted(requests, key=lambda r: (r.arrival_s, r.req_id)):
+        pool = assignment.get(buckets.index(req.prompt_len, req.output_len), everyone)
+        parts[disp.pick(req, pool)].append(req)
+    return parts
+
+
+# ---------------------------------------------------------------------------
+# Fleet simulation
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class FleetResult:
+    """Per-replica simulations plus their exact aggregate."""
+
+    fleet: FleetSpec
+    replica_results: list[SimResult]
+    partitions: list[list[Request]]
+    merged: SimResult
+
+    def slo_attainment(self, ds: Dataset) -> float:
+        return self.merged.slo_attainment(ds)
+
+    def account(self, ci: "float | CarbonTrace" = DEFAULT_CI,
+                **kw) -> CarbonBreakdown:
+        return self.merged.account(ci, **kw)
+
+    def carbon_per_token(self, ci: "float | CarbonTrace" = DEFAULT_CI,
+                         **kw) -> float:
+        return self.merged.carbon_per_token(ci, **kw)
+
+    @property
+    def total_tokens(self) -> int:
+        return self.merged.total_tokens
+
+    def per_replica_tokens(self) -> list[int]:
+        return [r.total_tokens for r in self.replica_results]
+
+
+def simulate_fleet(
+    fleet: FleetSpec,
+    requests: Sequence[Request],
+    policy: str = "least_loaded",
+    buckets: Optional[SizeBuckets] = None,
+    assignment: Optional[dict[tuple[int, int], Sequence[int]]] = None,
+    seed: int = 0,
+    start_s: float = 0.0,
+) -> FleetResult:
+    """Route `requests` across the fleet, simulate each replica, merge.
+
+    Deterministic for a fixed (fleet, requests, policy, seed): routing has
+    no randomness and each replica gets a seed derived from its index."""
+    if policy == "least_loaded":
+        parts = route_least_loaded(requests, fleet, start_s)
+    elif policy == "bucketed":
+        if buckets is None or assignment is None:
+            raise ValueError("bucketed routing needs buckets and assignment")
+        parts = route_bucketed(requests, fleet, buckets, assignment, start_s)
+    else:
+        raise ValueError(f"unknown routing policy: {policy!r}")
+    results = []
+    for i, (cfg, part) in enumerate(zip(fleet.replicas(), parts)):
+        results.append(simulate(cfg.mode, cfg.target, part, draft_cfg=cfg.draft,
+                                seed=seed + i, start_s=start_s))
+    return FleetResult(fleet, results, parts, SimResult.merge(results))

@@ -36,7 +36,15 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.carbon import CHIP_DB, CarbonBreakdown, ChipSpec, DEFAULT_CI, request_carbon
+from repro.core.carbon import (
+    CHIP_DB,
+    CarbonBreakdown,
+    CarbonTrace,
+    ChipSpec,
+    DEFAULT_CI,
+    request_carbon,
+    resolve_ci,
+)
 from repro.models.config import ModelConfig
 from repro.serving.perfmodel import (
     Interconnect,
@@ -89,6 +97,23 @@ class ReqTrace:
 class ChipUse:
     busy_s: float = 0.0
     energy_j: float = 0.0
+    # (start_s, end_s, energy_j) per charged step, on the simulation clock -
+    # the timeline `account()` integrates against a CarbonTrace. Aggregates
+    # above stay authoritative; segments are additive detail.
+    segments: list[tuple[float, float, float]] = dataclasses.field(default_factory=list)
+    # distinct physical chips behind this entry (>1 after SimResult.merge)
+    instances: int = 1
+
+    def add(self, start_s: float, cost) -> None:
+        self.busy_s += cost.time_s
+        self.energy_j += cost.energy_j
+        self.segments.append((start_s, start_s + cost.time_s, cost.energy_j))
+
+    def merged_with(self, other: "ChipUse") -> "ChipUse":
+        return ChipUse(self.busy_s + other.busy_s,
+                       self.energy_j + other.energy_j,
+                       sorted(self.segments + other.segments),
+                       self.instances + other.instances)
 
 
 @dataclasses.dataclass
@@ -96,9 +121,11 @@ class SimResult:
     mode: ServingMode
     traces: list[ReqTrace]
     use: dict[str, ChipUse]                  # chip name -> usage
-    duration_s: float
+    duration_s: float                        # absolute end time on the sim clock
     link_bytes: float = 0.0
     link_busy_s: float = 0.0
+    start_s: float = 0.0                     # clock offset the engine booted at
+    num_instances: int = 1                   # >1 after merge(): fleet aggregate
 
     @property
     def total_tokens(self) -> int:
@@ -123,7 +150,7 @@ class SimResult:
             return 0.0
         return self.link_bytes * 8.0 / 1e9 / self.link_busy_s
 
-    def account(self, ci: float = DEFAULT_CI,
+    def account(self, ci: "float | CarbonTrace" = DEFAULT_CI,
                 lifetimes: Optional[dict[str, float]] = None,
                 include_idle: bool = False) -> CarbonBreakdown:
         """Total carbon of the run (Eq. 3).
@@ -134,26 +161,76 @@ class SimResult:
         beyond-paper accounting where a reserved pool draws idle power and
         amortizes embodied carbon over the whole serving window - it
         penalizes low-duty-cycle disaggregation (see fig9 --strict and
-        EXPERIMENTS.md §Beyond-paper)."""
+        EXPERIMENTS.md §Beyond-paper).
+
+        `ci` may be a scalar (gCO2/kWh) or a `CarbonTrace`: with a trace,
+        each charged step's energy is priced at the grid intensity in
+        effect while it ran (integrated over the step window), so the same
+        simulation sweeps time-varying grids without re-simulating. A flat
+        trace is numerically identical to the scalar path."""
+        window_s = max(self.duration_s - self.start_s, 0.0)
         total = CarbonBreakdown.zero()
         for name, use in self.use.items():
             chip = CHIP_DB[name]
             lt = (lifetimes or {}).get(name)
             busy = use.busy_s
-            energy = use.energy_j
             occupancy = busy
-            if include_idle and self.duration_s > busy:
-                energy += chip.idle_power_w * (self.duration_s - busy)
-                occupancy = self.duration_s
-            total = total + request_carbon(
-                occupancy, energy, chip, ci_g_per_kwh=ci, lifetime_years=lt)
+            if isinstance(ci, CarbonTrace) and use.segments:
+                op = sum(
+                    ci.operational_g(e_j, t0, t1) for t0, t1, e_j in use.segments)
+            else:
+                op = request_carbon(
+                    0.0, use.energy_j, chip,
+                    ci_g_per_kwh=resolve_ci(ci, self.start_s, self.duration_s),
+                ).operational_g
+            idle_window = use.instances * window_s
+            if include_idle and idle_window > busy:
+                idle_e = chip.idle_power_w * (idle_window - busy)
+                op += request_carbon(
+                    0.0, idle_e, chip,
+                    ci_g_per_kwh=resolve_ci(ci, self.start_s, self.duration_s),
+                ).operational_g
+                occupancy = idle_window
+            total = total + CarbonBreakdown(
+                operational_g=op,
+                embodied_g=request_carbon(occupancy, 0.0, chip, lifetime_years=lt).embodied_g)
         return total
 
-    def carbon_per_token(self, ci: float = DEFAULT_CI,
+    def carbon_per_token(self, ci: "float | CarbonTrace" = DEFAULT_CI,
                          lifetimes: Optional[dict[str, float]] = None,
                          include_idle: bool = False) -> float:
         tok = max(self.total_tokens, 1)
         return self.account(ci, lifetimes, include_idle).total_g / tok
+
+    @staticmethod
+    def merge(results: "list[SimResult]") -> "SimResult":
+        """Fleet aggregation: sum chip usage, concat traces, widest window.
+
+        Carbon is additive under merge: `merge(rs).account(ci)` equals the
+        sum of the parts for any scalar or trace `ci` with include_idle
+        False (per-segment pricing only depends on each segment). Replicas
+        of the same chip type are distinct physical chips; per-chip
+        `ChipUse.instances` tracks the count so include_idle accounting
+        still charges each reserved instance's idle window."""
+        if not results:
+            raise ValueError("merge() needs at least one SimResult")
+        use: dict[str, ChipUse] = {}
+        for r in results:
+            for name, u in r.use.items():
+                use[name] = use[name].merged_with(u) if name in use else \
+                    ChipUse(u.busy_s, u.energy_j, list(u.segments), u.instances)
+        traces = [t for r in results for t in r.traces]
+        traces.sort(key=lambda t: t.req.arrival_s)
+        return SimResult(
+            mode=results[0].mode,
+            traces=traces,
+            use=use,
+            duration_s=max(r.duration_s for r in results),
+            link_bytes=sum(r.link_bytes for r in results),
+            link_busy_s=sum(r.link_busy_s for r in results),
+            start_s=min(r.start_s for r in results),
+            num_instances=sum(r.num_instances for r in results),
+        )
 
 
 def _emit_round_tokens(rng: np.random.Generator, acceptance: float, k: int) -> int:
@@ -182,9 +259,19 @@ def simulate(
     draft_cfg: Optional[ModelConfig] = None,
     seed: int = 0,
     ctx_estimate: Optional[int] = None,
+    start_s: float = 0.0,
 ) -> SimResult:
+    """Simulate one engine over `requests` (arrival-sorted, absolute times).
+
+    `start_s` is the engine's boot time on the shared fleet clock: nothing
+    executes earlier, and arrivals before it queue until then. The fleet
+    layer (serving/fleet.py) partitions one stream across replicas and
+    calls this per replica, so request lists may be any subset of a
+    workload as long as arrivals are non-decreasing."""
     if mode.kind in ("spec", "dsd") and draft_cfg is None:
         raise ValueError(f"{mode.kind} needs a draft model")
+    if start_s < 0:
+        raise ValueError(f"negative start_s: {start_s}")
     rng = np.random.default_rng(seed)
     new_chip = CHIP_DB[mode.new_chip]
     old_chip = CHIP_DB[mode.old_chip] if mode.old_chip else None
@@ -203,24 +290,25 @@ def simulate(
         cap = min(cap, max_concurrency(draft_cfg, new_chip, ctx_estimate))
     cap = max(cap, 1)
 
-    def charge(chip_name: str, cost) -> None:
-        use[chip_name].busy_s += cost.time_s
-        use[chip_name].energy_j += cost.energy_j
+    def charge(chip_name: str, cost, at_s: float) -> None:
+        use[chip_name].add(at_s, cost)
 
     # ------------------------------------------------------------------
     if mode.kind == "dpd":
-        result = _simulate_dpd(mode, target_cfg, traces, new_chip, old_chip, cap, charge, rng)
+        result = _simulate_dpd(mode, target_cfg, traces, new_chip, old_chip, cap,
+                               charge, rng, start_s)
     else:
         result = _simulate_single_loop(mode, target_cfg, draft_cfg, traces,
-                                       new_chip, old_chip, cap, charge, rng)
+                                       new_chip, old_chip, cap, charge, rng, start_s)
     link_bytes, link_busy, duration = result
-    return SimResult(mode, traces, use, duration, link_bytes, link_busy)
+    return SimResult(mode, traces, use, duration, link_bytes, link_busy,
+                     start_s=start_s)
 
 
 def _simulate_single_loop(mode, target_cfg, draft_cfg, traces, new_chip, old_chip,
-                          cap, charge, rng):
+                          cap, charge, rng, start_s=0.0):
     """standalone / spec / dsd: one serialized engine loop (prefill priority)."""
-    t = 0.0
+    t = start_s
     i_arrival = 0
     prefq: deque[ReqTrace] = deque()
     active: list[_Active] = []
@@ -234,22 +322,22 @@ def _simulate_single_loop(mode, target_cfg, draft_cfg, traces, new_chip, old_chi
             prefq.append(traces[i_arrival])
             i_arrival += 1
         if not prefq and not active:
-            t = traces[i_arrival].req.arrival_s
+            t = max(t, traces[i_arrival].req.arrival_s)
             continue
 
         if prefq and len(active) < cap:
             tr = prefq.popleft()
             pl = tr.req.prompt_len
             c_t = prefill_cost(target_cfg, new_chip, 1, pl)
-            charge(new_chip.name, c_t)
+            charge(new_chip.name, c_t, t)
             dur = c_t.time_s
             if mode.kind == "spec":
                 c_d = prefill_cost(draft_cfg, new_chip, 1, pl)
-                charge(new_chip.name, c_d)
+                charge(new_chip.name, c_d, t + c_t.time_s)
                 dur += c_d.time_s                      # serialized on one chip
             elif mode.kind == "dsd":
                 c_d = prefill_cost(draft_cfg, old_chip, 1, pl)
-                charge(old_chip.name, c_d)
+                charge(old_chip.name, c_d, t)
                 dur = max(dur, c_d.time_s)             # parallel pools
             t += dur
             tr.ttft_s = t - tr.req.arrival_s
@@ -266,7 +354,7 @@ def _simulate_single_loop(mode, target_cfg, draft_cfg, traces, new_chip, old_chi
             ctx = int(np.mean([a.ctx for a in active]))
             if mode.kind == "standalone":
                 c = decode_cost(target_cfg, new_chip, b, ctx)
-                charge(new_chip.name, c)
+                charge(new_chip.name, c, t)
                 t += c.time_s
                 emitted = {id(a): 1 for a in active}
             else:
@@ -279,8 +367,8 @@ def _simulate_single_loop(mode, target_cfg, draft_cfg, traces, new_chip, old_chi
                 c_d = dataclasses.replace(c_d1, time_s=c_d1.time_s * (k + 1),
                                           energy_j=c_d1.energy_j * (k + 1))
                 c_t = decode_cost(target_cfg, new_chip, b, ctx, new_tokens=k + 1)
-                charge(c_draft_chip.name, c_d)
-                charge(new_chip.name, c_t)
+                charge(c_draft_chip.name, c_d, t)
+                charge(new_chip.name, c_t, t + c_d.time_s)
                 if mode.kind == "spec":
                     round_t = c_d.time_s + c_t.time_s
                 else:
@@ -312,22 +400,23 @@ def _simulate_single_loop(mode, target_cfg, draft_cfg, traces, new_chip, old_chi
             continue
 
         # blocked on capacity: jump to... (can only happen via cap; decode drains)
-        t = traces[i_arrival].req.arrival_s  # pragma: no cover
+        t = max(t, traces[i_arrival].req.arrival_s)  # pragma: no cover
 
     return link_bytes, link_busy, t
 
 
-def _simulate_dpd(mode, cfg, traces, new_chip, old_chip, cap, charge, rng):
+def _simulate_dpd(mode, cfg, traces, new_chip, old_chip, cap, charge, rng,
+                  start_s=0.0):
     """Disg-Pref-Decode: pool A prefills, KV crosses the link, pool B decodes."""
     # Phase 1: pool A prefill pipeline + FIFO link
-    t_a = 0.0
-    link_free = 0.0
+    t_a = start_s
+    link_free = start_s
     link_bytes = link_busy = 0.0
     ready: list[tuple[float, ReqTrace]] = []
     for tr in traces:
         t_a = max(t_a, tr.req.arrival_s)
         c = prefill_cost(cfg, new_chip, 1, tr.req.prompt_len)
-        charge(new_chip.name, c)
+        charge(new_chip.name, c, t_a)
         t_a += c.time_s
         tr.ttft_s = t_a - tr.req.arrival_s
         tr.first_token_s = tr.last_token_s = t_a
@@ -344,8 +433,8 @@ def _simulate_dpd(mode, cfg, traces, new_chip, old_chip, cap, charge, rng):
             tr.finish_s = t_a
 
     # Phase 2: pool B continuous-batch decode
-    ready.sort()
-    t_b = 0.0
+    ready.sort(key=lambda x: x[0])
+    t_b = start_s
     i = 0
     active: list[_Active] = []
     while i < len(ready) or active:
@@ -359,7 +448,7 @@ def _simulate_dpd(mode, cfg, traces, new_chip, old_chip, cap, charge, rng):
         b = len(active)
         ctx = int(np.mean([a.ctx for a in active]))
         c = decode_cost(cfg, old_chip, b, ctx)
-        charge(old_chip.name, c)
+        charge(old_chip.name, c, t_b)
         t_b += c.time_s
         done = []
         for a in active:

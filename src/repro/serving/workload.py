@@ -51,6 +51,22 @@ def _lognormal_params(p25: float, p50: float, p75: float) -> tuple[float, float]
     return mu, max(sigma, 1e-3)
 
 
+def _poisson_requests(rng: np.random.Generator, qps: float, duration_s: float,
+                      size_fn) -> list[Request]:
+    """Shared arrival process: exponential gaps, sizes from `size_fn(rng)`."""
+    reqs: list[Request] = []
+    t = 0.0
+    i = 0
+    while True:
+        t += rng.exponential(1.0 / qps)
+        if t >= duration_s:
+            break
+        pl, ol = size_fn(rng)
+        reqs.append(Request(i, t, pl, ol))
+        i += 1
+    return reqs
+
+
 def sample_requests(
     dataset: Dataset,
     qps: float,
@@ -60,20 +76,36 @@ def sample_requests(
 ) -> list[Request]:
     """Poisson arrivals at `qps` for `duration_s`; sizes lognormal or fixed."""
     rng = np.random.default_rng(seed)
-    reqs: list[Request] = []
-    t = 0.0
-    mu_in, sg_in = _lognormal_params(dataset.p25[0], dataset.p50[0], dataset.p75[0])
-    mu_out, sg_out = _lognormal_params(dataset.p25[1], dataset.p50[1], dataset.p75[1])
-    i = 0
-    while True:
-        t += rng.exponential(1.0 / qps)
-        if t >= duration_s:
-            break
-        if fixed_size is not None:
-            pl, ol = fixed_size
-        else:
-            pl = int(np.clip(rng.lognormal(mu_in, sg_in), 1, 8192))
-            ol = int(np.clip(rng.lognormal(mu_out, sg_out), 1, 4096))
-        reqs.append(Request(i, t, pl, ol))
-        i += 1
-    return reqs
+    if fixed_size is not None:
+        size_fn = lambda _rng: fixed_size  # noqa: E731
+    else:
+        mu_in, sg_in = _lognormal_params(dataset.p25[0], dataset.p50[0], dataset.p75[0])
+        mu_out, sg_out = _lognormal_params(dataset.p25[1], dataset.p50[1], dataset.p75[1])
+
+        def size_fn(r):
+            return (int(np.clip(r.lognormal(mu_in, sg_in), 1, 8192)),
+                    int(np.clip(r.lognormal(mu_out, sg_out), 1, 4096)))
+    return _poisson_requests(rng, qps, duration_s, size_fn)
+
+
+def sample_mixture_requests(
+    dataset: Dataset,
+    qps: float,
+    duration_s: float,
+    seed: int = 0,
+    weights: tuple[float, float, float] = (0.25, 0.5, 0.25),
+) -> list[Request]:
+    """Poisson arrivals whose sizes are a 3-point mixture of the dataset's
+    P25/P50/P75 (input, output) pairs.
+
+    The size-aware fleet benchmarks need heterogeneous-but-bounded request
+    sizes: the lognormal sampler's open tail produces prompts no config can
+    serve under tight TTFT SLOs, while a single fixed size makes bucketed
+    routing trivial. The percentile mixture keeps every request inside the
+    allocator's profiled bucket grid."""
+    if len(weights) != 3 or min(weights) < 0 or sum(weights) <= 0:
+        raise ValueError(f"bad mixture weights: {weights}")
+    p = np.asarray(weights, dtype=float) / sum(weights)
+    sizes = (dataset.p25, dataset.p50, dataset.p75)
+    return _poisson_requests(np.random.default_rng(seed), qps, duration_s,
+                             lambda r: sizes[r.choice(3, p=p)])

@@ -1,6 +1,8 @@
 """§5 closed-form carbon analysis: Eq. 4-6 and the three implications."""
 import pytest
-from hypothesis import assume, given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import assume, given, settings, strategies as st  # noqa: E402
 
 from repro.core.analysis import (
     CaseInputs,

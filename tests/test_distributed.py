@@ -8,19 +8,20 @@ import textwrap
 
 import jax
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.distributed.fault import HeartbeatTracker, StragglerPolicy
 from repro.distributed.sharding import (
     cache_pspecs,
+    make_abstract_mesh,
     param_pspecs,
     tokens_pspec,
     zero_variant,
 )
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = make_abstract_mesh((16, 16), ("data", "model"))
+MESH3 = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _specs(arch, mesh=MESH):
@@ -200,9 +201,10 @@ def test_int8_allreduce_accuracy_8dev():
         from jax.sharding import PartitionSpec as P
         from repro.launch.mesh import make_host_mesh
         from repro.distributed.compression import int8_allreduce_mean
+        from repro.distributed.sharding import shard_map
         mesh = make_host_mesh(data=8, model=1)
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 128))
-        f = jax.jit(jax.shard_map(
+        f = jax.jit(shard_map(
             lambda s: int8_allreduce_mean(s[0], "data")[None],
             mesh=mesh, in_specs=P("data"), out_specs=P("data")))
         got = np.asarray(f(x))[0]

@@ -1,0 +1,357 @@
+"""Fleet layer: CarbonTrace, multi-instance simulation, Mélange allocator.
+
+All tests are seeded and deterministic: routing has no randomness and every
+stochastic component (arrivals, speculative acceptance) runs under fixed
+numpy Generator seeds, so two consecutive runs must produce bit-identical
+results (pinned explicitly in test_fleet_run_is_deterministic_json).
+"""
+import dataclasses
+import json
+import math
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.allocator import (
+    Allocation,
+    InstanceProfile,
+    allocate,
+    bucket_workload,
+    build_gpu_info,
+    fleet_assignment,
+)
+from repro.core.carbon import CHIP_DB, CarbonTrace, DEFAULT_CI
+from repro.core.disagg import standard_catalog
+from repro.core.profiler import ProfileDB, ProfileEntry
+from repro.core.scheduler import schedule
+from repro.serving.fleet import (
+    FleetSpec,
+    ReplicaGroup,
+    SizeBuckets,
+    route_bucketed,
+    route_least_loaded,
+    simulate_fleet,
+)
+from repro.serving.simulator import ServingMode, SimResult, simulate
+from repro.serving.workload import (
+    DATASETS,
+    Request,
+    sample_mixture_requests,
+    sample_requests,
+)
+
+CATALOG = standard_catalog()
+DS = DATASETS["sharegpt"]
+T7 = get_config("llama-7b")
+
+
+def _mix_reqs(qps=8.0, dur=30.0, seed=0):
+    return sample_mixture_requests(DS, qps, dur, seed=seed)
+
+
+# ---------------------------------------------------------------- CarbonTrace
+def test_trace_ci_at_and_validation():
+    tr = CarbonTrace((0.0, 10.0, 20.0), (100.0, 300.0, 50.0))
+    assert tr.ci_at(-5.0) == 100.0          # first value extends back
+    assert tr.ci_at(0.0) == 100.0
+    assert tr.ci_at(10.0) == 300.0
+    assert tr.ci_at(19.99) == 300.0
+    assert tr.ci_at(1000.0) == 50.0         # last value extends forward
+    with pytest.raises(ValueError):
+        CarbonTrace((0.0, 5.0, 5.0), (1.0, 2.0, 3.0))    # not increasing
+    with pytest.raises(ValueError):
+        CarbonTrace((0.0,), (-1.0,))                     # negative CI
+
+
+def test_trace_mean_ci_integrates_piecewise():
+    tr = CarbonTrace((0.0, 10.0), (100.0, 300.0))
+    assert tr.mean_ci(0.0, 10.0) == pytest.approx(100.0)
+    assert tr.mean_ci(5.0, 15.0) == pytest.approx(200.0)
+    assert tr.mean_ci(10.0, 30.0) == pytest.approx(300.0)
+    assert tr.mean_ci(3.0, 3.0) == 100.0                 # zero-width
+
+
+def test_trace_constructors():
+    st = CarbonTrace.step(60.0, 17.0, 501.0, horizon_s=240.0)
+    assert st.ci_at(30.0) == 17.0 and st.ci_at(90.0) == 501.0
+    assert st.mean_ci(0.0, 240.0) == pytest.approx((17.0 + 501.0) / 2)
+    si = CarbonTrace.sinusoid(261.0, 100.0, 3600.0)
+    assert si.mean_ci(0.0, 3600.0) == pytest.approx(261.0, rel=0.02)
+    assert max(si.ci) <= 361.0 + 1e-9 and min(si.ci) >= 161.0 - 1e-9
+    with pytest.raises(ValueError):
+        CarbonTrace.sinusoid(100.0, 200.0, 3600.0)       # would go negative
+
+
+def test_trace_from_csv(tmp_path):
+    p = tmp_path / "trace.csv"
+    p.write_text("t_s,ci\n# diurnal\n0,100.0\n3600,250.0\n")
+    tr = CarbonTrace.from_csv(str(p))
+    assert tr.ci_at(0.0) == 100.0 and tr.ci_at(4000.0) == 250.0
+
+
+def test_flat_trace_reproduces_scalar_ci_accounting():
+    """A flat/step-but-constant trace must equal scalar-CI totals exactly."""
+    reqs = sample_requests(DS, 2.0, 30.0, seed=0, fixed_size=DS.p50)
+    res = simulate(ServingMode("standalone", "standalone", "a100"), T7, reqs)
+    flat = CarbonTrace.flat(DEFAULT_CI)
+    const_step = CarbonTrace.step(10.0, DEFAULT_CI, DEFAULT_CI, horizon_s=100.0)
+    want = res.account(DEFAULT_CI)
+    for tr in (flat, const_step):
+        got = res.account(tr)
+        assert got.total_g == pytest.approx(want.total_g, rel=1e-12)
+        assert got.operational_g == pytest.approx(want.operational_g, rel=1e-12)
+
+
+def test_varying_trace_prices_energy_when_it_runs():
+    """Work inside a high-CI window must cost more than the same work in a
+    low-CI window - the point of time-resolved accounting."""
+    reqs = sample_requests(DS, 2.0, 20.0, seed=0, fixed_size=DS.p50)
+    res = simulate(ServingMode("standalone", "standalone", "a100"), T7, reqs)
+    end = res.duration_s
+    high_then_low = CarbonTrace((0.0, end + 1.0), (501.0, 17.0))
+    low_then_high = CarbonTrace((0.0, end + 1.0), (17.0, 501.0))
+    hi = res.account(high_then_low).operational_g
+    lo = res.account(low_then_high).operational_g
+    assert hi > lo * 10                        # all energy sits before `end`
+    assert hi == pytest.approx(res.account(501.0).operational_g, rel=1e-9)
+
+
+# ---------------------------------------------------------------- fleet sim
+def test_fleet_token_conservation():
+    reqs = _mix_reqs(qps=8.0, dur=30.0)
+    fleet = FleetSpec.of_counts(CATALOG, {"standalone": 1, "dsd-t4-llama-1b": 2})
+    fr = simulate_fleet(fleet, reqs, seed=0)
+    # every request routed exactly once
+    assert sum(len(p) for p in fr.partitions) == len(reqs)
+    routed_ids = sorted(r.req_id for p in fr.partitions for r in p)
+    assert routed_ids == sorted(r.req_id for r in reqs)
+    # all tokens produced, and merge neither drops nor duplicates
+    want = sum(r.output_len for r in reqs)
+    assert fr.total_tokens == want
+    assert sum(fr.per_replica_tokens()) == want
+
+
+def test_fleet_slo_attainment_monotone_in_replica_count():
+    """More replicas of the same type never hurt attainment (fixed stream)."""
+    reqs = sample_requests(DS, 24.0, 30.0, seed=3, fixed_size=DS.p50)
+    att = []
+    for n in (1, 2, 4):
+        fleet = FleetSpec.of_counts(CATALOG, {"standalone": n})
+        att.append(simulate_fleet(fleet, reqs, seed=0).slo_attainment(DS))
+    assert att[0] < 0.9, f"1 replica should be overloaded, got {att[0]}"
+    assert att[0] <= att[1] <= att[2]
+    assert att[2] > 0.95
+
+
+def test_fleet_carbon_additive_under_merge():
+    reqs = _mix_reqs(qps=6.0, dur=30.0)
+    fleet = FleetSpec.of_counts(CATALOG, {"standalone": 2, "dsd-t4-llama-1b": 1})
+    fr = simulate_fleet(fleet, reqs, seed=0)
+    trace = CarbonTrace.step(15.0, 17.0, 501.0, horizon_s=600.0)
+    for ci in (DEFAULT_CI, trace):
+        whole = fr.merged.account(ci)
+        parts = [r.account(ci) for r in fr.replica_results]
+        assert whole.total_g == pytest.approx(
+            sum(p.total_g for p in parts), rel=1e-9)
+        assert whole.embodied_g == pytest.approx(
+            sum(p.embodied_g for p in parts), rel=1e-9)
+
+
+def test_merge_tracks_chip_instances_for_idle_accounting():
+    reqs = _mix_reqs(qps=4.0, dur=20.0)
+    fleet = FleetSpec.of_counts(CATALOG, {"standalone": 3})
+    fr = simulate_fleet(fleet, reqs, seed=0)
+    assert fr.merged.use["a100"].instances == 3
+    # 3 reserved chips idle 3x as much as one busy-equivalent chip would
+    idle = fr.merged.account(DEFAULT_CI, include_idle=True)
+    busy_only = fr.merged.account(DEFAULT_CI)
+    assert idle.total_g > busy_only.total_g
+
+
+def test_simulate_start_offset_delays_execution():
+    reqs = sample_requests(DS, 2.0, 10.0, seed=0, fixed_size=DS.p50)
+    late = simulate(ServingMode("standalone", "standalone", "a100"), T7, reqs,
+                    start_s=100.0)
+    assert late.start_s == 100.0
+    assert all(seg[0] >= 100.0 for seg in late.use["a100"].segments)
+    # TTFT includes the wait for boot
+    assert late.traces[0].ttft_s >= 100.0 - reqs[0].arrival_s
+
+
+def test_bucketed_routing_respects_assignment():
+    reqs = _mix_reqs(qps=6.0, dur=20.0)
+    fleet = FleetSpec(groups=(
+        ReplicaGroup(CATALOG[0], 1),               # standalone -> replica 0
+        ReplicaGroup(next(c for c in CATALOG if c.name == "dsd-t4-llama-1b"), 1),
+    ))
+    buckets = SizeBuckets.from_dataset(DS)
+    small = buckets.index(*DS.p25)
+    big = buckets.index(*DS.p75)
+    assignment = {small: (0,), big: (1,)}
+    parts = route_bucketed(reqs, fleet, buckets, assignment)
+    assert all(buckets.index(r.prompt_len, r.output_len) != big for r in parts[0])
+    assert all(buckets.index(r.prompt_len, r.output_len) != small for r in parts[1])
+    # p50 bucket had no pin: falls back to the whole fleet, nothing dropped
+    assert sum(len(p) for p in parts) == len(reqs)
+    with pytest.raises(ValueError):
+        route_bucketed(reqs, fleet, buckets, {small: (7,)})   # bad index
+
+
+def test_fleet_run_is_deterministic_json():
+    """Two consecutive runs serialize to identical JSON (acceptance gate)."""
+    def run():
+        reqs = _mix_reqs(qps=6.0, dur=20.0, seed=5)
+        fleet = FleetSpec.of_counts(
+            CATALOG, {"standalone": 1, "dsd-t4-llama-300m": 1})
+        fr = simulate_fleet(fleet, reqs, seed=7)
+        trace = CarbonTrace.sinusoid(261.0, 150.0, 120.0, horizon_s=600.0)
+        g = fr.account(trace)
+        return json.dumps({
+            "tokens": fr.per_replica_tokens(),
+            "slo": fr.slo_attainment(DS),
+            "total_g": g.total_g,
+            "operational_g": g.operational_g,
+            "ttft": [round(t.ttft_s, 12) for t in fr.merged.traces[:20]],
+        }, sort_keys=True)
+
+    assert run() == run()
+
+
+# ---------------------------------------------------------------- allocator
+def _profile(name, tput, fixed, dyn):
+    return InstanceProfile(name=name, tputs=((tput,),),
+                           carbon_fixed_g_per_hour=fixed,
+                           carbon_per_request_g=((dyn,),))
+
+
+def test_allocator_prefers_low_carbon_old_mode_when_slo_met():
+    gpu_info = {
+        "old-dsd": _profile("old-dsd", tput=5.0, fixed=2.0, dyn=0.001),
+        "new-standalone": _profile("new-standalone", tput=10.0, fixed=1.0, dyn=0.003),
+    }
+    alloc = allocate(((1.0,),), 4.0, gpu_info)
+    assert alloc.feasible
+    assert alloc.counts == {"old-dsd": 1}
+    # 1 instance fixed + 4 req/s * 3600 * dyn
+    assert alloc.carbon_g_per_hour == pytest.approx(2.0 + 4 * 3600 * 0.001)
+
+
+def test_allocator_falls_back_to_new_when_old_misses_slo():
+    gpu_info = {
+        "old-dsd": _profile("old-dsd", tput=0.0, fixed=2.0, dyn=0.001),  # SLO-infeasible
+        "new-standalone": _profile("new-standalone", tput=10.0, fixed=1.0, dyn=0.003),
+    }
+    alloc = allocate(((1.0,),), 4.0, gpu_info)
+    assert alloc.feasible
+    assert alloc.counts == {"new-standalone": 1}
+
+
+def test_allocator_scales_instance_counts_with_load():
+    gpu_info = {"new": _profile("new", tput=5.0, fixed=1.0, dyn=0.002)}
+    assert allocate(((1.0,),), 4.0, gpu_info).counts == {"new": 1}
+    assert allocate(((1.0,),), 12.0, gpu_info).counts == {"new": 3}
+    a = allocate(((1.0,),), 0.0, gpu_info)
+    assert a.counts == {} and a.carbon_g_per_hour == 0.0
+
+
+def test_allocator_infeasible_load_is_flagged():
+    gpu_info = {"new": _profile("new", tput=0.0, fixed=1.0, dyn=0.002)}
+    alloc = allocate(((1.0,),), 4.0, gpu_info)
+    assert not alloc.feasible
+
+
+def test_build_gpu_info_slo_gates_old_modes():
+    """Under ShareGPT's SLOs the old-chip DSD profiles positive throughput;
+    tightening TPOT below its speculative round time gates it to zero while
+    a new-chip mode survives - the allocator then lands all-new."""
+    buckets = SizeBuckets((200,), (200,))
+    cat = [c for c in CATALOG if c.name in ("standalone", "spec-llama-300m",
+                                            "dsd-t4-llama-300m")]
+    loose = build_gpu_info(cat, DS, buckets)
+    assert loose["dsd-t4-llama-300m"].feasible_anywhere()
+    tight = dataclasses.replace(DS, tpot_slo_s=0.017)
+    info = build_gpu_info(cat, tight, buckets)
+    assert not info["dsd-t4-llama-300m"].feasible_anywhere()
+    assert info["standalone"].feasible_anywhere()
+    alloc = allocate(((1.0,),), 4.0, info)
+    assert alloc.feasible
+    assert set(alloc.counts) <= {"standalone", "spec-llama-300m"}
+
+
+def test_allocator_end_to_end_mixed_fleet_beats_all_new():
+    """The headline: on a percentile-mixture ShareGPT stream the solver
+    provisions old+new DSD instances, and replaying its fleet through the
+    simulator yields less carbon than the all-new allocation at equal
+    (perfect) SLO attainment."""
+    reqs = sample_mixture_requests(DS, 12.0, 45.0, seed=2)
+    buckets = SizeBuckets.from_dataset(DS)
+    dist = bucket_workload(reqs, buckets)
+    info = build_gpu_info(CATALOG, DS, buckets)
+    by_name = {c.name: c for c in CATALOG}
+    mixed = allocate(dist, 12.0, info)
+    all_new = allocate(dist, 12.0, {k: v for k, v in info.items()
+                                    if not by_name[k].mode.old_chip})
+    assert any(by_name[n].mode.old_chip for n in mixed.counts), \
+        f"expected old-chip modes in {mixed.counts}"
+    assert mixed.carbon_g_per_hour < all_new.carbon_g_per_hour
+
+    totals, slos = {}, {}
+    for tag, alloc in (("mixed", mixed), ("all_new", all_new)):
+        fleet = FleetSpec.of_counts(CATALOG, alloc.fleet_counts())
+        fr = simulate_fleet(fleet, reqs, policy="bucketed", buckets=buckets,
+                            assignment=fleet_assignment(alloc, fleet.replicas()))
+        totals[tag] = fr.account(DEFAULT_CI).total_g
+        slos[tag] = fr.slo_attainment(DS)
+    assert slos["mixed"] >= 0.99 and slos["all_new"] >= 0.99
+    assert totals["mixed"] < totals["all_new"]
+
+
+def test_allocate_is_deterministic():
+    reqs = sample_mixture_requests(DS, 10.0, 30.0, seed=4)
+    buckets = SizeBuckets.from_dataset(DS)
+    dist = bucket_workload(reqs, buckets)
+    info = build_gpu_info(CATALOG, DS, buckets)
+    a, b = allocate(dist, 10.0, info), allocate(dist, 10.0, info)
+    assert a.counts == b.counts
+    assert a.carbon_g_per_hour == b.carbon_g_per_hour
+    assert json.dumps({str(k): v for k, v in a.assignment.items()}, sort_keys=True) \
+        == json.dumps({str(k): v for k, v in b.assignment.items()}, sort_keys=True)
+
+
+def test_bucket_workload_fractions():
+    buckets = SizeBuckets((100,), (100,))
+    reqs = [Request(0, 0.0, 50, 50), Request(1, 1.0, 50, 200),
+            Request(2, 2.0, 200, 50), Request(3, 3.0, 200, 200)]
+    dist = bucket_workload(reqs, buckets)
+    assert dist == ((0.25, 0.25), (0.25, 0.25))
+    assert bucket_workload([], buckets) == ((0.0, 0.0), (0.0, 0.0))
+
+
+# ---------------------------------------------------------------- scheduler
+def test_schedule_fleet_path_restricts_to_provisioned_configs():
+    import numpy as np
+
+    c = np.array([[5.0], [1.0], [3.0]])
+    s = np.array([[0.99], [0.99], [0.95]])
+    entries = {}
+    configs, workloads = ["cfg0", "cfg1", "cfg2"], ["w0"]
+    for i, ci in enumerate(configs):
+        entries[(ci, "w0")] = ProfileEntry(c[i, 0], s[i, 0], 0.1, 0.05, 1.0, 100)
+    db = ProfileDB(configs, workloads, entries)
+    # unconstrained Algorithm 1 picks the globally cheapest cfg1
+    assert schedule(db, slo_target=0.9)["w0"].config == "cfg1"
+    # but the fleet only provisions cfg0/cfg2 -> cheapest *provisioned* wins
+    alloc = Allocation(counts={"cfg0": 2, "cfg2": 1}, assignment={},
+                       carbon_g_per_hour=1.0, feasible=True, utilization={})
+    dec = schedule(db, slo_target=0.9, allocation=alloc)["w0"]
+    assert dec.config == "cfg2"
+    assert dec.replicas == 1
+    # an allocation naming no profiled config falls back to all configs
+    alien = Allocation(counts={"zzz": 1}, assignment={}, carbon_g_per_hour=0.0,
+                       feasible=True, utilization={})
+    assert schedule(db, slo_target=0.9, allocation=alien)["w0"].config == "cfg1"
+    # 'default' fallback must stay on provisioned instances: cfg1 is the
+    # default but unprovisioned, so the best-SLO provisioned config wins
+    dec = schedule(db, slo_target=1.1, priority="default", default_config="cfg1",
+                   allocation=alloc)["w0"]
+    assert dec.config in ("cfg0", "cfg2") and not dec.feasible

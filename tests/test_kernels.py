@@ -90,6 +90,7 @@ def test_mamba2_ssd_sweep(t, h, p, n, chunk):
     assert _rel_err(st, st_ref) < 1e-3
 
 
+@pytest.mark.slow
 def test_model_chunked_forms_match_refs():
     """The pure-jnp chunked forms used by the backbone agree with the
     per-token recurrences too (independent of the Pallas kernels)."""

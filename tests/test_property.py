@@ -1,9 +1,11 @@
 """Hypothesis property tests on system invariants."""
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.carbon import CHIP_DB, request_carbon, savings_fraction
 from repro.core.spec_decode import expected_tokens_per_round, verify

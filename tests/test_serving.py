@@ -102,6 +102,7 @@ def test_dsd_overlap_hides_probs_transfer():
 
 
 # ---------------------------------------------------------------- engine
+@pytest.mark.slow
 def test_engine_dpd_accounts_kv_transfer():
     cfg = get_reduced_config("yi-6b", num_layers=2)
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -113,6 +114,7 @@ def test_engine_dpd_accounts_kv_transfer():
     assert eng.use["t4"].busy_s > 0          # decode ran on the old chip
 
 
+@pytest.mark.slow
 def test_engine_measures_acceptance():
     tcfg = get_reduced_config("yi-6b", num_layers=2)
     tparams = init_params(jax.random.PRNGKey(0), tcfg)
@@ -161,6 +163,75 @@ def test_simulator_dpd_hits_bandwidth_wall():
     ds2, slow = _reqs(qps=0.2, dur=120.0)
     ok = simulate(ServingMode("dpd", "dpd", "a100", "t4"), t7, slow)
     assert ok.mean_tpot() < jam.mean_tpot()
+
+
+def test_slo_attainment_counts_unfinished_against_total():
+    """Pinned semantics: requests that never finish (tokens_out <
+    output_len) can never count as SLO-met, but they stay in the
+    denominator - an overloaded run that strands half its requests must
+    not report the attainment of the half it finished."""
+    from repro.serving.simulator import ReqTrace, ServingMode, SimResult
+    from repro.serving.workload import Request
+
+    ds = DATASETS["sharegpt"]
+    mode = ServingMode("standalone", "standalone", "a100")
+    ok = ReqTrace(Request(0, 0.0, 10, 5), ttft_s=0.01, tokens_out=5,
+                  first_token_s=0.01, last_token_s=0.05, finish_s=0.05)
+    late = ReqTrace(Request(1, 0.0, 10, 5), ttft_s=10.0, tokens_out=5,
+                    first_token_s=10.0, last_token_s=10.04, finish_s=10.04)
+    unfinished = ReqTrace(Request(2, 0.0, 10, 5), ttft_s=0.01, tokens_out=2,
+                          first_token_s=0.01, last_token_s=0.02)
+    res = SimResult(mode, [ok, late, unfinished], {}, duration_s=10.0)
+    # 1 of 3 met SLO; the unfinished one counts against, not pro-rata
+    assert res.slo_attainment(ds) == pytest.approx(1.0 / 3.0)
+    assert SimResult(mode, [], {}, 0.0).slo_attainment(ds) == 1.0
+
+
+def test_sample_requests_fixed_size_mode():
+    ds = DATASETS["humaneval"]
+    reqs = sample_requests(ds, qps=5.0, duration_s=20.0, seed=1,
+                           fixed_size=(77, 33))
+    assert len(reqs) > 50
+    assert all(r.prompt_len == 77 and r.output_len == 33 for r in reqs)
+    assert all(0 <= r.arrival_s < 20.0 for r in reqs)
+    arrivals = [r.arrival_s for r in reqs]
+    assert arrivals == sorted(arrivals)
+    assert [r.req_id for r in reqs] == list(range(len(reqs)))
+
+
+def test_sample_requests_lognormal_percentile_roundtrip():
+    """The lognormal fit reproduces the dataset's median and quartile
+    spread: a single (mu, sigma) is fitted through log(p50) and the
+    p75/p25 ratio, so those two statistics - not each quartile
+    individually, the table's quartiles are log-asymmetric - round-trip
+    through sampling."""
+    import numpy as np
+
+    ds = DATASETS["sharegpt"]
+    reqs = sample_requests(ds, qps=400.0, duration_s=60.0, seed=0)
+    pl = np.array([r.prompt_len for r in reqs])
+    ol = np.array([r.output_len for r in reqs])
+    assert np.median(pl) == pytest.approx(ds.p50[0], rel=0.1)
+    assert np.median(ol) == pytest.approx(ds.p50[1], rel=0.1)
+    assert np.percentile(pl, 75) / np.percentile(pl, 25) == \
+        pytest.approx(ds.p75[0] / ds.p25[0], rel=0.2)
+    assert np.percentile(ol, 75) / np.percentile(ol, 25) == \
+        pytest.approx(ds.p75[1] / ds.p25[1], rel=0.2)
+
+
+def test_sample_mixture_requests_sizes_and_weights():
+    import numpy as np
+
+    from repro.serving.workload import sample_mixture_requests
+
+    ds = DATASETS["sharegpt"]
+    reqs = sample_mixture_requests(ds, qps=100.0, duration_s=60.0, seed=0)
+    sizes = {(r.prompt_len, r.output_len) for r in reqs}
+    assert sizes <= {ds.p25, ds.p50, ds.p75}
+    frac_p50 = np.mean([(r.prompt_len, r.output_len) == ds.p50 for r in reqs])
+    assert frac_p50 == pytest.approx(0.5, abs=0.05)
+    with pytest.raises(ValueError):
+        sample_mixture_requests(ds, 1.0, 1.0, weights=(1.0, -1.0, 0.0))
 
 
 def test_simulator_carbon_sweeps_without_resim():

@@ -79,6 +79,7 @@ def _mk(arch, seed, **kw):
     return cfg, init_params(jax.random.PRNGKey(seed), cfg)
 
 
+@pytest.mark.slow
 def test_engine_greedy_equivalence_spec_and_dsd():
     """Greedy speculative decoding must emit token-for-token the target
     model's greedy continuation, through the full engine (paged cache,
