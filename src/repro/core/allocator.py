@@ -41,12 +41,14 @@ from repro.core.carbon import (
 )
 from repro.core.disagg import DisaggConfig
 from repro.core.spec_decode import expected_tokens_per_round
-from repro.serving.perfmodel import (
-    decode_cost,
-    dsd_round_time,
-    max_concurrency,
-    prefill_cost,
+from repro.serving.costs import (
+    dpd_kv_bytes,
+    dsd_link_bytes,
+    prefill_charges,
+    spec_round_charges,
+    spec_round_time,
 )
+from repro.serving.perfmodel import decode_cost, max_concurrency
 from repro.serving.workload import Dataset, Request
 from repro.serving.fleet import SizeBuckets
 
@@ -79,6 +81,9 @@ class InstanceProfile:
     tputs: Matrix                    # max sustained QPS per bucket (0 = infeasible)
     carbon_fixed_g_per_hour: float   # embodied amortization + idle power, provisioned
     carbon_per_request_g: Matrix     # dynamic (busy energy) carbon per request
+    # physical chips one instance of this type occupies (dpd/dsd use two);
+    # empty = exempt from `allocate(inventory=...)` availability limits
+    chips: tuple[str, ...] = ()
 
     def feasible_anywhere(self) -> bool:
         return any(t > 0 for row in self.tputs for t in row)
@@ -113,20 +118,15 @@ def _engine_profile(cfg: DisaggConfig, pl: int, ol: int,
     if cap < 1:
         return 0.0, math.inf, {}
 
-    pre = prefill_cost(cfg.target, new_chip, 1, pl)
-    ttft = pre.time_s
-    pre_energy = pre.energy_j
-    pre_busy = {new_chip.name: pre.time_s}
-    if mode.kind == "spec":
-        d = prefill_cost(cfg.draft, new_chip, 1, pl)
-        ttft += d.time_s
-        pre_energy += d.energy_j
-        pre_busy[new_chip.name] += d.time_s
-    elif mode.kind == "dsd":
-        d = prefill_cost(cfg.draft, old_chip, 1, pl)
-        ttft = max(ttft, d.time_s)
-        pre_energy += d.energy_j
-        pre_busy[old_chip.name] = d.time_s
+    # prefill admission: the shared cost schedule (serving/costs.py), so
+    # allocator throughputs price exactly what the simulator/engine charge
+    sched = prefill_charges(mode.kind, cfg.target, cfg.draft,
+                            new_chip, old_chip, pl)
+    ttft = sched.duration_s
+    pre_energy = sum(c.energy_j for _, c, _ in sched.charges)
+    pre_busy: dict[str, float] = {}
+    for chip_name, c, _ in sched.charges:
+        pre_busy[chip_name] = pre_busy.get(chip_name, 0.0) + c.time_s
     if ttft > ds.ttft_slo_s:
         return 0.0, math.inf, {}
 
@@ -136,21 +136,20 @@ def _engine_profile(cfg: DisaggConfig, pl: int, ol: int,
             c = decode_cost(cfg.target, decode_chip, b, ctx)
             return c.time_s, 1.0, c.energy_j, {decode_chip.name: c.time_s}
         k = mode.spec_k
-        draft_chip = new_chip if mode.kind == "spec" else old_chip
-        c_d = decode_cost(cfg.draft, draft_chip, b, ctx)
-        t_d, e_d = c_d.time_s * (k + 1), c_d.energy_j * (k + 1)
-        c_t = decode_cost(cfg.target, new_chip, b, ctx, new_tokens=k + 1)
-        busy = {draft_chip.name: t_d}
+        draft_chip, c_d, c_t = spec_round_charges(
+            mode.kind, cfg.target, cfg.draft, new_chip, old_chip, b, ctx, k)
+        busy = {draft_chip.name: c_d.time_s}
         busy[new_chip.name] = busy.get(new_chip.name, 0.0) + c_t.time_s
         if mode.kind == "spec":
-            t_round = t_d + c_t.time_s
+            t_round = spec_round_time(mode.kind, c_d, c_t,
+                                      mode.interconnect, 0, 0)
         else:
-            ids_b = b * k * 4
-            probs_b = b * k * cfg.draft.vocab_size * 2
-            t_round = dsd_round_time(t_d, c_t.time_s, mode.interconnect,
-                                     ids_b, probs_b, overlap=mode.overlap_comm)
+            ids_b, probs_b = dsd_link_bytes(cfg.draft, b, k)
+            t_round = spec_round_time(mode.kind, c_d, c_t, mode.interconnect,
+                                      ids_b, probs_b,
+                                      overlap=mode.overlap_comm)
         return t_round, expected_tokens_per_round(mode.acceptance, k), \
-            e_d + c_t.energy_j, busy
+            c_d.energy_j + c_t.energy_j, busy
 
     def feasible_at(b: int) -> bool:
         t_round, e_tok, _, _ = round_cost(b)
@@ -175,7 +174,7 @@ def _engine_profile(cfg: DisaggConfig, pl: int, ol: int,
         if mode.kind == "dpd":
             # pools run concurrently; the binding resource is the slowest
             # of prefill pool, decode pool, and the KV link
-            kv_bytes = pl * cfg.target.kv_bytes_per_token() + cfg.target.state_bytes()
+            kv_bytes = dpd_kv_bytes(cfg.target, pl)
             return min(1.0 / max(ttft, 1e-12),
                        b / max(rounds_per_req_at(b) * t_round, 1e-12),
                        1.0 / max(mode.interconnect.transfer_time(kv_bytes), 1e-12))
@@ -261,6 +260,7 @@ def build_gpu_info(
             carbon_fixed_g_per_hour=provisioned_carbon_g_per_hour(
                 cfg.mode.chips(), ci_val, include_idle=include_idle),
             carbon_per_request_g=tuple(dyn),
+            chips=tuple(cfg.mode.chips()),
         )
     return out
 
@@ -278,12 +278,25 @@ class Allocation:
     carbon_g_per_hour: float
     feasible: bool                  # False => some load had no SLO-feasible type
     utilization: dict[str, float]   # mean busy fraction per provisioned type
+    # load (req/s) no provisioned-or-provisionable instance could serve at
+    # all - only nonzero when `inventory` limits bind (feasible is False)
+    unplaced_rate: float = 0.0
+    # one-time boot carbon (g) of instances newly started vs `prev_counts`
+    boot_g: float = 0.0
 
     def total_instances(self) -> int:
         return sum(self.counts.values())
 
     def fleet_counts(self) -> dict[str, int]:
         return {k: v for k, v in self.counts.items() if v > 0}
+
+    def raise_if_unserved(self) -> "Allocation":
+        """Fail loudly when inventory limits left load with no instance."""
+        if self.unplaced_rate > 0:
+            raise ValueError(
+                f"allocation infeasible: {self.unplaced_rate:.3g} req/s had "
+                f"no instance within inventory limits (counts={self.counts})")
+        return self
 
 
 @dataclasses.dataclass
@@ -323,21 +336,85 @@ def allocate(
     gpu_info: dict[str, InstanceProfile],
     slice_factor: int = 4,
     local_search_rounds: int = 3,
+    inventory: Optional[dict[str, int]] = None,
+    prev_counts: Optional[dict[str, int]] = None,
+    boot_carbon_g: float = 0.0,
+    window_s: float = 3600.0,
 ) -> Allocation:
     """Choose instance counts + routing minimizing provisioned carbon/hour.
 
     Greedy first-fit-decreasing over `slice_factor` slices per bucket, then
     a local search that (a) tries to close each instance by repacking its
     load elsewhere and (b) tries to retype each instance. Deterministic:
-    ties break on (carbon, name)."""
+    ties break on (carbon, name).
+
+    `inventory` caps physical chip counts ({"a100": K, "t4": M}, Mélange
+    availability constraints): an instance type consumes one of each chip
+    in its profile's `chips`; types with empty `chips` are exempt. When
+    limits leave load with no instance at all, the result reports it via
+    `feasible=False` + `unplaced_rate` (see `raise_if_unserved`).
+
+    `prev_counts`/`boot_carbon_g`/`window_s` add a switching cost for the
+    autoscaler's re-solves: every instance beyond the still-running count
+    of its type pays a one-time `boot_carbon_g` surcharge, amortized into
+    the hourly objective over the `window_s` the allocation will serve -
+    so scaling up for a short cheap-grid window must win back its boot
+    carbon within that window."""
     if total_request_rate < 0:
         raise ValueError("negative request rate")
     if not gpu_info:
         raise ValueError("gpu_info is empty")
+    if inventory is not None and any(v < 0 for v in inventory.values()):
+        raise ValueError(f"negative inventory: {inventory}")
+    if boot_carbon_g < 0:
+        raise ValueError(f"negative boot_carbon_g: {boot_carbon_g}")
+    if window_s <= 0:
+        raise ValueError(f"window_s must be positive: {window_s}")
+    prev = dict(prev_counts) if prev_counts else {}
+    boot_g_per_hour = boot_carbon_g * 3600.0 / window_s
+    unplaced_rate = 0.0
     mass = sum(c for row in workload_distribution for c in row)
     if mass <= 0:
         return Allocation({}, {}, 0.0, True, {})
     names = sorted(gpu_info)
+
+    # --- inventory helpers ----------------------------------------------
+    def n_of_type(pool: "list[_Instance]", n: str) -> int:
+        return sum(1 for inst in pool if inst.type_name == n)
+
+    def chips_free(pool: "list[_Instance]") -> Optional[dict[str, float]]:
+        """Remaining chip budget, or None when unconstrained."""
+        if inventory is None:
+            return None
+        free = {c: float(k) for c, k in inventory.items()}
+        for inst in pool:
+            for c in gpu_info[inst.type_name].chips:
+                if c in free:
+                    free[c] -= 1
+        return free
+
+    def can_open(n: str, pool: "list[_Instance]",
+                 freeing: "Optional[_Instance]" = None) -> bool:
+        """Could one more instance of type `n` start (optionally retyping
+        `freeing`, whose chips return to the pool first)?"""
+        free = chips_free(pool)
+        if free is None:
+            return True
+        if freeing is not None:
+            for c in gpu_info[freeing.type_name].chips:
+                if c in free:
+                    free[c] += 1
+        need: dict[str, int] = {}
+        for c in gpu_info[n].chips:
+            need[c] = need.get(c, 0) + 1
+        return all(free.get(c, math.inf) >= k for c, k in need.items())
+
+    def boot_surcharge(pool: "list[_Instance]", n: str) -> float:
+        """Amortized boot carbon if opening one more `n` exceeds the
+        still-running count (prev_counts) of that type."""
+        if not boot_g_per_hour:
+            return 0.0
+        return boot_g_per_hour if n_of_type(pool, n) >= prev.get(n, 0) else 0.0
 
     # --- slices, hardest (fewest feasible types, biggest) first ----------
     slices: list[_Slice] = []
@@ -363,6 +440,23 @@ def allocate(
 
     instances: list[_Instance] = []
 
+    def spread(bucket: tuple[int, int], rate: float,
+               pool: "list[_Instance]") -> float:
+        """Absorb up to `rate` of `bucket` into `pool`'s spare capacity
+        (in iteration order); returns the unabsorbed remainder."""
+        remaining = rate
+        for inst in pool:
+            frac_unit = _capacity_frac(gpu_info[inst.type_name], bucket, 1.0)
+            if math.isinf(frac_unit):
+                continue
+            take = min(remaining, max((1.0 - inst.load) / frac_unit, 0.0))
+            if take > 1e-12:
+                inst.add(bucket, take, take * frac_unit)
+                remaining -= take
+            if remaining <= 1e-12:
+                break
+        return remaining
+
     def place(s: _Slice, pool: list[_Instance]) -> bool:
         """Best-fit into an open instance; open the cheapest new one else."""
         best_open = None
@@ -383,10 +477,15 @@ def allocate(
             frac = _capacity_frac(gpu_info[n], s.bucket, s.rate)
             if math.isinf(frac) or frac > 1.0 + 1e-9:
                 continue
+            if not can_open(n, pool):
+                continue
             # amortize the new instance's fixed cost over the capacity this
             # slice consumes - assumes later slices fill the rest, which the
-            # close/retype local search corrects when they do not
-            cost = (frac * gpu_info[n].carbon_fixed_g_per_hour
+            # close/retype local search corrects when they do not; a boot
+            # surcharge (amortized the same way) biases re-solves toward
+            # instances that are already running
+            cost = (frac * (gpu_info[n].carbon_fixed_g_per_hour
+                            + boot_surcharge(pool, n))
                     + _dynamic_g_per_hour(gpu_info[n], s.bucket, s.rate))
             candidates.append((cost, n, frac))
         if not candidates:
@@ -398,15 +497,62 @@ def allocate(
         return True
 
     for s in slices:
-        if not place(s, instances):
-            feasible = False
-            # best-effort: dump onto the max-throughput type regardless of SLO
-            fallback = max(names, key=lambda n: max(
+        if place(s, instances):
+            continue
+        # the slice fits no single instance whole: split it - first across
+        # the spare room of open instances, then onto fresh instances of
+        # the cheapest type that can serve the bucket, filled to capacity
+        # (inventory allowing) - before giving up on feasibility
+        remaining = spread(
+            s.bucket, s.rate,
+            sorted(instances, key=lambda x: (x.load, x.type_name)))
+        while remaining > 1e-12:
+            candidates = []
+            for n in names:
+                frac_unit = _capacity_frac(gpu_info[n], s.bucket, 1.0)
+                if math.isinf(frac_unit) or not can_open(n, instances):
+                    continue
+                # cost of one unit of rate on a fresh, eventually-full
+                # instance of this type
+                cost = (frac_unit * (gpu_info[n].carbon_fixed_g_per_hour
+                                     + boot_surcharge(instances, n))
+                        + _dynamic_g_per_hour(gpu_info[n], s.bucket, 1.0))
+                candidates.append((cost, n, frac_unit))
+            if not candidates:
+                break
+            _, n, frac_unit = min(candidates)
+            take = min(remaining, 1.0 / frac_unit)
+            if take <= 1e-12:       # degenerate tput: cannot make progress
+                break
+            inst = _Instance(n)
+            inst.add(s.bucket, take, take * frac_unit)
+            instances.append(inst)
+            remaining -= take
+        if remaining <= 1e-12:
+            continue
+        feasible = False
+        # best-effort: dump the remainder onto the max-throughput type
+        # regardless of SLO - but inventory limits stay hard, so fall back
+        # to overloading a running instance, and report truly unservable
+        # load via unplaced_rate
+        openable = [n for n in names if can_open(n, instances)]
+        if openable:
+            fallback = max(openable, key=lambda n: max(
                 t for row in gpu_info[n].tputs for t in row))
             inst = _Instance(fallback)
-            frac = _capacity_frac(gpu_info[fallback], s.bucket, s.rate)
-            inst.add(s.bucket, s.rate, min(frac, 1.0) if math.isfinite(frac) else 1.0)
+            frac = _capacity_frac(gpu_info[fallback], s.bucket, remaining)
+            inst.add(s.bucket, remaining,
+                     min(frac, 1.0) if math.isfinite(frac) else 1.0)
             instances.append(inst)
+            continue
+        serving = [inst for inst in instances if math.isfinite(
+            _capacity_frac(gpu_info[inst.type_name], s.bucket, 1.0))]
+        if serving:
+            inst = min(serving, key=lambda x: (x.load, x.type_name))
+            inst.add(s.bucket, remaining,
+                     _capacity_frac(gpu_info[inst.type_name], s.bucket, remaining))
+        else:
+            unplaced_rate += remaining
 
     # --- local search ----------------------------------------------------
     def repack(load: dict[tuple[int, int], float],
@@ -414,19 +560,7 @@ def allocate(
         """Try to absorb `load` into `pool` (mutates on success)."""
         staged = [(inst, dict(inst.rates), inst.load) for inst in pool]
         for bucket, rate in sorted(load.items(), key=lambda kv: -kv[1]):
-            remaining = rate
-            for inst in pool:
-                frac_unit = _capacity_frac(gpu_info[inst.type_name], bucket, 1.0)
-                if math.isinf(frac_unit):
-                    continue
-                room_rate = max((1.0 - inst.load) / frac_unit, 0.0)
-                take = min(remaining, room_rate)
-                if take > 1e-12:
-                    inst.add(bucket, take, take * frac_unit)
-                    remaining -= take
-                if remaining <= 1e-12:
-                    break
-            if remaining > 1e-12:
+            if spread(bucket, rate, pool) > 1e-12:
                 for inst, rates, ld in staged:   # roll back
                     inst.rates, inst.load = rates, ld
                 return False
@@ -445,6 +579,9 @@ def allocate(
             cur = gpu_info[inst.type_name]
             cur_cost = cur.carbon_fixed_g_per_hour + sum(
                 _dynamic_g_per_hour(cur, b, r) for b, r in inst.rates.items())
+            if boot_g_per_hour and \
+                    n_of_type(instances, inst.type_name) > prev.get(inst.type_name, 0):
+                cur_cost += boot_g_per_hour   # this instance is itself a boot
             for n in names:
                 if n == inst.type_name:
                     continue
@@ -452,8 +589,12 @@ def allocate(
                 fracs = [_capacity_frac(cand, b, r) for b, r in inst.rates.items()]
                 if any(math.isinf(f) for f in fracs) or sum(fracs) > 1.0 + 1e-9:
                     continue
-                cost = cand.carbon_fixed_g_per_hour + sum(
-                    _dynamic_g_per_hour(cand, b, r) for b, r in inst.rates.items())
+                if not can_open(n, instances, freeing=inst):
+                    continue
+                cost = (cand.carbon_fixed_g_per_hour
+                        + boot_surcharge(instances, n)
+                        + sum(_dynamic_g_per_hour(cand, b, r)
+                              for b, r in inst.rates.items()))
                 if cost < cur_cost - 1e-9:
                     inst.type_name, inst.load = n, sum(fracs)
                     cur, cur_cost = cand, cost
@@ -477,7 +618,14 @@ def allocate(
             assignment[bucket][inst.type_name] = \
                 assignment[bucket].get(inst.type_name, 0.0) + rate
     utilization = {n: load_by_type.get(n, 0.0) / counts[n] for n in counts}
-    return Allocation(counts, assignment, carbon, feasible, utilization)
+    boot_g = boot_carbon_g * sum(
+        max(counts.get(n, 0) - prev.get(n, 0), 0)
+        for n in set(counts) | set(prev))
+    carbon += boot_g * 3600.0 / window_s
+    if unplaced_rate > 0:
+        feasible = False
+    return Allocation(counts, assignment, carbon, feasible, utilization,
+                      unplaced_rate=unplaced_rate, boot_g=boot_g)
 
 
 def fleet_assignment(alloc: Allocation, fleet_replicas: Sequence[DisaggConfig],

@@ -252,6 +252,14 @@ class CarbonTrace:
                 vals.append(float(b))
         return CarbonTrace(tuple(times), tuple(vals))
 
+    def scaled(self, time_scale: float) -> "CarbonTrace":
+        """Compress/stretch the time axis by `time_scale` (CI values keep
+        their shape): a 24 h daily CSV replayed over a 600 s simulation is
+        `trace.scaled(600 / 86400)`."""
+        if time_scale <= 0:
+            raise ValueError(f"time_scale must be positive: {time_scale}")
+        return CarbonTrace(tuple(t * time_scale for t in self.times_s), self.ci)
+
     # ---------------------------------------------------------- evaluation
     def ci_at(self, t_s: float) -> float:
         import bisect

@@ -1,0 +1,392 @@
+"""Carbon-aware autoscaling: re-solve the fleet per grid-intensity window.
+
+GreenLLM's carbon wins depend on grid intensity (§6, Fig. 14), and real
+grids swing 2-3x within a day - but a fleet provisioned once (fleet.py +
+core/allocator.py) holds its allocation for the whole run, burning
+embodied + idle carbon through every clean-grid trough and serving dirty
+-grid peaks with whatever mix the average favored. This module is the
+EcoServe-style online controller on top of the steppable `ReplicaSim`:
+
+  - arrivals are routed ONLINE by the shared `OnlineDispatcher`
+    (fleet.py) against live replica state - no offline pre-partitioning;
+  - at every `CarbonTrace` window boundary the Mélange allocator is
+    re-solved for the window's grid intensity and arrival rate, with
+    per-chip `inventory` limits and a switching cost (`boot_carbon_g`
+    amortized over the window) so thrashing instances between windows is
+    penalized;
+  - scale-up boots new replicas with a boot-time penalty: the instance
+    reserves (and idles) from the boundary but serves only `boot_s`
+    later (`ReplicaSim(start_s=...)` semantics);
+  - scale-down drains surplus replicas: they take no new arrivals,
+    finish their backlog, and retire when idle;
+  - carbon: each replica's busy energy is priced per charged segment
+    against the trace (core/carbon.py segment accounting), and its
+    idle/boot power + embodied amortization cover its whole reservation
+    span [reserve_start, retired] - so an autoscaled fleet pays for every
+    second it held hardware, including boots that never served.
+
+`simulate_autoscaled` is deterministic for fixed inputs, and
+benchmarks/autoscale_sweep.py compares it against the best static
+allocation on the same stream (the PR's acceptance headline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.allocator import (
+    Allocation,
+    InstanceProfile,
+    allocate,
+    bucket_workload,
+    build_gpu_info,
+)
+from repro.core.carbon import CarbonBreakdown, CarbonTrace, resolve_ci
+from repro.core.disagg import DisaggConfig
+from repro.serving.fleet import OnlineDispatcher, SizeBuckets
+from repro.serving.simulator import ReplicaSim, SimResult
+from repro.serving.workload import Dataset, Request
+
+
+# ---------------------------------------------------------------------------
+# Controller configuration
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AutoscalePolicy:
+    """Knobs of the window controller."""
+
+    boot_s: float = 30.0            # boot delay before a new replica serves
+    # proactive: initiate boots boot_s before the window boundary (the
+    # boundary is known from the trace), so capacity is live when the
+    # window opens; the reservation - and its idle carbon - still starts
+    # at boot initiation. False = reactive: boot at the boundary, serve
+    # boot_s into the window. NOTE: a proactive boot can overlap the
+    # outgoing fleet's reservations by up to boot_s (the handover
+    # transient); `inventory` is enforced against replicas still
+    # *draining* at the boundary, not against that transient.
+    proactive: bool = True
+    # one-time carbon surcharge per boot fed to the allocator's switching
+    # term; None = derived from the dirtiest catalog profile's fixed rate
+    # over boot_s (a boot wastes at least its own reservation)
+    boot_carbon_g: Optional[float] = None
+    inventory: Optional[dict[str, int]] = None   # per-chip-type caps
+    utilization: float = 0.6        # per-instance load target (head-room)
+    min_window_s: float = 0.0       # merge trace windows shorter than this
+    slice_factor: int = 4
+
+    def __post_init__(self):
+        if self.boot_s < 0:
+            raise ValueError(f"negative boot_s: {self.boot_s}")
+
+
+# ---------------------------------------------------------------------------
+# Per-replica lifecycle record
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _Replica:
+    rid: int
+    cfg: DisaggConfig
+    sim: ReplicaSim
+    reserve_start_s: float          # hardware held from here (boot begins)
+    serve_start_s: float            # reserve_start + boot_s (sim.start_s)
+    drain_mark_s: Optional[float] = None
+    retired_s: Optional[float] = None
+
+    @property
+    def active(self) -> bool:
+        return self.drain_mark_s is None
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaSpan:
+    """One replica's simulation plus its hardware reservation window."""
+
+    rid: int
+    cfg: DisaggConfig
+    result: SimResult
+    reserve_start_s: float
+    retired_s: float
+
+    def reserved(self) -> SimResult:
+        """The result re-windowed to the reservation span, so the stock
+        `SimResult.account(include_idle=True)` charges idle power and
+        embodied amortization for every reserved second (boot included)."""
+        return dataclasses.replace(self.result,
+                                   start_s=self.reserve_start_s,
+                                   duration_s=self.retired_s)
+
+
+@dataclasses.dataclass
+class AutoscaleResult:
+    """Autoscaled run: per-replica spans + exact merged aggregate."""
+
+    spans: list[ReplicaSpan]
+    merged: SimResult
+    windows: list[dict]             # per-window controller log
+
+    def slo_attainment(self, ds: Dataset) -> float:
+        return self.merged.slo_attainment(ds)
+
+    @property
+    def total_tokens(self) -> int:
+        return self.merged.total_tokens
+
+    def peak_instances(self) -> int:
+        return max((w["instances"] for w in self.windows), default=0)
+
+    def boots(self) -> int:
+        return sum(w["boots"] for w in self.windows)
+
+    def drains(self) -> int:
+        return sum(w["drains"] for w in self.windows)
+
+    def account(self, ci: "float | CarbonTrace",
+                lifetimes: Optional[dict[str, float]] = None,
+                include_idle: bool = True) -> CarbonBreakdown:
+        """Total carbon: per-replica busy segments priced on the trace,
+        idle/boot + embodied over each replica's own reservation span
+        (include_idle=True is the honest mode for autoscaling - an idle
+        reserved instance is exactly what scaling down eliminates)."""
+        total = CarbonBreakdown.zero()
+        for span in self.spans:
+            total = total + span.reserved().account(
+                ci, lifetimes=lifetimes, include_idle=include_idle)
+        return total
+
+    def carbon_per_token(self, ci: "float | CarbonTrace",
+                         include_idle: bool = True) -> float:
+        return self.account(ci, include_idle=include_idle).total_g / \
+            max(self.total_tokens, 1)
+
+    def describe(self) -> str:
+        return " | ".join(
+            f"[{w['t0']:.0f},{w['t1']:.0f})s ci={w['ci']:.0f} "
+            f"rate={w['rate']:.1f}: " +
+            (" + ".join(f"{k}x {n}" for n, k in sorted(w['counts'].items()))
+             or "(empty)")
+            for w in self.windows)
+
+
+# ---------------------------------------------------------------------------
+# ci-affine gpu_info: profiles are built once and re-priced per window
+# ---------------------------------------------------------------------------
+class _AffineProfiles:
+    """`build_gpu_info` output as an affine function of grid intensity.
+
+    Throughputs are CI-independent; fixed and dynamic carbon are affine in
+    CI (embodied + idle*ci, energy*ci). Building the expensive engine
+    profiles once and re-pricing per window keeps the controller's
+    re-solve cost proportional to the solver, not the profiler."""
+
+    def __init__(self, catalog: Sequence[DisaggConfig], dataset: Dataset,
+                 buckets: SizeBuckets, utilization: float):
+        self._at0 = build_gpu_info(catalog, dataset, buckets, ci=0.0,
+                                   utilization=utilization, include_idle=True)
+        self._at1 = build_gpu_info(catalog, dataset, buckets, ci=1.0,
+                                   utilization=utilization, include_idle=True)
+
+    def at(self, ci: float) -> dict[str, InstanceProfile]:
+        out = {}
+        for name, p0 in self._at0.items():
+            p1 = self._at1[name]
+            fixed = p0.carbon_fixed_g_per_hour + ci * (
+                p1.carbon_fixed_g_per_hour - p0.carbon_fixed_g_per_hour)
+            dyn = tuple(
+                tuple(a + ci * (b - a) for a, b in zip(r0, r1))
+                for r0, r1 in zip(p0.carbon_per_request_g,
+                                  p1.carbon_per_request_g))
+            out[name] = dataclasses.replace(
+                p0, carbon_fixed_g_per_hour=fixed, carbon_per_request_g=dyn)
+        return out
+
+
+def _window_bounds(trace: CarbonTrace, t_end: float,
+                   min_window_s: float) -> list[float]:
+    """[0, ...trace boundaries..., t_end], short windows merged forward."""
+    bounds = [0.0]
+    for t in trace.times_s:
+        if 0.0 < t < t_end and t - bounds[-1] >= min_window_s:
+            bounds.append(t)
+    if t_end - bounds[-1] < min_window_s and len(bounds) > 1:
+        bounds.pop()
+    bounds.append(t_end)
+    return bounds
+
+
+# ---------------------------------------------------------------------------
+# The controller
+# ---------------------------------------------------------------------------
+def simulate_autoscaled(
+    catalog: Sequence[DisaggConfig],
+    dataset: Dataset,
+    requests: Sequence[Request],
+    trace: CarbonTrace,
+    policy: AutoscalePolicy = AutoscalePolicy(),
+    buckets: Optional[SizeBuckets] = None,
+    seed: int = 0,
+) -> AutoscaleResult:
+    """Serve `requests` with a fleet re-allocated at every grid window.
+
+    Per window [t0, t1): the window's arrival rate and size distribution
+    (oracle estimates from the stream - swap in a forecaster by pre-
+    transforming `requests`) and the window's mean grid intensity feed
+    `allocate(...)` with `prev_counts` (running replicas are boot-free) and
+    the policy's inventory/boot terms; the fleet is reconciled to the
+    solution (boot/drain), the window's arrivals are routed online, and
+    every replica advances to the boundary. Deterministic for fixed
+    inputs: routing is deterministic and replica seeds derive from `seed`
+    + boot order."""
+    reqs = sorted(requests, key=lambda r: (r.arrival_s, r.req_id))
+    if not reqs:
+        raise ValueError("no requests to serve")
+    if buckets is None:
+        buckets = SizeBuckets.from_dataset(dataset)
+    profiles = _AffineProfiles(catalog, dataset, buckets, policy.utilization)
+    by_name = {c.name: c for c in catalog}
+    ctx_estimate = int(np.mean([r.prompt_len + r.output_len for r in reqs]))
+
+    t_end = reqs[-1].arrival_s + 1e-9
+    bounds = _window_bounds(trace, t_end, policy.min_window_s)
+
+    disp = OnlineDispatcher()
+    replicas: dict[int, _Replica] = {}
+    next_rid = 0
+    windows: list[dict] = []
+    i_req = 0
+
+    for w0, w1 in zip(bounds, bounds[1:]):
+        window_s = w1 - w0
+        ci_w = resolve_ci(trace, w0, w1)
+        # --- oracle window estimates -----------------------------------
+        j = i_req
+        while j < len(reqs) and reqs[j].arrival_s < w1:
+            j += 1
+        arrivals = reqs[i_req:j]
+        rate = len(arrivals) / window_s
+        # --- re-solve the allocation for this window -------------------
+        active = [r for r in replicas.values() if r.active]
+        prev_counts: dict[str, int] = {}
+        for r in active:
+            prev_counts[r.cfg.name] = prev_counts.get(r.cfg.name, 0) + 1
+        if arrivals:
+            info_w = profiles.at(ci_w)
+            boot_g = policy.boot_carbon_g
+            if boot_g is None:
+                # a boot wastes at least its own reservation: boot_s at
+                # the dirtiest profile's fixed (embodied + idle) rate
+                boot_g = max(p.carbon_fixed_g_per_hour
+                             for p in info_w.values()) * policy.boot_s / 3600.0
+            # inventory is a *physical* cap: chips still reserved by
+            # draining (not yet retired) replicas are unavailable to this
+            # window's solve
+            inv = policy.inventory
+            if inv is not None:
+                held: dict[str, int] = {}
+                for r in replicas.values():
+                    if not r.active and r.retired_s is None:
+                        for c in r.cfg.mode.chips():
+                            held[c] = held.get(c, 0) + 1
+                if held:
+                    inv = {c: max(k - held.get(c, 0), 0)
+                           for c, k in inv.items()}
+            dist = bucket_workload(arrivals, buckets)
+            alloc = allocate(dist, rate, info_w,
+                             slice_factor=policy.slice_factor,
+                             inventory=inv,
+                             prev_counts=prev_counts,
+                             boot_carbon_g=boot_g,
+                             window_s=window_s)
+        else:
+            alloc = Allocation({}, {}, 0.0, True, {})
+        # --- reconcile: boot up / drain down ---------------------------
+        boots = drains = 0
+        for name in sorted(set(alloc.counts) | set(prev_counts)):
+            target = alloc.counts.get(name, 0)
+            have = prev_counts.get(name, 0)
+            for _ in range(target - have):
+                reserve = max(w0 - policy.boot_s, 0.0) if policy.proactive \
+                    else w0
+                sim = ReplicaSim(by_name[name].mode, by_name[name].target,
+                                 draft_cfg=by_name[name].draft,
+                                 seed=seed + next_rid,
+                                 ctx_estimate=ctx_estimate,
+                                 start_s=reserve + policy.boot_s)
+                rep = _Replica(next_rid, by_name[name], sim,
+                               reserve_start_s=reserve,
+                               serve_start_s=reserve + policy.boot_s)
+                replicas[next_rid] = rep
+                disp.add(next_rid, rep.cfg, ready_s=rep.serve_start_s)
+                next_rid += 1
+                boots += 1
+            if have > target:
+                # drain the emptiest replicas of this type first - they
+                # finish their backlog (and stop burning idle) soonest
+                victims = sorted(
+                    (r for r in active if r.cfg.name == name and r.active),
+                    key=lambda r: (disp.busy_until[r.rid], r.rid))
+                for r in victims[:have - target]:
+                    r.drain_mark_s = w0
+                    disp.remove(r.rid)
+                    drains += 1
+        # --- route this window's arrivals online -----------------------
+        pools: dict[tuple[int, int], list[int]] = {}
+        for bucket, shares in alloc.assignment.items():
+            pool = [r.rid for n, rt in sorted(shares.items()) if rt > 0
+                    for r in replicas.values()
+                    if r.active and r.cfg.name == n]
+            if pool:
+                pools[bucket] = sorted(pool)
+        everyone = sorted(r.rid for r in replicas.values() if r.active)
+        if arrivals and not everyone:
+            raise ValueError(
+                f"window [{w0}, {w1}): arrivals but no active replica - "
+                f"inventory limits too tight? (alloc={alloc.counts}, "
+                f"unplaced={alloc.unplaced_rate:.3g} req/s)")
+        for req in arrivals:
+            pool = pools.get(buckets.index(req.prompt_len, req.output_len),
+                             everyone)
+            rid = disp.pick(req, pool or everyone)
+            replicas[rid].sim.submit(req)
+        i_req = j
+        # --- advance every live engine to the boundary -----------------
+        for r in replicas.values():
+            if r.retired_s is not None:
+                continue
+            r.sim.advance_to(w1)
+            if r.active:
+                disp.sync(r.rid, r.sim.clock)
+            elif r.sim.idle:
+                r.retired_s = max(r.drain_mark_s, r.sim.result().duration_s)
+        windows.append({
+            "t0": w0, "t1": w1, "ci": ci_w, "rate": rate,
+            "counts": dict(alloc.counts), "boots": boots, "drains": drains,
+            "instances": sum(alloc.counts.values()),
+            "alloc_feasible": alloc.feasible,
+            "unplaced_rate": alloc.unplaced_rate,
+            "boot_g": alloc.boot_g,
+        })
+
+    # --- run out the backlog ------------------------------------------
+    for r in replicas.values():
+        if r.retired_s is None:
+            r.sim.drain()
+    fleet_end = max((r.sim.result().duration_s for r in replicas.values()),
+                    default=t_end)
+    fleet_end = max(fleet_end, bounds[-1])
+    spans = []
+    for r in replicas.values():
+        if r.retired_s is None:
+            # drained-at-end replicas retire when their own backlog ends;
+            # still-active ones hold hardware until the fleet winds down
+            end = max(r.drain_mark_s, r.sim.result().duration_s) \
+                if r.drain_mark_s is not None else fleet_end
+            r.retired_s = end
+        spans.append(ReplicaSpan(r.rid, r.cfg, r.sim.result(),
+                                 r.reserve_start_s, r.retired_s))
+    spans.sort(key=lambda s: s.rid)
+    if not spans:
+        raise ValueError("controller provisioned no replicas")
+    merged = SimResult.merge([s.result for s in spans])
+    return AutoscaleResult(spans, merged, windows)

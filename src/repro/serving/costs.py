@@ -1,0 +1,128 @@
+"""Shared cost schedule: how one engine iteration is priced and placed.
+
+The cluster simulator (simulator.py) and the real-compute engine
+(engine.py) must price iterations *identically* - same chips charged, same
+roofline costs, same serialization/overlap rules - or the simulator stops
+being a faithful stand-in for the engine at scale (the engine<->simulator
+parity test in tests/test_engine_sim_parity.py enforces this). This module
+is the single source of truth for that schedule:
+
+  prefill_charges     which chips a prefill admission charges, when, and
+                      how long the admission occupies the engine loop
+                      (spec serializes draft+target on the new chip; dsd
+                      runs them on parallel pools)
+  spec_round_charges  the draft K+1 sequential single-token steps + one
+                      target verify pass of a speculative round
+  spec_round_time     wall time of that round (dsd overlaps the probs
+                      transfer behind the target forward, Fig. 7)
+  dsd_link_bytes      token-id + draft-prob bytes crossing the link
+  dpd_kv_bytes        KV cache + recurrent state shipped per request in
+                      Disg-Pref-Decode
+
+`perfmodel` owns the per-step rooflines; this module owns the *schedule*
+built from them. All expressions are kept operation-for-operation equal to
+the pre-refactor inlined versions so golden parity holds bit-exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.carbon import ChipSpec
+from repro.models.config import ModelConfig
+from repro.serving.perfmodel import (
+    Interconnect,
+    StepCost,
+    decode_cost,
+    dsd_round_time,
+    prefill_cost,
+)
+
+# (chip name, step cost, start offset relative to the admission instant)
+Charge = tuple[str, StepCost, float]
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillSchedule:
+    """One prefill admission: per-chip charges + loop occupancy."""
+
+    charges: tuple[Charge, ...]
+    duration_s: float
+
+
+def prefill_charges(
+    kind: str,
+    target_cfg: ModelConfig,
+    draft_cfg: Optional[ModelConfig],
+    new_chip: ChipSpec,
+    old_chip: Optional[ChipSpec],
+    prompt_len: int,
+) -> PrefillSchedule:
+    """Schedule of one prefill admission for any serving kind.
+
+    standalone/dpd: one target prefill on the new chip (dpd's KV link
+    transfer is a separate pipelined resource, priced by the caller via
+    `dpd_kv_bytes`). spec: draft prefill serialized after the target on the
+    same chip. dsd: draft prefill on the old pool in parallel."""
+    c_t = prefill_cost(target_cfg, new_chip, 1, prompt_len)
+    charges: list[Charge] = [(new_chip.name, c_t, 0.0)]
+    dur = c_t.time_s
+    if kind == "spec":
+        c_d = prefill_cost(draft_cfg, new_chip, 1, prompt_len)
+        charges.append((new_chip.name, c_d, c_t.time_s))
+        dur += c_d.time_s                      # serialized on one chip
+    elif kind == "dsd":
+        c_d = prefill_cost(draft_cfg, old_chip, 1, prompt_len)
+        charges.append((old_chip.name, c_d, 0.0))
+        dur = max(dur, c_d.time_s)             # parallel pools
+    return PrefillSchedule(tuple(charges), dur)
+
+
+def spec_round_charges(
+    kind: str,
+    target_cfg: ModelConfig,
+    draft_cfg: ModelConfig,
+    new_chip: ChipSpec,
+    old_chip: Optional[ChipSpec],
+    batch: int,
+    ctx: int,
+    k: int,
+) -> tuple[ChipSpec, StepCost, StepCost]:
+    """(draft chip, draft cost, target cost) of one speculative round.
+
+    The DRAFT is autoregressive: K+1 sequential single-token steps, each
+    re-reading the weights; the TARGET verifies all K+1 positions in one
+    pass."""
+    draft_chip = new_chip if kind == "spec" else old_chip
+    c_d1 = decode_cost(draft_cfg, draft_chip, batch, ctx)
+    c_d = dataclasses.replace(c_d1, time_s=c_d1.time_s * (k + 1),
+                              energy_j=c_d1.energy_j * (k + 1))
+    c_t = decode_cost(target_cfg, new_chip, batch, ctx, new_tokens=k + 1)
+    return draft_chip, c_d, c_t
+
+
+def spec_round_time(
+    kind: str,
+    c_draft: StepCost,
+    c_target: StepCost,
+    interconnect: Interconnect,
+    ids_bytes: float,
+    probs_bytes: float,
+    overlap: bool = True,
+) -> float:
+    """Wall time of one round: colocated spec serializes draft+target;
+    dsd follows the Fig. 7 communication-overlap schedule."""
+    if kind == "spec":
+        return c_draft.time_s + c_target.time_s
+    return dsd_round_time(c_draft.time_s, c_target.time_s, interconnect,
+                          ids_bytes, probs_bytes, overlap=overlap)
+
+
+def dsd_link_bytes(draft_cfg: ModelConfig, batch: int, k: int) -> tuple[int, int]:
+    """(token-id bytes, fp16 draft-prob bytes) one dsd round ships."""
+    return batch * k * 4, batch * k * draft_cfg.vocab_size * 2
+
+
+def dpd_kv_bytes(cfg: ModelConfig, prompt_len: int) -> float:
+    """Bytes Disg-Pref-Decode ships per request: prompt KV + recurrent state."""
+    return prompt_len * cfg.kv_bytes_per_token() + cfg.state_bytes()

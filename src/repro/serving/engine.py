@@ -30,8 +30,14 @@ from repro.core.spec_decode import SpecConfig, spec_decode_round
 from repro.models import backbone
 from repro.models.config import ModelConfig
 from repro.models.layers import DEFAULT_EXEC, ExecConfig
+from repro.serving.costs import (
+    dpd_kv_bytes,
+    prefill_charges,
+    spec_round_charges,
+    spec_round_time,
+)
 from repro.serving.kv_cache import PagedKVPool
-from repro.serving.perfmodel import Interconnect, decode_cost, dsd_round_time, prefill_cost
+from repro.serving.perfmodel import Interconnect, decode_cost
 from repro.serving.simulator import ChipUse
 
 
@@ -122,9 +128,10 @@ class ServingEngine:
         self.waiting.append(r)
         return r
 
-    def _charge(self, chip, cost):
-        self.use[chip.name].busy_s += cost.time_s
-        self.use[chip.name].energy_j += cost.energy_j
+    def _charge(self, chip, cost, at_s: Optional[float] = None):
+        # records (start, end, energy) segments like the simulator, so
+        # engine runs can also be priced against a CarbonTrace timeline
+        self.use[chip.name].add(self.clock if at_s is None else at_s, cost)
         return cost.time_s
 
     def _split(self):
@@ -140,8 +147,14 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def step(self) -> bool:
-        """One engine iteration. Returns False when fully idle."""
-        if self.waiting and len(self.active) < self.max_batch:
+        """One engine iteration. Returns False when fully idle.
+
+        Arrival-aware (same admission as the simulator's loop): a waiting
+        request takes prefill priority once it has arrived; future
+        arrivals only pull the clock forward when the engine is otherwise
+        idle - decode never gets clock-warped past pending work."""
+        if self.waiting and len(self.active) < self.max_batch and (
+                self.waiting[0].arrival_s <= self.clock or not self.active):
             self._do_prefill(self.waiting.popleft())
             return True
         if self.active:
@@ -166,18 +179,21 @@ class ServingEngine:
         logits, cache = backbone.prefill(self.params, batch, self.cfg, self.exec_cfg)
         self.pool.allocate(r.req_id, pl)
         self.pool.scatter([r.req_id], cache["k"], cache["v"])
-        dur = self._charge(self.new_chip, prefill_cost(self.cfg, self.new_chip, 1, pl))
-
         if self.kind in ("spec", "dsd"):
             _, dcache = backbone.prefill(self.draft_params, batch, self.draft_cfg, self.exec_cfg)
             self.draft_pool.allocate(r.req_id, pl)
             self.draft_pool.scatter([r.req_id], dcache["k"], dcache["v"])
-            chip = self.new_chip if self.kind == "spec" else self.old_chip
-            ddur = self._charge(chip, prefill_cost(self.draft_cfg, chip, 1, pl))
-            dur = dur + ddur if self.kind == "spec" else max(dur, ddur)
-        elif self.kind == "dpd":
-            # KV crosses to the decode pool
-            nbytes = pl * self.cfg.kv_bytes_per_token()
+
+        # pricing: the shared cost schedule (costs.py), identical to the
+        # cluster simulator's prefill admission
+        sched = prefill_charges(self.kind, self.cfg, self.draft_cfg,
+                                self.new_chip, self.old_chip, pl)
+        for chip_name, cost, rel_s in sched.charges:
+            self._charge(CHIP_DB[chip_name], cost, at_s=self.clock + rel_s)
+        dur = sched.duration_s
+        if self.kind == "dpd":
+            # KV + recurrent state cross to the decode pool
+            nbytes = dpd_kv_bytes(self.cfg, pl)
             self.link_bytes += nbytes
             dur += self.interconnect.transfer_time(nbytes)
 
@@ -235,23 +251,20 @@ class ServingEngine:
         self._commit(self.pool, sids, out["target_cache"], np.asarray(out["target_cache"]["pos"]))
         self._commit(self.draft_pool, sids, out["draft_cache"], np.asarray(out["draft_cache"]["pos"]))
 
-        # timing/energy: draft = K+1 *sequential* single-token steps (weights
-        # re-read per step); target = one verify pass over K+1 positions
+        # timing/energy: the shared cost schedule (costs.py) - draft = K+1
+        # *sequential* single-token steps (weights re-read per step);
+        # target = one verify pass over K+1 positions
         ctx = int(np.mean([self.pool.seq(s).length for s in sids]))
-        draft_chip = self.new_chip if self.kind == "spec" else self.old_chip
-        c_d1 = decode_cost(self.draft_cfg, draft_chip, b, ctx)
-        c_d = dataclasses.replace(c_d1, time_s=c_d1.time_s * (k + 1),
-                                  energy_j=c_d1.energy_j * (k + 1))
-        c_t = decode_cost(self.cfg, self.new_chip, b, ctx, new_tokens=k + 1)
+        draft_chip, c_d, c_t = spec_round_charges(
+            self.kind, self.cfg, self.draft_cfg,
+            self.new_chip, self.old_chip, b, ctx, k)
         self._charge(draft_chip, c_d)
-        self._charge(self.new_chip, c_t)
+        self._charge(self.new_chip, c_t, at_s=self.clock + c_d.time_s)
         if self.kind == "dsd":
             self.link_bytes += out["bytes_token_ids"] + out["bytes_draft_probs"]
-            round_t = dsd_round_time(
-                c_d.time_s, c_t.time_s, self.interconnect,
-                out["bytes_token_ids"], out["bytes_draft_probs"])
-        else:
-            round_t = c_d.time_s + c_t.time_s
+        round_t = spec_round_time(
+            self.kind, c_d, c_t, self.interconnect,
+            out.get("bytes_token_ids", 0), out.get("bytes_draft_probs", 0))
         self.clock += round_t
 
         toks = np.asarray(out["tokens"])

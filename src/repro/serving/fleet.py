@@ -34,7 +34,13 @@ from typing import Optional, Sequence
 from repro.core.carbon import CarbonBreakdown, CarbonTrace, DEFAULT_CI
 from repro.core.disagg import DisaggConfig
 from repro.core.spec_decode import expected_tokens_per_round
-from repro.serving.perfmodel import decode_cost, dsd_round_time, prefill_cost
+from repro.serving.costs import (
+    dpd_kv_bytes,
+    dsd_link_bytes,
+    spec_round_charges,
+    spec_round_time,
+)
+from repro.serving.perfmodel import decode_cost, prefill_cost
 from repro.serving.simulator import CHIP_DB, SimResult, simulate
 from repro.serving.workload import Dataset, Request
 
@@ -116,23 +122,27 @@ def estimate_service_s(cfg: DisaggConfig, prompt_len: int, output_len: int,
         return pre + max(output_len - 1, 0) * dec
     if mode.kind == "dpd":
         dec = decode_cost(cfg.target, old_chip, b, ctx).time_s / b
-        return pre + max(output_len - 1, 0) * dec
+        # the prompt KV cache crosses the interconnect before decode can
+        # start; without this term least-loaded routing systematically
+        # under-weights dpd replicas (the link is often the binding
+        # resource - Fig. 4)
+        tx = mode.interconnect.transfer_time(dpd_kv_bytes(cfg.target, prompt_len))
+        return pre + tx + max(output_len - 1, 0) * dec
     # spec / dsd: draft K+1 sequential steps + one target verify per round
+    # (the shared cost schedule, so dispatcher weights track the simulator)
     k = mode.spec_k
     e_tok = expected_tokens_per_round(mode.acceptance, k)
-    draft_chip = new_chip if mode.kind == "spec" else old_chip
-    t_d = decode_cost(cfg.draft, draft_chip, b, ctx).time_s * (k + 1)
-    t_t = decode_cost(cfg.target, new_chip, b, ctx, new_tokens=k + 1).time_s
+    _, c_d, c_t = spec_round_charges(mode.kind, cfg.target, cfg.draft,
+                                     new_chip, old_chip, b, ctx, k)
     if mode.kind == "spec":
         pre += prefill_cost(cfg.draft, new_chip, 1, prompt_len).time_s
-        round_s = t_d + t_t
+        round_s = spec_round_time(mode.kind, c_d, c_t, mode.interconnect, 0, 0)
     else:
         # same Fig. 7 schedule the simulator prices: ids ship after the
         # draft, the probs transfer can hide behind the target forward
-        ids_b = b * k * 4
-        probs_b = b * k * cfg.draft.vocab_size * 2
-        round_s = dsd_round_time(t_d, t_t, mode.interconnect, ids_b, probs_b,
-                                 overlap=mode.overlap_comm)
+        ids_b, probs_b = dsd_link_bytes(cfg.draft, b, k)
+        round_s = spec_round_time(mode.kind, c_d, c_t, mode.interconnect,
+                                  ids_b, probs_b, overlap=mode.overlap_comm)
     rounds = max(output_len - 1, 0) / max(e_tok, 1.0)
     return pre + rounds * round_s / b
 
@@ -181,40 +191,84 @@ class SizeBuckets:
         return SizeBuckets(p_edges, o_edges)
 
 
-class _Dispatcher:
-    """Deterministic earliest-finish dispatcher over a replica subset."""
+class OnlineDispatcher:
+    """Deterministic earliest-finish dispatcher over a *live* replica set.
 
-    def __init__(self, replicas: list[DisaggConfig], start_s: float):
-        self.replicas = replicas
-        self.busy_until = [start_s] * len(replicas)
+    One arrival at a time: `pick` routes a request to the replica whose
+    estimated completion of already-routed work is earliest. Replicas can
+    join (`add`, e.g. an autoscaler boot - `ready_s` models the boot
+    penalty) and leave (`remove`, a drain) between arrivals, and `sync`
+    floors a replica's backlog estimate at its simulator's actual clock so
+    estimate drift never lets the dispatcher schedule into a replica's
+    past. The offline `route_least_loaded`/`route_bucketed` partitioners
+    and the autoscaler's window loop both run on this dispatcher, so
+    static-fleet and autoscaled runs route identically.
+    """
+
+    def __init__(self):
+        self.configs: dict[int, DisaggConfig] = {}
+        self.busy_until: dict[int, float] = {}
         self._est_cache: dict[tuple[int, int, int], float] = {}
 
-    def _est(self, idx: int, req: Request) -> float:
-        key = (id(self.replicas[idx]), req.prompt_len, req.output_len)
+    def add(self, rid: int, cfg: DisaggConfig, ready_s: float = 0.0) -> None:
+        if rid in self.configs:
+            raise ValueError(f"replica id {rid} already registered")
+        self.configs[rid] = cfg
+        self.busy_until[rid] = ready_s
+
+    def remove(self, rid: int) -> None:
+        cfg = self.configs.pop(rid)
+        self.busy_until.pop(rid)
+        # the estimate cache is keyed by config object identity; once no
+        # registered replica holds this config, drop its entries so a
+        # recycled id() of a *different* config can never serve them
+        if not any(c is cfg for c in self.configs.values()):
+            self._est_cache = {k: v for k, v in self._est_cache.items()
+                               if k[0] != id(cfg)}
+
+    def sync(self, rid: int, clock_s: float) -> None:
+        """Floor a replica's backlog estimate at its engine's real clock."""
+        if self.busy_until[rid] < clock_s:
+            self.busy_until[rid] = clock_s
+
+    def _est(self, rid: int, req: Request) -> float:
+        key = (id(self.configs[rid]), req.prompt_len, req.output_len)
         if key not in self._est_cache:
             self._est_cache[key] = estimate_service_s(
-                self.replicas[idx], req.prompt_len, req.output_len)
+                self.configs[rid], req.prompt_len, req.output_len)
         return self._est_cache[key]
 
-    def pick(self, req: Request, candidates: Sequence[int]) -> int:
+    def pick(self, req: Request,
+             candidates: Optional[Sequence[int]] = None) -> int:
+        """Route one arrival; returns the chosen replica id (ties break on
+        iteration order of `candidates`, default all registered ids)."""
+        ids = candidates if candidates is not None else sorted(self.configs)
         best, best_finish = None, None
-        for idx in candidates:
-            finish = max(self.busy_until[idx], req.arrival_s) + self._est(idx, req)
+        for rid in ids:
+            finish = max(self.busy_until[rid], req.arrival_s) + self._est(rid, req)
             if best_finish is None or finish < best_finish - 1e-12:
-                best, best_finish = idx, finish
+                best, best_finish = rid, finish
+        if best is None:
+            raise ValueError("cannot route onto an empty replica set")
         self.busy_until[best] = best_finish
         return best
+
+
+def _fleet_dispatcher(fleet: FleetSpec, start_s: float) -> OnlineDispatcher:
+    disp = OnlineDispatcher()
+    for idx, cfg in enumerate(fleet.replicas()):
+        disp.add(idx, cfg, ready_s=start_s)
+    if not disp.configs:
+        raise ValueError("cannot route onto an empty fleet")
+    return disp
 
 
 def route_least_loaded(requests: Sequence[Request], fleet: FleetSpec,
                        start_s: float = 0.0) -> list[list[Request]]:
     """Partition one arrival stream across all replicas, earliest-finish."""
-    replicas = fleet.replicas()
-    if not replicas:
-        raise ValueError("cannot route onto an empty fleet")
-    disp = _Dispatcher(replicas, start_s)
-    parts: list[list[Request]] = [[] for _ in replicas]
-    everyone = range(len(replicas))
+    disp = _fleet_dispatcher(fleet, start_s)
+    parts: list[list[Request]] = [[] for _ in disp.configs]
+    everyone = range(len(parts))
     for req in sorted(requests, key=lambda r: (r.arrival_s, r.req_id)):
         parts[disp.pick(req, everyone)].append(req)
     return parts
@@ -229,16 +283,14 @@ def route_bucketed(requests: Sequence[Request], fleet: FleetSpec,
     `assignment` maps bucket index (i, j) -> replica indices into
     `fleet.replicas()`. Buckets without an entry fall back to the whole
     fleet (so a coarse allocator assignment still routes everything)."""
-    replicas = fleet.replicas()
-    if not replicas:
-        raise ValueError("cannot route onto an empty fleet")
+    disp = _fleet_dispatcher(fleet, start_s)
+    n = len(disp.configs)
     for b, idxs in assignment.items():
-        bad = [i for i in idxs if not 0 <= i < len(replicas)]
+        bad = [i for i in idxs if not 0 <= i < n]
         if bad or not idxs:
             raise ValueError(f"bucket {b}: bad replica indices {idxs}")
-    disp = _Dispatcher(replicas, start_s)
-    parts: list[list[Request]] = [[] for _ in replicas]
-    everyone = tuple(range(len(replicas)))
+    parts: list[list[Request]] = [[] for _ in range(n)]
+    everyone = tuple(range(n))
     for req in sorted(requests, key=lambda r: (r.arrival_s, r.req_id)):
         pool = assignment.get(buckets.index(req.prompt_len, req.output_len), everyone)
         parts[disp.pick(req, pool)].append(req)

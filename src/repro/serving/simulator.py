@@ -15,6 +15,13 @@ request streams, with latencies/energies from the analytic roofline model
                communication-overlap schedule hides the probs transfer
                behind the target forward
 
+The executor is the steppable `ReplicaSim`: submit requests, `advance_to`
+a horizon, read live state, keep going - the carbon-aware autoscaler
+(serving/autoscale.py) drives one per replica and boots/drains them at
+grid-intensity window boundaries. `simulate()` wraps it for the classic
+submit-everything-then-drain runs; both paths execute the identical event
+loop, pinned bit-exactly by tests/test_parity_golden.py.
+
 Modeling notes (documented deltas from a hardware run):
  - iteration-level continuous batching; prefills run one request at a time
    with priority over decode (vLLM-style), so prefill/decode interference
@@ -22,7 +29,9 @@ Modeling notes (documented deltas from a hardware run):
  - speculative acceptance is sampled per request per round from the
    geometric acceptance model with measured/profiled rate `acceptance`
    (the real-compute engine in serving/engine.py measures it end-to-end);
- - admission control by KV-cache HBM capacity (perfmodel.max_concurrency).
+ - admission control by KV-cache HBM capacity (perfmodel.max_concurrency);
+ - iterations are non-preemptive: `advance_to(t)` runs every step that
+   *begins* before `t`; a step spanning `t` completes past it.
 
 Carbon accounting runs *after* simulation (`account()`), so sweeps over
 carbon intensity and lifetime (Figs. 14-15) reuse one simulation.
@@ -40,19 +49,19 @@ from repro.core.carbon import (
     CHIP_DB,
     CarbonBreakdown,
     CarbonTrace,
-    ChipSpec,
     DEFAULT_CI,
     request_carbon,
     resolve_ci,
 )
 from repro.models.config import ModelConfig
-from repro.serving.perfmodel import (
-    Interconnect,
-    decode_cost,
-    dsd_round_time,
-    max_concurrency,
-    prefill_cost,
+from repro.serving.costs import (
+    dpd_kv_bytes,
+    dsd_link_bytes,
+    prefill_charges,
+    spec_round_charges,
+    spec_round_time,
 )
+from repro.serving.perfmodel import Interconnect, decode_cost, max_concurrency
 from repro.serving.workload import Dataset, Request
 
 
@@ -252,6 +261,303 @@ class _Active:
         self.remaining = trace.req.output_len - 1  # first token from prefill
 
 
+class ReplicaSim:
+    """Steppable single-replica engine simulator.
+
+    Lifecycle: construct, `submit()` requests (non-decreasing arrivals),
+    `advance_to(t)` repeatedly, `result()` for a snapshot at any point.
+    `drain()` runs to completion - `simulate()` is exactly submit-all +
+    drain, and reproduces the pre-refactor closure loops bit-exactly.
+
+    Incremental contract: before `advance_to(t)`, every request arriving
+    strictly before `t` must already be submitted - `advance_to` executes
+    all steps *beginning* before `t`, and batching/admission decisions at
+    those instants assume the arrival stream is complete up to them. The
+    fleet autoscaler satisfies this by routing each grid window's arrivals
+    before advancing replicas across it.
+
+    Iterations are non-preemptive: a step that begins before `t` runs to
+    completion even if it ends after `t` (the clock can overshoot the
+    horizon; work never begins past it).
+    """
+
+    def __init__(
+        self,
+        mode: ServingMode,
+        target_cfg: ModelConfig,
+        draft_cfg: Optional[ModelConfig] = None,
+        seed: int = 0,
+        ctx_estimate: Optional[int] = None,
+        start_s: float = 0.0,
+    ):
+        if mode.kind in ("spec", "dsd") and draft_cfg is None:
+            raise ValueError(f"{mode.kind} needs a draft model")
+        if start_s < 0:
+            raise ValueError(f"negative start_s: {start_s}")
+        self.mode = mode
+        self.target_cfg = target_cfg
+        self.draft_cfg = draft_cfg
+        self.start_s = start_s
+        self.rng = np.random.default_rng(seed)
+        self.new_chip = CHIP_DB[mode.new_chip]
+        self.old_chip = CHIP_DB[mode.old_chip] if mode.old_chip else None
+        self.use: dict[str, ChipUse] = {mode.new_chip: ChipUse()}
+        if mode.old_chip:
+            self.use[mode.old_chip] = self.use.get(mode.old_chip, ChipUse())
+        self.traces: list[ReqTrace] = []
+        self.link_bytes = 0.0
+        self.link_busy_s = 0.0
+        self._ctx_estimate = ctx_estimate
+        self._cap: Optional[int] = None
+        self._i_arrival = 0                       # next trace to admit
+        # single-loop (standalone/spec/dsd) state
+        self._t = start_s
+        self._prefq: deque[ReqTrace] = deque()
+        self._active: list[_Active] = []
+        # dpd state: prefill pool clock, FIFO link, decode pool clock
+        self._t_a = start_s
+        self._t_b = start_s
+        self._link_free = start_s
+        self._ready: list[tuple[float, ReqTrace]] = []
+        self._i_ready = 0
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: Request) -> ReqTrace:
+        """Queue one arrival. Arrivals must be non-decreasing in time."""
+        if self.traces and req.arrival_s < self.traces[-1].req.arrival_s:
+            raise ValueError(
+                f"arrivals must be non-decreasing: {req.arrival_s} after "
+                f"{self.traces[-1].req.arrival_s}")
+        tr = ReqTrace(req)
+        self.traces.append(tr)
+        return tr
+
+    # ------------------------------------------------------------- state
+    @property
+    def clock(self) -> float:
+        """Current engine time (the furthest pool clock for dpd)."""
+        if self.mode.kind == "dpd":
+            return max(self._t_a, self._t_b)
+        return self._t
+
+    @property
+    def pending(self) -> int:
+        """Requests submitted but not yet finished."""
+        return sum(1 for tr in self.traces
+                   if math.isnan(tr.finish_s))
+
+    @property
+    def idle(self) -> bool:
+        return self.pending == 0
+
+    @property
+    def cap(self) -> int:
+        """Decode-batch admission cap (KV-capacity gated); lazy so the
+        submit-then-drain path can derive ctx from the full request list."""
+        if self._cap is None:
+            ctx = self._ctx_estimate
+            if ctx is None:
+                ctx = int(np.mean([t.req.prompt_len + t.req.output_len
+                                   for t in self.traces])) if self.traces else 512
+            decode_chip = self.old_chip if self.mode.kind == "dpd" else self.new_chip
+            cap = min(self.mode.max_batch,
+                      max_concurrency(self.target_cfg, decode_chip, ctx))
+            if self.draft_cfg is not None and self.mode.kind == "spec":
+                # draft weights share the new chip's HBM
+                cap = min(cap, max_concurrency(self.draft_cfg, self.new_chip, ctx))
+            self._cap = max(cap, 1)
+        return self._cap
+
+    def _charge(self, chip_name: str, cost, at_s: float) -> None:
+        self.use[chip_name].add(at_s, cost)
+
+    # ------------------------------------------------------------- driving
+    def advance_to(self, t_stop: float) -> "ReplicaSim":
+        """Run every step that begins before `t_stop` (non-preemptive)."""
+        if self.mode.kind == "dpd":
+            self._advance_dpd(t_stop)
+        else:
+            self._advance_single(t_stop)
+        return self
+
+    def drain(self) -> "ReplicaSim":
+        """Run until all submitted requests finish."""
+        return self.advance_to(math.inf)
+
+    def result(self) -> SimResult:
+        """Snapshot of everything simulated so far."""
+        if self.mode.kind == "dpd":
+            duration = max(self._t_a, self._t_b, self._link_free)
+        else:
+            duration = self._t
+        return SimResult(self.mode, self.traces, self.use, duration,
+                         self.link_bytes, self.link_busy_s,
+                         start_s=self.start_s)
+
+    # --------------------------------------------- standalone / spec / dsd
+    def _advance_single(self, t_stop: float) -> None:
+        """One serialized engine loop (prefill priority over decode)."""
+        traces = self.traces
+        while True:
+            if self._t >= t_stop:
+                return
+            # admit arrivals up to current time
+            while (self._i_arrival < len(traces)
+                   and traces[self._i_arrival].req.arrival_s <= self._t):
+                self._prefq.append(traces[self._i_arrival])
+                self._i_arrival += 1
+            if not self._prefq and not self._active:
+                if self._i_arrival >= len(traces):
+                    return                        # fully idle
+                nxt = traces[self._i_arrival].req.arrival_s
+                if nxt >= t_stop:
+                    return                        # next work starts past horizon
+                self._t = max(self._t, nxt)
+                continue
+            if self._prefq and len(self._active) < self.cap:
+                self._step_prefill()
+            else:
+                self._step_decode_round()
+
+    def _step_prefill(self) -> None:
+        mode = self.mode
+        tr = self._prefq.popleft()
+        sched = prefill_charges(mode.kind, self.target_cfg, self.draft_cfg,
+                                self.new_chip, self.old_chip, tr.req.prompt_len)
+        for chip_name, cost, rel_s in sched.charges:
+            self._charge(chip_name, cost, self._t + rel_s)
+        self._t += sched.duration_s
+        tr.ttft_s = self._t - tr.req.arrival_s
+        tr.first_token_s = tr.last_token_s = self._t
+        tr.tokens_out = 1
+        if tr.req.output_len > 1:
+            self._active.append(_Active(tr, tr.req.prompt_len + 1))
+        else:
+            tr.finish_s = self._t
+
+    def _step_decode_round(self) -> None:
+        mode = self.mode
+        active = self._active
+        b = len(active)
+        ctx = int(np.mean([a.ctx for a in active]))
+        k = mode.spec_k
+        if mode.kind == "standalone":
+            c = decode_cost(self.target_cfg, self.new_chip, b, ctx)
+            self._charge(self.new_chip.name, c, self._t)
+            self._t += c.time_s
+            emitted = {id(a): 1 for a in active}
+        else:
+            # one speculative round, batched across requests (costs.py owns
+            # the draft-sequential/target-verify pricing shared with the
+            # real-compute engine)
+            draft_chip, c_d, c_t = spec_round_charges(
+                mode.kind, self.target_cfg, self.draft_cfg,
+                self.new_chip, self.old_chip, b, ctx, k)
+            self._charge(draft_chip.name, c_d, self._t)
+            self._charge(self.new_chip.name, c_t, self._t + c_d.time_s)
+            if mode.kind == "spec":
+                round_t = spec_round_time(mode.kind, c_d, c_t,
+                                          mode.interconnect, 0, 0)
+            else:
+                ids_b, probs_b = dsd_link_bytes(self.draft_cfg, b, k)
+                round_t = spec_round_time(mode.kind, c_d, c_t,
+                                          mode.interconnect, ids_b, probs_b,
+                                          overlap=mode.overlap_comm)
+                self.link_bytes += ids_b + probs_b
+                self.link_busy_s += (mode.interconnect.transfer_time(ids_b)
+                                     + mode.interconnect.transfer_time(probs_b))
+            self._t += round_t
+            emitted = {
+                id(a): min(_emit_round_tokens(self.rng, mode.acceptance, k),
+                           a.remaining)
+                for a in active
+            }
+        done = []
+        for a in active:
+            e = emitted[id(a)]
+            a.trace.tokens_out += e
+            a.trace.last_token_s = self._t
+            a.ctx += e
+            a.remaining -= e
+            if a.remaining <= 0:
+                a.trace.finish_s = self._t
+                done.append(a)
+        for a in done:
+            active.remove(a)
+
+    # ------------------------------------------------------------- dpd
+    def _advance_dpd(self, t_stop: float) -> None:
+        """Disg-Pref-Decode: pool A prefills, KV crosses the FIFO link,
+        pool B decodes. The pools run on separate clocks; within one
+        `advance_to` window pool A runs first, so pool B's admission scans
+        a ready-list that is complete up to the horizon (ready times are
+        monotone because the link is FIFO with positive latency)."""
+        cfg = self.target_cfg
+        mode = self.mode
+        traces = self.traces
+        # pool A: prefill pipeline + FIFO link
+        while self._i_arrival < len(traces):
+            tr = traces[self._i_arrival]
+            if max(self._t_a, tr.req.arrival_s) >= t_stop:
+                break
+            self._t_a = max(self._t_a, tr.req.arrival_s)
+            sched = prefill_charges(mode.kind, cfg, None,
+                                    self.new_chip, self.old_chip,
+                                    tr.req.prompt_len)
+            for chip_name, cost, rel_s in sched.charges:
+                self._charge(chip_name, cost, self._t_a + rel_s)
+            self._t_a += sched.duration_s
+            tr.ttft_s = self._t_a - tr.req.arrival_s
+            tr.first_token_s = tr.last_token_s = self._t_a
+            tr.tokens_out = 1
+            nbytes = dpd_kv_bytes(cfg, tr.req.prompt_len)
+            tx = mode.interconnect.transfer_time(nbytes)
+            start = max(self._t_a, self._link_free)
+            self._link_free = start + tx
+            self.link_bytes += nbytes
+            self.link_busy_s += tx
+            if tr.req.output_len > 1:
+                self._ready.append((self._link_free, tr))
+            else:
+                tr.finish_s = self._t_a
+            self._i_arrival += 1
+
+        # pool B: continuous-batch decode over KV-arrived requests
+        while self._i_ready < len(self._ready) or self._active:
+            if self._t_b >= t_stop:
+                return
+            while (self._i_ready < len(self._ready)
+                   and self._ready[self._i_ready][0] <= self._t_b
+                   and len(self._active) < self.cap):
+                tr = self._ready[self._i_ready][1]
+                self._active.append(_Active(tr, tr.req.prompt_len + 1))
+                self._i_ready += 1
+            if not self._active:
+                if self._i_ready >= len(self._ready):
+                    return                        # waiting on pool A / link
+                nxt = self._ready[self._i_ready][0]
+                if nxt >= t_stop:
+                    return
+                self._t_b = nxt
+                continue
+            b = len(self._active)
+            ctx = int(np.mean([a.ctx for a in self._active]))
+            c = decode_cost(cfg, self.old_chip, b, ctx)
+            self._charge(self.old_chip.name, c, self._t_b)
+            self._t_b += c.time_s
+            done = []
+            for a in self._active:
+                a.trace.tokens_out += 1
+                a.trace.last_token_s = self._t_b
+                a.ctx += 1
+                a.remaining -= 1
+                if a.remaining <= 0:
+                    a.trace.finish_s = self._t_b
+                    done.append(a)
+            for a in done:
+                self._active.remove(a)
+
+
 def simulate(
     mode: ServingMode,
     target_cfg: ModelConfig,
@@ -267,199 +573,11 @@ def simulate(
     executes earlier, and arrivals before it queue until then. The fleet
     layer (serving/fleet.py) partitions one stream across replicas and
     calls this per replica, so request lists may be any subset of a
-    workload as long as arrivals are non-decreasing."""
-    if mode.kind in ("spec", "dsd") and draft_cfg is None:
-        raise ValueError(f"{mode.kind} needs a draft model")
-    if start_s < 0:
-        raise ValueError(f"negative start_s: {start_s}")
-    rng = np.random.default_rng(seed)
-    new_chip = CHIP_DB[mode.new_chip]
-    old_chip = CHIP_DB[mode.old_chip] if mode.old_chip else None
-    use = {mode.new_chip: ChipUse()}
-    if mode.old_chip:
-        use[mode.old_chip] = use.get(mode.old_chip, ChipUse())
+    workload as long as arrivals are non-decreasing.
 
-    traces = [ReqTrace(r) for r in requests]
-    if ctx_estimate is None:
-        ctx_estimate = int(np.mean([r.prompt_len + r.output_len for r in requests])) if requests else 512
-
-    decode_chip = old_chip if mode.kind == "dpd" else new_chip
-    cap = min(mode.max_batch, max_concurrency(target_cfg, decode_chip, ctx_estimate))
-    if draft_cfg is not None and mode.kind == "spec":
-        # draft weights share the new chip's HBM
-        cap = min(cap, max_concurrency(draft_cfg, new_chip, ctx_estimate))
-    cap = max(cap, 1)
-
-    def charge(chip_name: str, cost, at_s: float) -> None:
-        use[chip_name].add(at_s, cost)
-
-    # ------------------------------------------------------------------
-    if mode.kind == "dpd":
-        result = _simulate_dpd(mode, target_cfg, traces, new_chip, old_chip, cap,
-                               charge, rng, start_s)
-    else:
-        result = _simulate_single_loop(mode, target_cfg, draft_cfg, traces,
-                                       new_chip, old_chip, cap, charge, rng, start_s)
-    link_bytes, link_busy, duration = result
-    return SimResult(mode, traces, use, duration, link_bytes, link_busy,
-                     start_s=start_s)
-
-
-def _simulate_single_loop(mode, target_cfg, draft_cfg, traces, new_chip, old_chip,
-                          cap, charge, rng, start_s=0.0):
-    """standalone / spec / dsd: one serialized engine loop (prefill priority)."""
-    t = start_s
-    i_arrival = 0
-    prefq: deque[ReqTrace] = deque()
-    active: list[_Active] = []
-    link_bytes = link_busy = 0.0
-    n = len(traces)
-    k = mode.spec_k
-
-    while i_arrival < n or prefq or active:
-        # admit arrivals up to current time
-        while i_arrival < n and traces[i_arrival].req.arrival_s <= t:
-            prefq.append(traces[i_arrival])
-            i_arrival += 1
-        if not prefq and not active:
-            t = max(t, traces[i_arrival].req.arrival_s)
-            continue
-
-        if prefq and len(active) < cap:
-            tr = prefq.popleft()
-            pl = tr.req.prompt_len
-            c_t = prefill_cost(target_cfg, new_chip, 1, pl)
-            charge(new_chip.name, c_t, t)
-            dur = c_t.time_s
-            if mode.kind == "spec":
-                c_d = prefill_cost(draft_cfg, new_chip, 1, pl)
-                charge(new_chip.name, c_d, t + c_t.time_s)
-                dur += c_d.time_s                      # serialized on one chip
-            elif mode.kind == "dsd":
-                c_d = prefill_cost(draft_cfg, old_chip, 1, pl)
-                charge(old_chip.name, c_d, t)
-                dur = max(dur, c_d.time_s)             # parallel pools
-            t += dur
-            tr.ttft_s = t - tr.req.arrival_s
-            tr.first_token_s = tr.last_token_s = t
-            tr.tokens_out = 1
-            if tr.req.output_len > 1:
-                active.append(_Active(tr, tr.req.prompt_len + 1))
-            else:
-                tr.finish_s = t
-            continue
-
-        if active:
-            b = len(active)
-            ctx = int(np.mean([a.ctx for a in active]))
-            if mode.kind == "standalone":
-                c = decode_cost(target_cfg, new_chip, b, ctx)
-                charge(new_chip.name, c, t)
-                t += c.time_s
-                emitted = {id(a): 1 for a in active}
-            else:
-                # one speculative round (batched across requests). The DRAFT
-                # is autoregressive: K+1 sequential single-token steps, each
-                # re-reading the weights; the TARGET verifies all K+1
-                # positions in one pass.
-                c_draft_chip = new_chip if mode.kind == "spec" else old_chip
-                c_d1 = decode_cost(draft_cfg, c_draft_chip, b, ctx)
-                c_d = dataclasses.replace(c_d1, time_s=c_d1.time_s * (k + 1),
-                                          energy_j=c_d1.energy_j * (k + 1))
-                c_t = decode_cost(target_cfg, new_chip, b, ctx, new_tokens=k + 1)
-                charge(c_draft_chip.name, c_d, t)
-                charge(new_chip.name, c_t, t + c_d.time_s)
-                if mode.kind == "spec":
-                    round_t = c_d.time_s + c_t.time_s
-                else:
-                    ids_b = b * k * 4
-                    probs_b = b * k * draft_cfg.vocab_size * 2  # fp16 probs
-                    round_t = dsd_round_time(
-                        c_d.time_s, c_t.time_s, mode.interconnect,
-                        ids_b, probs_b, overlap=mode.overlap_comm)
-                    link_bytes += ids_b + probs_b
-                    link_busy += (mode.interconnect.transfer_time(ids_b)
-                                  + mode.interconnect.transfer_time(probs_b))
-                t += round_t
-                emitted = {
-                    id(a): min(_emit_round_tokens(rng, mode.acceptance, k), a.remaining)
-                    for a in active
-                }
-            done = []
-            for a in active:
-                e = emitted[id(a)]
-                a.trace.tokens_out += e
-                a.trace.last_token_s = t
-                a.ctx += e
-                a.remaining -= e
-                if a.remaining <= 0:
-                    a.trace.finish_s = t
-                    done.append(a)
-            for a in done:
-                active.remove(a)
-            continue
-
-        # blocked on capacity: jump to... (can only happen via cap; decode drains)
-        t = max(t, traces[i_arrival].req.arrival_s)  # pragma: no cover
-
-    return link_bytes, link_busy, t
-
-
-def _simulate_dpd(mode, cfg, traces, new_chip, old_chip, cap, charge, rng,
-                  start_s=0.0):
-    """Disg-Pref-Decode: pool A prefills, KV crosses the link, pool B decodes."""
-    # Phase 1: pool A prefill pipeline + FIFO link
-    t_a = start_s
-    link_free = start_s
-    link_bytes = link_busy = 0.0
-    ready: list[tuple[float, ReqTrace]] = []
-    for tr in traces:
-        t_a = max(t_a, tr.req.arrival_s)
-        c = prefill_cost(cfg, new_chip, 1, tr.req.prompt_len)
-        charge(new_chip.name, c, t_a)
-        t_a += c.time_s
-        tr.ttft_s = t_a - tr.req.arrival_s
-        tr.first_token_s = tr.last_token_s = t_a
-        tr.tokens_out = 1
-        nbytes = tr.req.prompt_len * cfg.kv_bytes_per_token() + cfg.state_bytes()
-        tx = mode.interconnect.transfer_time(nbytes)
-        start = max(t_a, link_free)
-        link_free = start + tx
-        link_bytes += nbytes
-        link_busy += tx
-        if tr.req.output_len > 1:
-            ready.append((link_free, tr))
-        else:
-            tr.finish_s = t_a
-
-    # Phase 2: pool B continuous-batch decode
-    ready.sort(key=lambda x: x[0])
-    t_b = start_s
-    i = 0
-    active: list[_Active] = []
-    while i < len(ready) or active:
-        while i < len(ready) and ready[i][0] <= t_b and len(active) < cap:
-            tr = ready[i][1]
-            active.append(_Active(tr, tr.req.prompt_len + 1))
-            i += 1
-        if not active:
-            t_b = ready[i][0]
-            continue
-        b = len(active)
-        ctx = int(np.mean([a.ctx for a in active]))
-        c = decode_cost(cfg, old_chip, b, ctx)
-        charge(old_chip.name, c, t_b)
-        t_b += c.time_s
-        done = []
-        for a in active:
-            a.trace.tokens_out += 1
-            a.trace.last_token_s = t_b
-            a.ctx += 1
-            a.remaining -= 1
-            if a.remaining <= 0:
-                a.trace.finish_s = t_b
-                done.append(a)
-        for a in done:
-            active.remove(a)
-
-    return link_bytes, link_busy, max(t_a, t_b, link_free)
+    Thin wrapper: submit everything into a `ReplicaSim` and drain it."""
+    sim = ReplicaSim(mode, target_cfg, draft_cfg=draft_cfg, seed=seed,
+                     ctx_estimate=ctx_estimate, start_s=start_s)
+    for r in requests:
+        sim.submit(r)
+    return sim.drain().result()

@@ -109,3 +109,47 @@ def sample_mixture_requests(
     sizes = (dataset.p25, dataset.p50, dataset.p75)
     return _poisson_requests(np.random.default_rng(seed), qps, duration_s,
                              lambda r: sizes[r.choice(3, p=p)])
+
+
+def sample_piecewise_requests(
+    dataset: Dataset,
+    qps_profile: "list[tuple[float, float]]",
+    duration_s: float,
+    seed: int = 0,
+    weights: tuple[float, float, float] = (0.25, 0.5, 0.25),
+) -> list[Request]:
+    """Poisson arrivals whose rate follows a piecewise-constant profile.
+
+    `qps_profile` is [(t_start_s, qps), ...] with increasing starts from 0
+    (last segment extends to `duration_s`); sizes are the same percentile
+    mixture as `sample_mixture_requests`. This is the autoscaling
+    workload: diurnal load swings over a diurnal grid - a static fleet
+    must hold the peak allocation through every trough."""
+    if not qps_profile or qps_profile[0][0] != 0.0:
+        raise ValueError(f"qps_profile must start at t=0: {qps_profile}")
+    starts = [t for t, _ in qps_profile]
+    if any(b <= a for a, b in zip(starts, starts[1:])):
+        raise ValueError(f"qps_profile starts must increase: {starts}")
+    if any(q < 0 for _, q in qps_profile):
+        raise ValueError(f"negative qps in profile: {qps_profile}")
+    if len(weights) != 3 or min(weights) < 0 or sum(weights) <= 0:
+        raise ValueError(f"bad mixture weights: {weights}")
+    p = np.asarray(weights, dtype=float) / sum(weights)
+    sizes = (dataset.p25, dataset.p50, dataset.p75)
+    rng = np.random.default_rng(seed)
+    reqs: list[Request] = []
+    i = 0
+    for k, (t0, qps) in enumerate(qps_profile):
+        t1 = qps_profile[k + 1][0] if k + 1 < len(qps_profile) else duration_s
+        t1 = min(t1, duration_s)
+        if qps <= 0 or t1 <= t0:
+            continue
+        t = t0
+        while True:
+            t += rng.exponential(1.0 / qps)
+            if t >= t1:
+                break
+            pl, ol = sizes[rng.choice(3, p=p)]
+            reqs.append(Request(i, t, pl, ol))
+            i += 1
+    return reqs

@@ -1,0 +1,94 @@
+"""Engine <-> simulator parity: both executors price iterations identically.
+
+The real-compute `ServingEngine` and the cluster `simulate()` now share
+one cost schedule (serving/costs.py). On an identical tiny workload per
+serving kind, the engine's modeled clock and per-chip energy must agree
+with the simulator's - tightly, because with acceptance pinned to 1.0
+(draft == target, greedy sampling) both executors run the *same* iteration
+sequence, so any drift is a pricing divergence, not batching noise.
+
+dpd runs the workload arrival-spaced: the simulator models the KV link as
+a FIFO resource that staggers decode admission while the engine serializes
+the transfer into its single clock, so only serial (batch-1) dpd schedules
+are directly comparable.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.models import init_params
+from repro.serving.engine import ServingEngine
+from repro.serving.simulator import ServingMode, simulate
+from repro.serving.workload import Request
+
+PL, OUT, N = 12, 6, 3
+SPEC_K = 4
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_reduced_config("yi-6b", num_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _run_pair(cfg, params, kind, old_chip, gap_s):
+    draft = dict(draft_cfg=cfg, draft_params=params) \
+        if kind in ("spec", "dsd") else {}
+    eng = ServingEngine(cfg, params, kind=kind, old_chip=old_chip,
+                        temperature=0.0, seed=1, **draft)
+    for i in range(N):
+        eng.submit((np.arange(PL) + i) % cfg.vocab_size,
+                   max_new_tokens=OUT, arrival_s=i * gap_s)
+    eng.run_until_idle()
+
+    reqs = [Request(i, i * gap_s, PL, OUT) for i in range(N)]
+    mode = ServingMode(kind, kind, "a100", old_chip,
+                       spec_k=SPEC_K, acceptance=1.0)
+    res = simulate(mode, cfg, reqs,
+                   draft_cfg=cfg if kind in ("spec", "dsd") else None, seed=1)
+    return eng, res
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind,old_chip,gap_s", [
+    ("standalone", None, 0.0),
+    ("spec", None, 0.0),
+    ("dsd", "t4", 0.0),
+    ("dpd", "t4", 1.0),
+])
+def test_engine_and_simulator_agree_on_clock_and_energy(tiny, kind,
+                                                        old_chip, gap_s):
+    cfg, params = tiny
+    eng, res = _run_pair(cfg, params, kind, old_chip, gap_s)
+    assert len(eng.finished) == N
+    assert all(len(r.out_tokens) == OUT for r in eng.finished)
+    if kind in ("spec", "dsd"):
+        # greedy + draft==target: every draft token accepted, so the
+        # engine's round count matches the simulator's acceptance=1.0 run
+        assert eng.acceptance_rate == pytest.approx(1.0)
+
+    assert eng.clock == pytest.approx(res.duration_s, rel=0.02), \
+        f"{kind}: modeled clock diverged"
+    assert sorted(eng.use) == sorted(res.use)
+    for name in res.use:
+        assert eng.use[name].energy_j == pytest.approx(
+            res.use[name].energy_j, rel=0.05), f"{kind}/{name} energy"
+        assert eng.use[name].busy_s == pytest.approx(
+            res.use[name].busy_s, rel=0.05), f"{kind}/{name} busy"
+    if kind in ("dsd", "dpd"):
+        assert eng.link_bytes == pytest.approx(res.link_bytes, rel=1e-9)
+
+
+@pytest.mark.slow
+def test_engine_records_carbon_segments(tiny):
+    """Engine charges now carry the (start, end, energy) segments the
+    CarbonTrace accounting integrates - same shape as the simulator's."""
+    cfg, params = tiny
+    eng, res = _run_pair(cfg, params, "standalone", None, 0.0)
+    segs = eng.use["a100"].segments
+    assert segs and len(segs) == len(res.use["a100"].segments)
+    assert sum(e for _, _, e in segs) == pytest.approx(
+        eng.use["a100"].energy_j, rel=1e-9)
+    assert all(t1 >= t0 for t0, t1, _ in segs)
