@@ -18,6 +18,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        batching_sweep,
         fig2_latency,
         fig3_energy,
         fig4_bandwidth,
@@ -59,6 +60,10 @@ def main() -> None:
         ("fleet_sweep", fleet_sweep.run,
          lambda r: "mixed_best_savings_pct="
                    f"{max((x['savings_pct'] for x in r if x['mixed_old_chips'] > 0 and x['mixed_slo_att'] >= x['allnew_slo_att'] - 1e-9), default=float('nan')):.1f}"),
+        ("batching_sweep", batching_sweep.run,
+         lambda r: "headline_kinds_won="
+                   f"{sum(1 for x in r if x['highest_load'] and x['headline_ok'])}/"
+                   f"{sum(1 for x in r if x['highest_load'])}"),
         ("roofline", roofline.run,
          lambda r: f"cells_ok={sum(1 for x in r if x['status'] == 'ok')}/"
                    f"{sum(1 for x in r if x['status'] != 'skip')}"),

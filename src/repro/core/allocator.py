@@ -41,16 +41,24 @@ from repro.core.carbon import (
 )
 from repro.core.disagg import DisaggConfig
 from repro.core.spec_decode import expected_tokens_per_round
+from repro.serving.batching import (
+    BatchPolicy,
+    build_dpd_decode_ledger,
+    build_single_pool_scheduler,
+    prompt_chunks,
+    resolve_batch_policy,
+)
 from repro.serving.costs import (
     dpd_kv_bytes,
     dsd_link_bytes,
+    hybrid_step_charges,
     prefill_charges,
     spec_round_charges,
     spec_round_time,
 )
+from repro.serving.fleet import FLEET_BATCHING_DEFAULT, SizeBuckets
 from repro.serving.perfmodel import decode_cost, max_concurrency
 from repro.serving.workload import Dataset, Request
-from repro.serving.fleet import SizeBuckets
 
 Matrix = tuple[tuple[float, ...], ...]
 
@@ -202,6 +210,181 @@ def _engine_profile(cfg: DisaggConfig, pl: int, ol: int,
     return qps, energy, busy
 
 
+def _hs_stats(hs) -> tuple[float, dict[str, float]]:
+    """(total energy J, busy seconds by chip) of one `HybridSchedule`."""
+    en = sum(c.energy_j for _, c, _ in hs.charges)
+    busy: dict[str, float] = {}
+    for name, c, _ in hs.charges:
+        busy[name] = busy.get(name, 0.0) + c.time_s
+    return en, busy
+
+
+def _engine_profile_continuous(cfg: DisaggConfig, pl: int, ol: int,
+                               ds: Dataset, utilization: float,
+                               policy: BatchPolicy):
+    """`_engine_profile` for the iteration-level continuous executor.
+
+    Mirrors what `ReplicaSim(batching="continuous")` actually serves:
+    admission is block-granular (the SAME ledger sizing the executors
+    build via batching.py), prefill is chunked and batched - riding
+    inside hybrid decode steps for standalone, dedicated budget-bounded
+    steps for spec/dsd and the dpd prefill pool - and every step is
+    priced by `costs.hybrid_step_charges`. The serialized profile's
+    `b * ttft` stop-the-world term disappears from the standalone
+    denominator (prefill no longer steals whole iterations), which is
+    exactly the capacity the continuous executor recovers; spec/dsd/dpd
+    keep the term but amortize it over the prompts one prefill step
+    batches."""
+    mode = cfg.mode
+    new_chip = CHIP_DB[mode.new_chip]
+    old_chip = CHIP_DB[mode.old_chip] if mode.old_chip else None
+    ctx = pl + ol
+    k = mode.spec_k
+
+    # block-granular admission cap (full-lifetime context per sequence)
+    if mode.kind == "dpd":
+        num_blocks = build_dpd_decode_ledger(
+            policy, cfg.target, old_chip).num_blocks
+    else:
+        num_blocks = build_single_pool_scheduler(
+            policy, mode.kind, mode.max_batch, k, cfg.target, cfg.draft,
+            new_chip).ledger.num_blocks
+    per_seq = -(-ctx // policy.block_size)
+    cap = min(mode.max_batch,
+              num_blocks // per_seq if per_seq else mode.max_batch)
+    if cap < 1:
+        return 0.0, math.inf, {}
+
+    def hs_of(chunk_specs, b):
+        return hybrid_step_charges(
+            mode.kind, cfg.target, cfg.draft, new_chip, old_chip,
+            tuple(chunk_specs), (ctx,) * b, k, mode.interconnect,
+            overlap=mode.overlap_comm)
+
+    chunks = prompt_chunks(pl, policy.chunk_tokens)
+    grid = sorted({1, 2, 4, 8, 16, 32, cap})
+
+    if mode.kind == "standalone":
+        def round_at(b):
+            """Steady-state hybrid step: b decode slots + their prefill
+            feed (each resident request contributes pl tokens over its
+            ol-1 rounds), clipped to the step token budget."""
+            need = b * pl / max(ol - 1, 1)
+            avail = max(policy.token_budget - b, 0)
+            c_tok = int(round(min(need, avail)))
+            specs = ((c_tok, pl // 2),) if c_tok >= 1 else ()
+            return hs_of(specs, b)
+
+        def feasible_at(b):
+            if round_at(b).duration_s > ds.tpot_slo_s:
+                return False
+            ttft = sum(hs_of((c,), b).duration_s for c in chunks)
+            return ttft <= ds.ttft_slo_s
+
+        if ol <= 1:
+            # pure-prefill bucket: budget-bounded chunk steps, amortized
+            # over the m prompts one step batches
+            m = max(policy.token_budget // max(pl, 1), 1)
+            hs = hs_of(((pl, 0),) * m, 0) if m > 1 else None
+            steps = [hs] if hs else [hs_of((c,), 0) for c in chunks]
+            dur = sum(s.duration_s for s in steps) / m
+            if sum(hs_of((c,), 0).duration_s for c in chunks) > ds.ttft_slo_s:
+                return 0.0, math.inf, {}
+            qps = utilization / max(dur, 1e-12)
+            en = sum(_hs_stats(s)[0] for s in steps) / m
+            busy: dict[str, float] = {}
+            for s in steps:
+                for cn, t in _hs_stats(s)[1].items():
+                    busy[cn] = busy.get(cn, 0.0) + t / m
+            return qps, en, busy
+        if not feasible_at(1):
+            return 0.0, math.inf, {}
+        b_slo = max(b for b in grid if b <= cap and feasible_at(b))
+
+        def lam_max(b):
+            t = round_at(b).duration_s
+            lam_dec = b / max((ol - 1) * t, 1e-12)
+            lam_pre = max(policy.token_budget - b, 0) / max(pl * t, 1e-12)
+            return min(lam_dec, lam_pre)
+
+        qps = utilization * lam_max(b_slo)
+        b_op = b_slo
+        for _ in range(8):
+            t = round_at(b_op).duration_s
+            b_next = min(max(int(round(qps * (ol - 1) * t)), 1), b_slo)
+            if b_next == b_op:
+                break
+            b_op = b_next
+        en_round, busy_round = _hs_stats(round_at(b_op))
+        # a request is 1 of b_op residents for ol-1 rounds, and its chunk
+        # tokens are 1/b_op of the step's feed - both scale as 1/b_op
+        rounds = max(ol - 1, 0)
+        energy = rounds * en_round / b_op
+        busy = {cn: rounds * t / b_op for cn, t in busy_round.items()}
+        return qps, energy, busy
+
+    # spec / dsd / dpd: dedicated budget-bounded prefill steps, amortized
+    # over the m whole prompts one step batches (chunked when pl exceeds
+    # the budget/chunk size)
+    pre_chunk = policy.token_budget if mode.kind == "dpd" \
+        else policy.chunk_tokens
+    pre_split = prompt_chunks(pl, pre_chunk)
+    m = max(policy.token_budget // max(pl, 1), 1)
+    pre_steps = [hs_of(((pl, 0),) * m, 0)] if m > 1 \
+        else [hs_of((c,), 0) for c in pre_split]
+    pre_dur = sum(s.duration_s for s in pre_steps) / m
+    pre_en = sum(_hs_stats(s)[0] for s in pre_steps) / m
+    pre_busy: dict[str, float] = {}
+    for s in pre_steps:
+        for cn, t in _hs_stats(s)[1].items():
+            pre_busy[cn] = pre_busy.get(cn, 0.0) + t / m
+    ttft = sum(hs_of((c,), 0).duration_s for c in pre_split)
+    if mode.kind == "dpd":
+        ttft += mode.interconnect.transfer_time(dpd_kv_bytes(cfg.target, pl))
+    if ttft > ds.ttft_slo_s:
+        return 0.0, math.inf, {}
+
+    e_tok = 1.0 if mode.kind == "dpd" \
+        else expected_tokens_per_round(mode.acceptance, k)
+    rounds_per_req = max(ol - 1, 0) / e_tok
+
+    def feasible_at(b):
+        return hs_of((), b).duration_s / e_tok <= ds.tpot_slo_s
+
+    if not feasible_at(1):
+        return 0.0, math.inf, {}
+    b_slo = max(b for b in grid if b <= cap and feasible_at(b))
+
+    def lam_max(b):
+        t_round = hs_of((), b).duration_s
+        if mode.kind == "dpd":
+            # pools run concurrently; slowest of prefill pool, decode
+            # pool, and the KV link binds
+            kv_bytes = dpd_kv_bytes(cfg.target, pl)
+            return min(1.0 / max(pre_dur, 1e-12),
+                       b / max(rounds_per_req * t_round, 1e-12),
+                       1.0 / max(mode.interconnect.transfer_time(kv_bytes),
+                                 1e-12))
+        return b / max(rounds_per_req * t_round + b * pre_dur, 1e-12)
+
+    qps = utilization * lam_max(b_slo)
+    b_op = b_slo
+    phi = min(qps * pre_dur, 0.9) if mode.kind != "dpd" else 0.0
+    for _ in range(8):
+        t_round = hs_of((), b_op).duration_s
+        b_next = min(max(int(round(
+            qps * rounds_per_req * t_round / (1.0 - phi))), 1), b_slo)
+        if b_next == b_op:
+            break
+        b_op = b_next
+    en_round, busy_round = _hs_stats(hs_of((), b_op))
+    energy = pre_en + rounds_per_req * en_round / b_op
+    busy = dict(pre_busy)
+    for cn, t in busy_round.items():
+        busy[cn] = busy.get(cn, 0.0) + rounds_per_req * t / b_op
+    return qps, energy, busy
+
+
 def provisioned_carbon_g_per_hour(mode_chips: Sequence[str], ci: float,
                                   include_idle: bool = False) -> float:
     """Fixed hourly carbon of one provisioned instance.
@@ -228,6 +411,7 @@ def build_gpu_info(
     utilization: float = 0.6,
     include_idle: bool = False,
     window_s: float = 3600.0,
+    batching: "BatchPolicy | str | None" = None,
 ) -> dict[str, InstanceProfile]:
     """Profile every catalog config over the bucket grid (Mélange gpu_info).
 
@@ -235,9 +419,15 @@ def build_gpu_info(
     solver leaves head-room for Poisson bursts and tail TTFT, and dynamic
     energy is evaluated at the operating batch that target implies. With a
     `CarbonTrace`, the window-average intensity prices the energy - the
-    provisioning decision sees the same grid the fleet will run under."""
+    provisioning decision sees the same grid the fleet will run under.
+
+    `batching` selects which executor the profiles model: the default is
+    the fleet's iteration-level continuous policy (the real serving
+    frontier - see `_engine_profile_continuous`); pass "serialized" to
+    profile the legacy stop-the-world-prefill engines."""
     if not 0 < utilization <= 1:
         raise ValueError(f"utilization must be in (0, 1]: {utilization}")
+    policy = resolve_batch_policy(batching, default=FLEET_BATCHING_DEFAULT)
     ci_val = resolve_ci(ci, 0.0, window_s)
     out: dict[str, InstanceProfile] = {}
     for cfg in catalog:
@@ -247,8 +437,12 @@ def build_gpu_info(
             trow, drow = [], []
             for j in range(no):
                 pl, ol = buckets.rep_size(i, j)
-                qps, energy_j, _busy = _engine_profile(cfg, pl, ol, dataset,
-                                                       utilization)
+                if policy.kind == "continuous":
+                    qps, energy_j, _busy = _engine_profile_continuous(
+                        cfg, pl, ol, dataset, utilization, policy)
+                else:
+                    qps, energy_j, _busy = _engine_profile(
+                        cfg, pl, ol, dataset, utilization)
                 trow.append(qps)
                 drow.append(0.0 if math.isinf(energy_j)
                             else energy_j / J_PER_KWH * ci_val)

@@ -10,10 +10,11 @@ EcoServe-style online controller on top of the steppable `ReplicaSim`:
   - arrivals are routed ONLINE by the shared `OnlineDispatcher`
     (fleet.py) against live replica state - no offline pre-partitioning;
   - at every `CarbonTrace` window boundary the Mélange allocator is
-    re-solved for the window's grid intensity and arrival rate, with
-    per-chip `inventory` limits and a switching cost (`boot_carbon_g`
-    amortized over the window) so thrashing instances between windows is
-    penalized;
+    re-solved for the window's grid intensity and arrival rate - the
+    clairvoyant oracle rate or a forecast (`rate_estimator=
+    "last_window"|"ewma"`) - with per-chip `inventory` limits and a
+    switching cost (`boot_carbon_g` amortized over the window) so
+    thrashing instances between windows is penalized;
   - scale-up boots new replicas with a boot-time penalty: the instance
     reserves (and idles) from the boundary but serves only `boot_s`
     later (`ReplicaSim(start_s=...)` semantics);
@@ -45,7 +46,12 @@ from repro.core.allocator import (
 )
 from repro.core.carbon import CarbonBreakdown, CarbonTrace, resolve_ci
 from repro.core.disagg import DisaggConfig
-from repro.serving.fleet import OnlineDispatcher, SizeBuckets
+from repro.serving.batching import BatchPolicy, resolve_batch_policy
+from repro.serving.fleet import (
+    FLEET_BATCHING_DEFAULT,
+    OnlineDispatcher,
+    SizeBuckets,
+)
 from repro.serving.simulator import ReplicaSim, SimResult
 from repro.serving.workload import Dataset, Request
 
@@ -75,10 +81,18 @@ class AutoscalePolicy:
     utilization: float = 0.6        # per-instance load target (head-room)
     min_window_s: float = 0.0       # merge trace windows shorter than this
     slice_factor: int = 4
+    # per-replica scheduler policy (serving/batching.py); None = the fleet
+    # default (iteration-level continuous batching)
+    batching: "BatchPolicy | str | None" = None
+    # EWMA smoothing for rate_estimator="ewma" (weight of the newest
+    # observed window rate)
+    ewma_alpha: float = 0.5
 
     def __post_init__(self):
         if self.boot_s < 0:
             raise ValueError(f"negative boot_s: {self.boot_s}")
+        if not 0 < self.ewma_alpha <= 1:
+            raise ValueError(f"ewma_alpha must be in (0, 1]: {self.ewma_alpha}")
 
 
 # ---------------------------------------------------------------------------
@@ -181,11 +195,13 @@ class _AffineProfiles:
     re-solve cost proportional to the solver, not the profiler."""
 
     def __init__(self, catalog: Sequence[DisaggConfig], dataset: Dataset,
-                 buckets: SizeBuckets, utilization: float):
+                 buckets: SizeBuckets, utilization: float, batching=None):
         self._at0 = build_gpu_info(catalog, dataset, buckets, ci=0.0,
-                                   utilization=utilization, include_idle=True)
+                                   utilization=utilization, include_idle=True,
+                                   batching=batching)
         self._at1 = build_gpu_info(catalog, dataset, buckets, ci=1.0,
-                                   utilization=utilization, include_idle=True)
+                                   utilization=utilization, include_idle=True,
+                                   batching=batching)
 
     def at(self, ci: float) -> dict[str, InstanceProfile]:
         out = {}
@@ -226,51 +242,81 @@ def simulate_autoscaled(
     policy: AutoscalePolicy = AutoscalePolicy(),
     buckets: Optional[SizeBuckets] = None,
     seed: int = 0,
+    rate_estimator: str = "oracle",
 ) -> AutoscaleResult:
     """Serve `requests` with a fleet re-allocated at every grid window.
 
     Per window [t0, t1): the window's arrival rate and size distribution
-    (oracle estimates from the stream - swap in a forecaster by pre-
-    transforming `requests`) and the window's mean grid intensity feed
-    `allocate(...)` with `prev_counts` (running replicas are boot-free) and
-    the policy's inventory/boot terms; the fleet is reconciled to the
-    solution (boot/drain), the window's arrivals are routed online, and
-    every replica advances to the boundary. Deterministic for fixed
-    inputs: routing is deterministic and replica seeds derive from `seed`
-    + boot order."""
+    and the window's mean grid intensity feed `allocate(...)` with
+    `prev_counts` (running replicas are boot-free) and the policy's
+    inventory/boot terms; the fleet is reconciled to the solution
+    (boot/drain), the window's arrivals are routed online, and every
+    replica advances to the boundary. Deterministic for fixed inputs:
+    routing is deterministic and replica seeds derive from `seed` + boot
+    order.
+
+    `rate_estimator` picks the window-rate forecast the solver sees:
+
+      oracle       - the window's true arrival rate (and its true size
+                     distribution): the clairvoyant upper bound
+      last_window  - the previous window's *observed* rate; sizes from
+                     the cumulative history. The first window (nothing
+                     observed yet) falls back to the oracle rate.
+      ewma         - exponentially weighted moving average of observed
+                     window rates (`policy.ewma_alpha` on the newest),
+                     same fallbacks as last_window.
+
+    Forecasts are floored at one request per window once traffic has been
+    seen: a zero forecast would deprovision the whole fleet and strand
+    every arrival of a mispredicted window."""
+    if rate_estimator not in ("oracle", "last_window", "ewma"):
+        raise ValueError(f"unknown rate_estimator: {rate_estimator!r}")
     reqs = sorted(requests, key=lambda r: (r.arrival_s, r.req_id))
     if not reqs:
         raise ValueError("no requests to serve")
     if buckets is None:
         buckets = SizeBuckets.from_dataset(dataset)
-    profiles = _AffineProfiles(catalog, dataset, buckets, policy.utilization)
+    batching = resolve_batch_policy(policy.batching,
+                                    default=FLEET_BATCHING_DEFAULT)
+    profiles = _AffineProfiles(catalog, dataset, buckets, policy.utilization,
+                               batching)
     by_name = {c.name: c for c in catalog}
     ctx_estimate = int(np.mean([r.prompt_len + r.output_len for r in reqs]))
 
     t_end = reqs[-1].arrival_s + 1e-9
     bounds = _window_bounds(trace, t_end, policy.min_window_s)
 
-    disp = OnlineDispatcher()
+    disp = OnlineDispatcher(batching=batching)
     replicas: dict[int, _Replica] = {}
     next_rid = 0
     windows: list[dict] = []
     i_req = 0
+    ewma_rate: Optional[float] = None       # EWMA of observed window rates
+    prev_rate: Optional[float] = None       # last window's observed rate
 
     for w0, w1 in zip(bounds, bounds[1:]):
         window_s = w1 - w0
         ci_w = resolve_ci(trace, w0, w1)
-        # --- oracle window estimates -----------------------------------
+        # --- window estimates ------------------------------------------
         j = i_req
         while j < len(reqs) and reqs[j].arrival_s < w1:
             j += 1
         arrivals = reqs[i_req:j]
         rate = len(arrivals) / window_s
+        if rate_estimator == "oracle" or prev_rate is None:
+            rate_est = rate
+        elif rate_estimator == "last_window":
+            rate_est = prev_rate
+        else:                                # ewma
+            rate_est = ewma_rate
+        if rate_est <= 0 and i_req > 0:
+            rate_est = 1.0 / window_s        # minimum-capacity floor
         # --- re-solve the allocation for this window -------------------
         active = [r for r in replicas.values() if r.active]
         prev_counts: dict[str, int] = {}
         for r in active:
             prev_counts[r.cfg.name] = prev_counts.get(r.cfg.name, 0) + 1
-        if arrivals:
+        if arrivals or (rate_est > 0 and rate_estimator != "oracle"):
             info_w = profiles.at(ci_w)
             boot_g = policy.boot_carbon_g
             if boot_g is None:
@@ -291,8 +337,13 @@ def simulate_autoscaled(
                 if held:
                     inv = {c: max(k - held.get(c, 0), 0)
                            for c, k in inv.items()}
-            dist = bucket_workload(arrivals, buckets)
-            alloc = allocate(dist, rate, info_w,
+            # size distribution: the oracle sees the window's own mix; a
+            # forecaster only knows the history observed so far
+            if rate_estimator == "oracle" or i_req == 0:
+                dist = bucket_workload(arrivals, buckets)
+            else:
+                dist = bucket_workload(reqs[:i_req], buckets)
+            alloc = allocate(dist, rate_est, info_w,
                              slice_factor=policy.slice_factor,
                              inventory=inv,
                              prev_counts=prev_counts,
@@ -312,7 +363,8 @@ def simulate_autoscaled(
                                  draft_cfg=by_name[name].draft,
                                  seed=seed + next_rid,
                                  ctx_estimate=ctx_estimate,
-                                 start_s=reserve + policy.boot_s)
+                                 start_s=reserve + policy.boot_s,
+                                 batching=batching)
                 rep = _Replica(next_rid, by_name[name], sim,
                                reserve_start_s=reserve,
                                serve_start_s=reserve + policy.boot_s)
@@ -361,12 +413,17 @@ def simulate_autoscaled(
                 r.retired_s = max(r.drain_mark_s, r.sim.result().duration_s)
         windows.append({
             "t0": w0, "t1": w1, "ci": ci_w, "rate": rate,
+            "rate_est": rate_est,
             "counts": dict(alloc.counts), "boots": boots, "drains": drains,
             "instances": sum(alloc.counts.values()),
             "alloc_feasible": alloc.feasible,
             "unplaced_rate": alloc.unplaced_rate,
             "boot_g": alloc.boot_g,
         })
+        # estimator state: fold in this window's *observed* rate
+        prev_rate = rate
+        ewma_rate = rate if ewma_rate is None else (
+            policy.ewma_alpha * rate + (1.0 - policy.ewma_alpha) * ewma_rate)
 
     # --- run out the backlog ------------------------------------------
     for r in replicas.values():

@@ -1,0 +1,525 @@
+"""Iteration-level continuous batching: policy, KV-block ledger, scheduler.
+
+This module is the single scheduling brain behind BOTH executors. The
+cluster simulator (`simulator.py:ReplicaSim(batching="continuous")`) and
+the real-compute engine (`engine.py:ServingEngine(batching=...)`) drive
+the same `ContinuousScheduler` object model, so the two make *identical*
+admission / chunking / preemption decisions and stay parity-comparable
+(tests/test_engine_sim_parity.py); only what they do with a `StepPlan`
+differs (the simulator prices it, the engine also runs real forwards).
+
+The policy is vLLM/Sarathi-style hybrid batching:
+
+  - every step carries ALL running sequences as decode participants (one
+    decode slot each; a speculative round's verify chunk still counts as
+    one slot), plus prefill *chunks* of at most `chunk_tokens` per request
+    filling the remaining per-step `token_budget`;
+  - prompts are processed in FCFS chunks instead of one stop-the-world
+    pass, so decodes never stall behind a long prompt and TTFT under
+    bursts stops collapsing (the PR-4 headline, benchmarks/batching_sweep);
+  - KV admission is block-granular, mirroring `PagedKVPool`
+    (`blocks_needed`/`can_admit`/free-on-finish) through the storage-free
+    `BlockLedger`: a chunk is admitted only if its blocks fit next to a
+    worst-case growth reservation for the running decodes;
+  - when decode growth still outruns the pool, the scheduler PREEMPTS the
+    youngest running sequence (vLLM recompute-style: its blocks are freed
+    and its prompt + generated prefix re-prefills later); the pool must
+    fit at least one max-length sequence or `OutOfBlocks` surfaces.
+
+`BatchPolicy(kind="serialized")` routes executors to their legacy loops
+(one whole prompt at a time, prefill priority, batch-mean decode context)
+which stay bit-exact against tests/data/golden_simulate.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import Optional
+
+from repro.core.carbon import ChipSpec
+from repro.models.config import ModelConfig
+
+# re-use the engine pool's error type so callers catch one exception
+from repro.serving.kv_cache import OutOfBlocks
+
+
+# ---------------------------------------------------------------------------
+# Policy
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BatchPolicy:
+    """Knobs of the iteration-level scheduler.
+
+    kind          "continuous" (hybrid chunked-prefill batching) or
+                  "serialized" (legacy loop: whole-prompt prefill priority)
+    chunk_tokens  max prefill tokens one request contributes per step
+    token_budget  max new tokens per step (decode slots + chunk tokens);
+                  bounds step latency, hence TPOT under chunked prefill
+    block_size    KV block granularity (tokens per block)
+    num_blocks    KV pool size in blocks; None derives it from the decode
+                  chip's HBM next to the weights (`default_kv_blocks`)
+    """
+
+    kind: str = "continuous"
+    chunk_tokens: int = 256
+    token_budget: int = 512
+    block_size: int = 16
+    num_blocks: Optional[int] = None
+
+    def __post_init__(self):
+        if self.kind not in ("serialized", "continuous"):
+            raise ValueError(f"unknown batching kind: {self.kind!r}")
+        if self.kind == "continuous":
+            if self.chunk_tokens < 1:
+                raise ValueError(f"chunk_tokens must be >= 1: {self.chunk_tokens}")
+            if self.token_budget < 1:
+                raise ValueError(f"token_budget must be >= 1: {self.token_budget}")
+            if self.block_size < 1:
+                raise ValueError(f"block_size must be >= 1: {self.block_size}")
+
+
+SERIALIZED = BatchPolicy(kind="serialized")
+
+
+def resolve_batch_policy(batching: "BatchPolicy | str | None",
+                         default: str = "serialized") -> BatchPolicy:
+    """Normalize a `batching=` argument: None -> `default`, str -> policy.
+
+    Unknown kind strings raise (BatchPolicy validation) - a typo must not
+    silently fall back to the legacy scheduler."""
+    if batching is None:
+        batching = default
+    if isinstance(batching, str):
+        return BatchPolicy(kind=batching)
+    return batching
+
+
+def default_kv_blocks(cfg: ModelConfig, chip: ChipSpec, block_size: int,
+                      extra_weights_bytes: float = 0.0,
+                      dtype_bytes: int = 2,
+                      reserve_frac: float = 0.1) -> int:
+    """KV blocks that fit in `chip` HBM next to the weights.
+
+    The block-pool analogue of `perfmodel.max_concurrency`: same reserve
+    fraction, but capacity is counted in blocks so admission can be
+    block-granular. Recurrent families (kv_bytes_per_token == 0) get an
+    effectively unlimited pool - their per-sequence state is seq-granular
+    and already bounded by `max_batch`."""
+    weights = cfg.param_count() * dtype_bytes + extra_weights_bytes
+    free = chip.hbm_capacity * (1.0 - reserve_frac) - weights
+    per_block = block_size * cfg.kv_bytes_per_token(dtype_bytes)
+    if free <= 0:
+        return 0
+    if per_block <= 0:
+        return 1_000_000
+    return max(int(free // per_block), 0)
+
+
+def prompt_chunks(prompt_len: int,
+                  chunk_tokens: int) -> "tuple[tuple[int, int], ...]":
+    """(chunk, cached-ctx) splits of one prompt under the chunk size - the
+    shape `perfmodel.hybrid_step_cost` prices and the scheduler emits for
+    an uncontended prefill."""
+    return tuple((min(chunk_tokens, prompt_len - s), s)
+                 for s in range(0, prompt_len, chunk_tokens))
+
+
+def build_single_pool_scheduler(
+    policy: BatchPolicy,
+    kind: str,
+    max_batch: int,
+    spec_k: int,
+    target_cfg: ModelConfig,
+    draft_cfg: Optional[ModelConfig],
+    new_chip: ChipSpec,
+) -> "ContinuousScheduler":
+    """The single-pool hybrid scheduler for standalone/spec/dsd engines.
+
+    ONE constructor for BOTH executors (ReplicaSim and ServingEngine):
+    ledger sizing, decode growth reservation, and the mix_decode choice
+    live here, so the two cannot drift apart and every scheduling decision
+    stays parity-comparable (tests/test_engine_sim_parity.py).
+
+    Ledger sizing: `policy.num_blocks` wins when set; otherwise the pool
+    is derived from the decode chip's HBM next to the weights. For `spec`
+    the draft colocates on the new chip - its weights shrink the pool and
+    its KV rides next to the target's, so one block effectively stores
+    both models' per-token slices.
+    """
+    blocks = policy.num_blocks
+    if kind == "spec" and draft_cfg is not None:
+        if blocks is None:
+            free = new_chip.hbm_capacity * 0.9 - (
+                target_cfg.param_count() * 2 + draft_cfg.param_count() * 2)
+            per_block = policy.block_size * (
+                target_cfg.kv_bytes_per_token()
+                + draft_cfg.kv_bytes_per_token())
+            blocks = 0 if free <= 0 else (
+                1_000_000 if per_block <= 0
+                else max(int(free // per_block), 0))
+    elif blocks is None:
+        blocks = default_kv_blocks(target_cfg, new_chip, policy.block_size)
+    spec_kind = kind in ("spec", "dsd")
+    return ContinuousScheduler(
+        policy, max_batch, BlockLedger(blocks, policy.block_size),
+        decode_tokens=spec_k + 1 if spec_kind else 1,
+        mix_decode=not spec_kind)
+
+
+def build_dpd_prefill_scheduler(
+    policy: BatchPolicy,
+    max_batch: int,
+    target_cfg: ModelConfig,
+    new_chip: ChipSpec,
+) -> "ContinuousScheduler":
+    """The dpd prefill-pool (pool A) scheduler, shared by both executors.
+
+    The prefill pool has no decodes to stall, so per-seq chunking buys
+    nothing there: batch whole prompts under the step token budget
+    (chunks still split prompts longer than the budget). Its ledger is
+    always derived from the *new* chip's HBM - `policy.num_blocks`
+    describes the decode pool (pool B), the binding KV resource in dpd."""
+    pol_a = dataclasses.replace(policy, chunk_tokens=policy.token_budget)
+    return ContinuousScheduler(
+        pol_a, max_batch,
+        BlockLedger(default_kv_blocks(target_cfg, new_chip, policy.block_size),
+                    policy.block_size), 1)
+
+
+def build_dpd_decode_ledger(
+    policy: BatchPolicy,
+    target_cfg: ModelConfig,
+    old_chip: ChipSpec,
+) -> BlockLedger:
+    """The dpd decode-pool (pool B) block ledger, shared by both executors."""
+    blocks = policy.num_blocks
+    if blocks is None:
+        blocks = default_kv_blocks(target_cfg, old_chip, policy.block_size)
+    return BlockLedger(blocks, policy.block_size)
+
+
+# ---------------------------------------------------------------------------
+# Block ledger: PagedKVPool's accounting without the storage
+# ---------------------------------------------------------------------------
+class BlockLedger:
+    """Block-table accounting mirror of `PagedKVPool`.
+
+    Same admission arithmetic (`blocks_needed`, `can_admit`), same
+    alloc/extend/free lifecycle, no K/V arrays - the simulator runs
+    admission against this, the engine against the real pool, and the
+    shared scheduler keeps the two in lockstep. `peak_used` records the
+    high-water mark for the block-budget property test."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 0 or block_size < 1:
+            raise ValueError(f"bad ledger shape: {num_blocks}x{block_size}")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._held: dict[int, int] = {}          # sid -> blocks held
+        self._used = 0
+        self.peak_used = 0
+
+    @property
+    def used_blocks(self) -> int:
+        return self._used
+
+    @property
+    def free_blocks(self) -> int:
+        return self.num_blocks - self._used
+
+    def blocks_needed(self, tokens: int) -> int:
+        return -(-tokens // self.block_size)
+
+    def can_admit(self, tokens: int) -> bool:
+        return self.blocks_needed(tokens) <= self.free_blocks
+
+    def held(self, sid: int) -> int:
+        return self._held.get(sid, 0)
+
+    def allocate(self, sid: int, tokens: int) -> None:
+        if sid in self._held:
+            raise ValueError(f"seq {sid} already allocated")
+        need = self.blocks_needed(tokens)
+        if need > self.free_blocks:
+            raise OutOfBlocks(f"need {need} blocks, {self.free_blocks} free")
+        self._held[sid] = need
+        self._used += need
+        self.peak_used = max(self.peak_used, self._used)
+
+    def extend_to(self, sid: int, tokens: int) -> None:
+        """Grow seq `sid`'s allocation to cover `tokens` total."""
+        have = self._held[sid]
+        need = self.blocks_needed(tokens) - have
+        if need <= 0:
+            return
+        if need > self.free_blocks:
+            raise OutOfBlocks(f"extend needs {need} blocks, "
+                              f"{self.free_blocks} free")
+        self._held[sid] = have + need
+        self._used += need
+        self.peak_used = max(self.peak_used, self._used)
+
+    def free(self, sid: int) -> None:
+        self._used -= self._held.pop(sid)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler state
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SchedSeq:
+    """One request as the scheduler sees it (executor payload attached)."""
+
+    sid: int
+    prompt_len: int
+    output_len: int
+    payload: object = None
+    # prefill progress: `prefill_target` tokens must be (re)computed before
+    # the sequence decodes; after a preemption it covers prompt + the
+    # already-emitted prefix (vLLM recompute semantics)
+    prefill_target: int = -1
+    prefilled: int = 0
+    emitted: int = 0
+    kv: int = 0                       # tokens currently cached (pool length)
+    preemptions: int = 0
+
+    def __post_init__(self):
+        if self.prefill_target < 0:
+            self.prefill_target = self.prompt_len
+
+    @property
+    def remaining(self) -> int:
+        return self.output_len - self.emitted
+
+    @property
+    def ctx(self) -> int:
+        """Decode-pricing context (matches the legacy `_Active.ctx`
+        convention: prompt plus every token emitted so far)."""
+        return self.prompt_len + self.emitted
+
+
+@dataclasses.dataclass
+class PrefillChunk:
+    seq: SchedSeq
+    tokens: int
+    ctx_before: int                   # cached tokens the chunk attends to
+    completes: bool                   # last chunk of this (re)prefill
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """One engine iteration's worth of work, in execution order."""
+
+    chunks: list[PrefillChunk]
+    decodes: list[SchedSeq]
+    preempted: list[SchedSeq]
+
+    def chunk_specs(self) -> tuple[tuple[int, int], ...]:
+        return tuple((c.tokens, c.ctx_before) for c in self.chunks)
+
+    def decode_ctxs(self) -> tuple[int, ...]:
+        return tuple(s.ctx for s in self.decodes)
+
+
+class ContinuousScheduler:
+    """Builds hybrid `StepPlan`s under the token budget and block ledger.
+
+    Deterministic: plans depend only on the submission order and the
+    reported per-step emissions, never on wall time or randomness, so the
+    simulator and the engine replay identical schedules.
+
+    Contract per step: call `next_plan()`, execute/price it, then report
+    outcomes in plan order - `complete_chunk` for every chunk (then
+    `note_first_token` when a prefill just completed with nothing emitted
+    yet), `note_decode(seq, emitted)` for every decode participant.
+    Finished sequences free their blocks inside those callbacks.
+    """
+
+    def __init__(self, policy: BatchPolicy, max_batch: int,
+                 ledger: BlockLedger, decode_tokens: int = 1,
+                 mix_decode: bool = True):
+        if policy.kind != "continuous":
+            raise ValueError("ContinuousScheduler needs a continuous policy")
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1: {max_batch}")
+        self.policy = policy
+        self.max_batch = max_batch
+        self.ledger = ledger
+        # mix_decode=True (standalone/dpd): every step is a true hybrid
+        # forward - decode tokens + prefill chunks share one weight read.
+        # mix_decode=False (spec/dsd): a "decode slot" is a whole
+        # speculative round (a multi-pass draft+verify pipeline), so
+        # riding chunks on it would gate TTFT behind the round's draft
+        # steps; instead prefill chunks get dedicated budget-bounded
+        # batched steps with priority, and rounds run when no prefill is
+        # schedulable - decode stalls stay bounded by `token_budget`.
+        self.mix_decode = mix_decode
+        # worst-case KV growth of one decode participant per step (k+1 for
+        # speculative kinds: the verify pass extends the cache by k+1
+        # before rejected tokens are trimmed back)
+        self.decode_tokens = max(decode_tokens, 1)
+        self.waiting: deque[SchedSeq] = deque()   # not yet holding blocks
+        self.prefilling: list[SchedSeq] = []      # blocks held, chunks pending
+        self.running: list[SchedSeq] = []         # fully prefilled, decoding
+        self.finished: list[SchedSeq] = []
+
+    # ------------------------------------------------------------- intake
+    def submit(self, seq: SchedSeq) -> SchedSeq:
+        self.waiting.append(seq)
+        return seq
+
+    @property
+    def n_scheduled(self) -> int:
+        return len(self.prefilling) + len(self.running)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.prefilling or self.running)
+
+    # ------------------------------------------------------------ planning
+    def _growth_reserve(self, decodes: list[SchedSeq]) -> int:
+        """Worst-case blocks this step's decodes may pull from the pool."""
+        return sum(
+            self.ledger.blocks_needed(s.kv + self.decode_tokens)
+            - self.ledger.held(s.sid)
+            for s in decodes)
+
+    def _preempt(self, seq: SchedSeq) -> None:
+        self.ledger.free(seq.sid)
+        if seq in self.running:
+            self.running.remove(seq)
+        else:
+            self.prefilling.remove(seq)
+        seq.preemptions += 1
+        seq.prefill_target = seq.prompt_len + max(seq.emitted - 1, 0)
+        seq.prefilled = 0
+        seq.kv = 0
+        self.waiting.appendleft(seq)
+
+    def _build_chunks(self, budget: int, reserve: int) -> list[PrefillChunk]:
+        """Admit/continue prefill chunks into `budget` tokens, leaving
+        `reserve` blocks untouched for the running decodes' growth."""
+        chunks: list[PrefillChunk] = []
+        # in-flight prefills continue first (FCFS), one chunk per seq/step
+        for seq in self.prefilling:
+            if budget <= 0:
+                break
+            take = min(self.policy.chunk_tokens,
+                       seq.prefill_target - seq.prefilled, budget)
+            if take <= 0:
+                continue
+            need = (self.ledger.blocks_needed(seq.prefilled + take)
+                    - self.ledger.held(seq.sid))
+            if need > self.ledger.free_blocks - reserve:
+                break                              # head-of-line, no skipping
+            self.ledger.extend_to(seq.sid, seq.prefilled + take)
+            chunks.append(PrefillChunk(seq, take, seq.prefilled,
+                                       seq.prefilled + take >= seq.prefill_target))
+            budget -= take
+        # then admit fresh sequences while budget and blocks allow
+        while (budget > 0 and self.waiting
+               and self.n_scheduled < self.max_batch):
+            seq = self.waiting[0]
+            take = min(self.policy.chunk_tokens, seq.prefill_target, budget)
+            need = self.ledger.blocks_needed(take)
+            if need > self.ledger.free_blocks - reserve:
+                break                              # FCFS: no overtaking
+            self.waiting.popleft()
+            self.ledger.allocate(seq.sid, take)
+            self.prefilling.append(seq)
+            chunks.append(PrefillChunk(seq, take, 0,
+                                       take >= seq.prefill_target))
+            budget -= take
+        return chunks
+
+    def next_plan(self) -> Optional[StepPlan]:
+        """The next step, or None when nothing is schedulable."""
+        if not self.has_work:
+            return None
+        if not self.mix_decode:
+            # prefill-priority composition: chunks get dedicated steps
+            chunks = self._build_chunks(self.policy.token_budget,
+                                        self._growth_reserve(self.running))
+            if chunks:
+                return StepPlan(chunks, [], [])
+        decodes = list(self.running)
+        preempted: list[SchedSeq] = []
+        # guarantee this step's worst-case decode growth fits: evict the
+        # least-sunk work first - partial prefills (pure recompute, no
+        # emitted tokens lost), then the youngest running sequences
+        while (self._growth_reserve(decodes) > self.ledger.free_blocks
+               and self.prefilling):
+            victim = self.prefilling[-1]
+            self._preempt(victim)
+            preempted.append(victim)
+        while (self._growth_reserve(decodes) > self.ledger.free_blocks
+               and len(decodes) > 1):
+            victim = decodes[-1]
+            self._preempt(victim)
+            decodes.remove(victim)
+            preempted.append(victim)
+        reserve = self._growth_reserve(decodes)
+        if reserve > self.ledger.free_blocks:
+            # a single sequence the pool cannot grow for even with the
+            # rest evicted: re-prefill needs at least as many blocks
+            raise OutOfBlocks(
+                f"KV pool of {self.ledger.num_blocks} blocks cannot grow a "
+                f"single sequence (kv={decodes[0].kv} "
+                f"+{self.decode_tokens} tokens)")
+        chunks = [] if not self.mix_decode else self._build_chunks(
+            self.policy.token_budget - len(decodes), reserve)
+        if not chunks and not decodes:
+            # nothing runs and no decode will free blocks. Partially
+            # prefilled sequences behind the head-of-line may be wedging
+            # the pool: preempt them youngest-first (recompute) until the
+            # head can take a chunk
+            while not chunks and len(self.prefilling) > 1:
+                victim = self.prefilling[-1]
+                self._preempt(victim)
+                preempted.append(victim)
+                chunks = self._build_chunks(self.policy.token_budget, 0)
+            if not chunks:
+                if self.prefilling or self.waiting:
+                    # the pool is smaller than one chunk of the
+                    # head-of-line prefill: preemption cannot help
+                    raise OutOfBlocks(
+                        f"KV pool of {self.ledger.num_blocks} blocks cannot "
+                        f"fit the next prefill chunk of any queued sequence")
+                return None
+        return StepPlan(chunks, decodes, preempted)
+
+    # ----------------------------------------------------------- outcomes
+    def complete_chunk(self, seq: SchedSeq, tokens: int) -> bool:
+        """Record an executed chunk; True when the (re)prefill completed."""
+        seq.prefilled += tokens
+        seq.kv = seq.prefilled
+        if seq.prefilled < seq.prefill_target:
+            return False
+        self.prefilling.remove(seq)
+        self.running.append(seq)
+        return True
+
+    def note_first_token(self, seq: SchedSeq) -> bool:
+        """First token sampled off the prefill logits; True when that
+        already finishes the request (output_len == 1)."""
+        seq.emitted = 1
+        if seq.remaining <= 0:
+            self._finish(seq)
+            return True
+        return False
+
+    def note_decode(self, seq: SchedSeq, emitted: int) -> bool:
+        """Record a decode participant's emissions; True when finished."""
+        seq.emitted += emitted
+        seq.kv += emitted
+        self.ledger.extend_to(seq.sid, seq.kv)
+        if seq.remaining <= 0:
+            self._finish(seq)
+            return True
+        return False
+
+    def _finish(self, seq: SchedSeq) -> None:
+        self.running.remove(seq)
+        self.ledger.free(seq.sid)
+        self.finished.append(seq)

@@ -35,11 +35,15 @@ from repro.serving.perfmodel import (
     StepCost,
     decode_cost,
     dsd_round_time,
+    hybrid_step_cost,
     prefill_cost,
 )
 
 # (chip name, step cost, start offset relative to the admission instant)
 Charge = tuple[str, StepCost, float]
+
+# (chunk tokens, tokens already cached) - see perfmodel.hybrid_step_cost
+ChunkSpec = tuple[int, int]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,6 +120,125 @@ def spec_round_time(
         return c_draft.time_s + c_target.time_s
     return dsd_round_time(c_draft.time_s, c_target.time_s, interconnect,
                           ids_bytes, probs_bytes, overlap=overlap)
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridSchedule:
+    """One continuous-batching step: per-chip charges + wall occupancy."""
+
+    charges: tuple[Charge, ...]
+    duration_s: float
+    link_ids_bytes: float = 0.0      # dsd: token ids shipped this step
+    link_probs_bytes: float = 0.0    # dsd: draft probs shipped this step
+
+
+def _scaled(cost: StepCost, factor: int) -> StepCost:
+    return dataclasses.replace(cost, time_s=cost.time_s * factor,
+                               energy_j=cost.energy_j * factor)
+
+
+def hybrid_step_charges(
+    kind: str,
+    target_cfg: ModelConfig,
+    draft_cfg: Optional[ModelConfig],
+    new_chip: ChipSpec,
+    old_chip: Optional[ChipSpec],
+    chunks: "tuple[ChunkSpec, ...]",
+    decode_ctxs: "tuple[int, ...]",
+    k: int,
+    interconnect: Interconnect,
+    overlap: bool = True,
+) -> HybridSchedule:
+    """Price one continuous-batching step for any serving kind.
+
+    The single source of truth for BOTH executors' continuous policy
+    (ReplicaSim._advance_continuous and the engine's continuous step) -
+    mirroring how `prefill_charges`/`spec_round_charges` price the
+    serialized policy. Decode KV traffic is summed per sequence (exact
+    under the roofline), unlike the serialized path's batch-mean context.
+
+      standalone  one hybrid pass on the new chip
+      spec        draft K+1 decode steps, then the target hybrid
+                  verify+chunk pass, then the draft's own chunk prefill -
+                  all serialized on the new chip (a pure-prefill step
+                  degenerates to `prefill_charges`'s target-then-draft)
+      dsd         draft decode steps + draft chunk prefill on the old
+                  pool; target hybrid pass on the new pool; the Fig. 7
+                  overlap schedule hides the probs transfer behind the
+                  target pass, and the draft chunk prefill hides behind it
+                  too (parallel pools)
+      dpd         prefill chunks charge the new pool, decode charges the
+                  old pool; `duration_s` is their serialized sum - the
+                  single-clock engine's view. The two-pool simulator
+                  prices each pool separately via `hybrid_step_cost` and
+                  only matches the engine on pipelined (batch-1) runs,
+                  like the serialized policy.
+    """
+    if kind == "standalone":
+        c = hybrid_step_cost(target_cfg, new_chip, chunks, decode_ctxs)
+        return HybridSchedule(((new_chip.name, c, 0.0),), c.time_s)
+
+    if kind == "dpd":
+        charges: list[Charge] = []
+        t = 0.0
+        if chunks:
+            cp = hybrid_step_cost(target_cfg, new_chip, chunks, ())
+            charges.append((new_chip.name, cp, 0.0))
+            t += cp.time_s
+        if decode_ctxs:
+            cd = hybrid_step_cost(target_cfg, old_chip, (), decode_ctxs)
+            charges.append((old_chip.name, cd, t))
+            t += cd.time_s
+        return HybridSchedule(tuple(charges), t)
+
+    if kind == "spec":
+        charges = []
+        t = 0.0
+        if decode_ctxs:
+            d1 = hybrid_step_cost(draft_cfg, new_chip, (), decode_ctxs)
+            cd = _scaled(d1, k + 1)               # K+1 sequential draft steps
+            charges.append((new_chip.name, cd, t))
+            t += cd.time_s
+        ct = hybrid_step_cost(target_cfg, new_chip, chunks, decode_ctxs,
+                              new_tokens=k + 1)
+        charges.append((new_chip.name, ct, t))
+        t += ct.time_s
+        if chunks:
+            cdc = hybrid_step_cost(draft_cfg, new_chip, chunks, ())
+            charges.append((new_chip.name, cdc, t))
+            t += cdc.time_s
+        return HybridSchedule(tuple(charges), t)
+
+    if kind == "dsd":
+        charges = []
+        ct = hybrid_step_cost(target_cfg, new_chip, chunks, decode_ctxs,
+                              new_tokens=k + 1)
+        if not decode_ctxs:
+            # pure prefill: pools run in parallel (prefill_charges' dsd)
+            cdc = hybrid_step_cost(draft_cfg, old_chip, chunks, ())
+            charges.append((new_chip.name, ct, 0.0))
+            charges.append((old_chip.name, cdc, 0.0))
+            return HybridSchedule(tuple(charges), max(ct.time_s, cdc.time_s))
+        d1 = hybrid_step_cost(draft_cfg, old_chip, (), decode_ctxs)
+        cd = _scaled(d1, k + 1)
+        ids_b, probs_b = dsd_link_bytes(draft_cfg, len(decode_ctxs), k)
+        round_t = dsd_round_time(cd.time_s, ct.time_s, interconnect,
+                                 ids_b, probs_b, overlap=overlap)
+        charges.append((old_chip.name, cd, 0.0))
+        charges.append((new_chip.name, ct,
+                        cd.time_s + interconnect.transfer_time(ids_b)))
+        t_old = cd.time_s
+        if chunks:
+            # the draft's chunk prefill overlaps the target pass (parallel
+            # pools); it extends the round only if the old pool is the
+            # straggler
+            cdc = hybrid_step_cost(draft_cfg, old_chip, chunks, ())
+            charges.append((old_chip.name, cdc, t_old))
+            t_old += cdc.time_s
+        return HybridSchedule(tuple(charges), max(round_t, t_old),
+                              link_ids_bytes=ids_b, link_probs_bytes=probs_b)
+
+    raise ValueError(f"unknown serving kind: {kind!r}")
 
 
 def dsd_link_bytes(draft_cfg: ModelConfig, batch: int, k: int) -> tuple[int, int]:

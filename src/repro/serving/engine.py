@@ -1,15 +1,30 @@
-"""Real-compute continuous-batching serving engine.
+"""Real-compute serving engine (serialized or iteration-level batching).
 
 Runs actual JAX forward passes (CPU-validatable with reduced configs; the
-same code paths drive TPU pools) with iteration-level scheduling over a
-paged KV pool:
+same code paths drive TPU pools) with scheduling over a paged KV pool.
+Two scheduler policies (serving/batching.py), selected via `batching=`:
 
-  - prefill requests take priority (one per iteration, vLLM-style),
+  serialized (legacy default)
+  - prefill requests take priority (one whole prompt per iteration),
   - active sequences decode as one batch per iteration,
-  - spec/dsd modes run batched speculative rounds (core/spec_decode.py)
-    with *measured* acceptance rates,
-  - every iteration is also priced by the analytic chip model, so a run
-    yields (real tokens, real acceptance, modeled latency/energy/carbon).
+  - admission by batch count against the pool.
+
+  continuous (vLLM/Sarathi-style)
+  - the engine drives the SAME `ContinuousScheduler` object model as the
+    cluster simulator (built by the shared factories in batching.py), so
+    both executors make identical admission / chunking / preemption
+    decisions and stay parity-comparable per step;
+  - prefill runs in real *chunks* through `PagedKVPool`: each chunk step
+    computes the prompt prefix so far and scatters its KV into the
+    sequence's blocks (block-granular growth, exactly the ledger's
+    arithmetic), decodes ride along under the step token budget;
+  - every step is priced by `costs.hybrid_step_charges`, the same
+    function the simulator charges.
+
+In both policies spec/dsd modes run batched speculative rounds
+(core/spec_decode.py) with *measured* acceptance rates, and every
+iteration is priced by the analytic chip model, so a run yields (real
+tokens, real acceptance, modeled latency/energy/carbon).
 
 The engine is the ground-truth executor: the cluster simulator
 (simulator.py) takes its measured acceptance rate and reproduces its
@@ -30,8 +45,19 @@ from repro.core.spec_decode import SpecConfig, spec_decode_round
 from repro.models import backbone
 from repro.models.config import ModelConfig
 from repro.models.layers import DEFAULT_EXEC, ExecConfig
+from repro.serving.batching import (
+    BatchPolicy,
+    ContinuousScheduler,
+    OutOfBlocks,
+    SchedSeq,
+    build_dpd_decode_ledger,
+    build_dpd_prefill_scheduler,
+    build_single_pool_scheduler,
+    resolve_batch_policy,
+)
 from repro.serving.costs import (
     dpd_kv_bytes,
+    hybrid_step_charges,
     prefill_charges,
     spec_round_charges,
     spec_round_time,
@@ -83,9 +109,27 @@ class ServingEngine:
         temperature: float = 1.0,
         seed: int = 0,
         exec_cfg: ExecConfig = DEFAULT_EXEC,
+        batching: "BatchPolicy | str | None" = None,
     ):
         if kind in ("spec", "dsd"):
             assert draft_cfg is not None and draft_params is not None
+        self.policy = resolve_batch_policy(batching, default="serialized")
+        if self.policy.kind == "continuous":
+            # the REAL pool is the capacity: the scheduler's ledger must
+            # never admit more blocks than the storage holds
+            if self.policy.num_blocks is None:
+                self.policy = dataclasses.replace(self.policy,
+                                                  num_blocks=pool_blocks)
+            elif self.policy.num_blocks > pool_blocks:
+                raise ValueError(
+                    f"BatchPolicy.num_blocks={self.policy.num_blocks} exceeds "
+                    f"the physical pool ({pool_blocks} blocks): the scheduler "
+                    f"would admit more KV than the storage holds")
+            if self.policy.block_size != block_size:
+                raise ValueError(
+                    f"block_size={block_size} conflicts with "
+                    f"BatchPolicy.block_size={self.policy.block_size}; set "
+                    f"the block size on the policy for continuous batching")
         self.cfg = target_cfg
         self.params = target_params
         self.kind = kind
@@ -116,15 +160,44 @@ class ServingEngine:
         self.active: dict[int, EngineRequest] = {}
         self.last_token: dict[int, int] = {}  # committed-but-unprocessed token
         self.finished: list[EngineRequest] = []
+        self._next_id = 0
         # measured speculative statistics
         self.rounds = 0
         self.accepted = 0
         self.proposed = 0
+        # continuous-policy state: the SAME scheduler construction as the
+        # simulator's (batching.py factories), so both executors replay
+        # identical schedules on identical workloads
+        self._sched: Optional[ContinuousScheduler] = None
+        self._sched_a: Optional[ContinuousScheduler] = None  # dpd pool A
+        self._ledger_b = None                                # dpd pool B
+        self._decoding_b: list[SchedSeq] = []                # dpd decode set
+        # dpd: (EngineRequest, resume_emitted, stashed (k, v) or None)
+        self._ready_b: deque = deque()
+        if self.policy.kind == "continuous":
+            if kind == "dpd":
+                self._sched_a = build_dpd_prefill_scheduler(
+                    self.policy, max_batch, target_cfg, self.new_chip)
+                # the two ledgers model the two CHIPS' HBM; on the engine
+                # both logical pools share ONE physical PagedKVPool, so cap
+                # pool A's (chip-derived, effectively unbounded for reduced
+                # configs) ledger at the storage. Joint A+B pressure beyond
+                # the physical pool still raises kv_cache.OutOfBlocks - the
+                # same undersized-pool signal the serialized engine gives
+                self._sched_a.ledger.num_blocks = min(
+                    self._sched_a.ledger.num_blocks, pool_blocks)
+                self._ledger_b = build_dpd_decode_ledger(
+                    self.policy, target_cfg, self.old_chip)
+            else:
+                self._sched = build_single_pool_scheduler(
+                    self.policy, kind, max_batch, spec.num_draft_tokens,
+                    target_cfg, draft_cfg, self.new_chip)
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int, arrival_s: float = 0.0) -> EngineRequest:
-        r = EngineRequest(len(self.waiting) + len(self.active) + len(self.finished),
-                          np.asarray(prompt, np.int32), max_new_tokens, arrival_s)
+        r = EngineRequest(self._next_id, np.asarray(prompt, np.int32),
+                          max_new_tokens, arrival_s)
+        self._next_id += 1
         self.waiting.append(r)
         return r
 
@@ -153,6 +226,10 @@ class ServingEngine:
         request takes prefill priority once it has arrived; future
         arrivals only pull the clock forward when the engine is otherwise
         idle - decode never gets clock-warped past pending work."""
+        if self.policy.kind == "continuous":
+            if self.kind == "dpd":
+                return self._step_continuous_dpd()
+            return self._step_continuous()
         if self.waiting and len(self.active) < self.max_batch and (
                 self.waiting[0].arrival_s <= self.clock or not self.active):
             self._do_prefill(self.waiting.popleft())
@@ -281,6 +358,314 @@ class ServingEngine:
             self._emit(r, emit)
             self.last_token[sid] = int(new_last[i])
         self._reap()
+
+    # ------------------------------------------------- continuous batching
+    def _admit_continuous(self, sched: ContinuousScheduler,
+                          output_len=None) -> None:
+        """Move arrived requests into the shared scheduler (FCFS)."""
+        while self.waiting and self.waiting[0].arrival_s <= self.clock:
+            r = self.waiting.popleft()
+            self.active[r.req_id] = r
+            sched.submit(SchedSeq(
+                r.req_id, len(r.prompt),
+                r.max_new_tokens if output_len is None else output_len,
+                payload=r))
+
+    def _prefix_tokens(self, r: EngineRequest, upto: int) -> np.ndarray:
+        """First `upto` tokens of prompt + committed output (recompute
+        prefix for chunked / resumed prefill)."""
+        if upto <= len(r.prompt):
+            return r.prompt[:upto]
+        return np.concatenate(
+            [r.prompt, np.asarray(r.out_tokens[: upto - len(r.prompt)],
+                                  np.int32)])
+
+    def _chunk_prefill(self, params, cfg, pool: PagedKVPool, sid: int,
+                       prefix: np.ndarray, fresh: bool):
+        """One real prefill chunk: compute the prefix, grow the sequence's
+        pool blocks to cover it, scatter the KV. Returns the last-position
+        logits (valid first-token logits once the prefill completes).
+
+        CPU-scale note: the chunk is realized by recomputing the whole
+        prefix (the backbone's serve_step is single-token); the KV that
+        lands in the pool is identical to a true incremental chunk pass,
+        and the *priced* cost is the chunk's (costs.hybrid_step_charges),
+        so scheduling and accounting see genuine chunked prefill."""
+        batch = {"tokens": jnp.asarray(prefix)[None, :]}
+        logits, cache = backbone.prefill(params, batch, cfg, self.exec_cfg)
+        if fresh:
+            pool.allocate(sid, len(prefix))
+        else:
+            pool.extend(sid, len(prefix) - pool.seq(sid).length)
+        pool.scatter([sid], cache["k"], cache["v"])
+        return logits
+
+    def _retire_continuous(self, seq: SchedSeq, pool_b: bool = False) -> None:
+        r: EngineRequest = seq.payload
+        self.active.pop(seq.sid, None)
+        self.last_token.pop(seq.sid, None)
+        self.pool.free(seq.sid)
+        if self.draft_pool is not None:
+            self.draft_pool.free(seq.sid)
+        if pool_b:
+            self._ledger_b.free(seq.sid)
+        self._finish(r)
+
+    def _step_continuous(self) -> bool:
+        """One continuous-policy iteration (standalone/spec/dsd).
+
+        Asks the shared `ContinuousScheduler` for a `StepPlan`, executes
+        it with real forwards, and prices it through the same
+        `costs.hybrid_step_charges` the simulator charges - so on an
+        identical workload both executors replay the identical schedule
+        (tests/test_engine_sim_parity.py, continuous rows)."""
+        sched = self._sched
+        while True:
+            self._admit_continuous(sched)
+            plan = sched.next_plan()
+            if plan is not None:
+                break
+            if not self.waiting:
+                return False
+            self.clock = max(self.clock, self.waiting[0].arrival_s)
+        for victim in plan.preempted:
+            # scheduler already freed its ledger and reset the seq for
+            # recompute; mirror on the real pools (tokens are kept - the
+            # re-prefill recomputes prompt + emitted prefix)
+            self.pool.free(victim.sid)
+            if self.draft_pool is not None:
+                self.draft_pool.free(victim.sid)
+        k = self.spec.num_draft_tokens
+        hs = hybrid_step_charges(
+            self.kind, self.cfg, self.draft_cfg, self.new_chip, self.old_chip,
+            plan.chunk_specs(), plan.decode_ctxs(), k, self.interconnect)
+        for chip_name, cost, rel_s in hs.charges:
+            self._charge(CHIP_DB[chip_name], cost, at_s=self.clock + rel_s)
+        t_end = self.clock + hs.duration_s
+        for ch in plan.chunks:
+            seq = ch.seq
+            r: EngineRequest = seq.payload
+            prefix = self._prefix_tokens(r, ch.ctx_before + ch.tokens)
+            logits = self._chunk_prefill(self.params, self.cfg, self.pool,
+                                         seq.sid, prefix, ch.ctx_before == 0)
+            if self.kind in ("spec", "dsd"):
+                self._chunk_prefill(self.draft_params, self.draft_cfg,
+                                    self.draft_pool, seq.sid, prefix,
+                                    ch.ctx_before == 0)
+            if sched.complete_chunk(seq, ch.tokens):
+                if seq.emitted == 0:
+                    tok = int(np.asarray(self._sample(logits))[0])
+                    r.out_tokens.append(tok)
+                    r.ttft_s = t_end - r.arrival_s
+                    r.first_token_s = r.last_token_s = t_end
+                    if sched.note_first_token(seq):
+                        self._retire_continuous(seq)
+                        continue
+                self.last_token[seq.sid] = r.out_tokens[-1]
+        if plan.decodes:
+            if self.kind in ("spec", "dsd"):
+                self._continuous_spec_round(plan.decodes, t_end)
+            else:
+                self._continuous_decode(plan.decodes, t_end)
+        self.clock = t_end
+        return True
+
+    def _continuous_decode(self, decodes: "list[SchedSeq]",
+                           t_end: float) -> None:
+        sched = self._sched
+        sids = [s.sid for s in decodes]
+        cache = self._gather(self.pool, sids, 1)
+        tokens = jnp.asarray([self.last_token[s] for s in sids], jnp.int32)
+        logits, cache = backbone.serve_step(self.params, cache, tokens,
+                                            self.cfg, self.exec_cfg)
+        new = np.asarray(self._sample(logits))
+        self._commit(self.pool, sids, cache, np.asarray(cache["pos"]))
+        for seq, tok in zip(decodes, new):
+            r: EngineRequest = seq.payload
+            r.out_tokens.append(int(tok))
+            r.last_token_s = t_end
+            self.last_token[seq.sid] = int(tok)
+            if sched.note_decode(seq, 1):
+                self._retire_continuous(seq)
+
+    def _continuous_spec_round(self, decodes: "list[SchedSeq]",
+                               t_end: float) -> None:
+        sched = self._sched
+        k = self.spec.num_draft_tokens
+        sids = [s.sid for s in decodes]
+        tcache = self._gather(self.pool, sids, k + 1)
+        dcache = self._gather(self.draft_pool, sids, k + 1)
+        last = jnp.asarray([self.last_token[s] for s in sids], jnp.int32)
+        out = spec_decode_round(
+            self.params, self.cfg, tcache,
+            self.draft_params, self.draft_cfg, dcache,
+            last, self.spec, self._split(), self.exec_cfg)
+        n_acc = np.asarray(out["n_accepted"])
+        self._commit(self.pool, sids, out["target_cache"],
+                     np.asarray(out["target_cache"]["pos"]))
+        self._commit(self.draft_pool, sids, out["draft_cache"],
+                     np.asarray(out["draft_cache"]["pos"]))
+        if self.kind == "dsd":
+            self.link_bytes += out["bytes_token_ids"] + out["bytes_draft_probs"]
+        toks = np.asarray(out["tokens"])
+        new_last = np.asarray(out["new_last"])
+        self.rounds += 1
+        self.accepted += int(n_acc.sum())
+        self.proposed += len(sids) * k
+        for i, seq in enumerate(list(decodes)):
+            r: EngineRequest = seq.payload
+            emit = [int(t) for t in toks[i, : n_acc[i] + 1]]
+            overflow = len(r.out_tokens) + len(emit) - r.max_new_tokens
+            if overflow > 0:
+                emit = emit[: len(emit) - overflow]
+            r.out_tokens.extend(emit)
+            r.last_token_s = t_end
+            self.last_token[seq.sid] = int(new_last[i])
+            if sched.note_decode(seq, len(emit)):
+                self._retire_continuous(seq)
+
+    # ------------------------------------------------------ continuous dpd
+    def _step_continuous_dpd(self) -> bool:
+        """Continuous dpd on the engine's single clock.
+
+        Pool A batches waiting prompts into shared chunked-prefill steps
+        (the shared `build_dpd_prefill_scheduler` schedule); completed
+        prompts serialize their KV transfer into the clock (the engine's
+        single-clock view of the FIFO link, like the serialized path) and
+        queue for pool B. Pool B admits block-granularly against the
+        shared `build_dpd_decode_ledger` and decodes with per-sequence
+        context sums. Storage stays in the one physical `PagedKVPool`
+        (pools are logical on CPU); the two ledgers model each chip's
+        HBM."""
+        sched = self._sched_a
+        while True:
+            self._admit_continuous(sched, output_len=1)
+            plan = sched.next_plan()
+            if plan is not None:
+                self._dpd_prefill_step(plan)
+                return True
+            self._dpd_admit()
+            if self._decoding_b:
+                self._dpd_decode_step()
+                return True
+            if not self.waiting:
+                return False
+            self.clock = max(self.clock, self.waiting[0].arrival_s)
+
+    def _dpd_prefill_step(self, plan) -> None:
+        sched = self._sched_a
+        for victim in plan.preempted:
+            # wedged-pool recompute: scheduler freed its ledger; mirror on
+            # the real pool (the re-prefill recomputes the prompt)
+            self.pool.free(victim.sid)
+        hs = hybrid_step_charges(
+            "dpd", self.cfg, None, self.new_chip, self.old_chip,
+            plan.chunk_specs(), (), 0, self.interconnect)
+        for chip_name, cost, rel_s in hs.charges:
+            self._charge(CHIP_DB[chip_name], cost, at_s=self.clock + rel_s)
+        t_end = self.clock + hs.duration_s
+        tx_total = 0.0
+        for ch in plan.chunks:
+            seq = ch.seq
+            r: EngineRequest = seq.payload
+            prefix = self._prefix_tokens(r, ch.ctx_before + ch.tokens)
+            logits = self._chunk_prefill(self.params, self.cfg, self.pool,
+                                         seq.sid, prefix, ch.ctx_before == 0)
+            if not sched.complete_chunk(seq, ch.tokens):
+                continue
+            tok = int(np.asarray(self._sample(logits))[0])
+            r.out_tokens.append(tok)
+            r.ttft_s = t_end - r.arrival_s
+            r.first_token_s = r.last_token_s = t_end
+            sched.note_first_token(seq)       # retires the pool-A seq
+            nbytes = dpd_kv_bytes(self.cfg, len(r.prompt))
+            self.link_bytes += nbytes
+            tx_total += self.interconnect.transfer_time(nbytes)
+            if r.done:
+                self.active.pop(seq.sid, None)
+                self.pool.free(seq.sid)
+                self._finish(r)
+            else:
+                self.last_token[seq.sid] = tok
+                self._ready_b.append(r)
+        self.clock = t_end + tx_total
+
+    def _dpd_admit(self) -> None:
+        ledger = self._ledger_b
+        while self._ready_b and len(self._decoding_b) < self.max_batch:
+            r: EngineRequest = self._ready_b[0]
+            emitted = len(r.out_tokens)
+            kv0 = len(r.prompt) + emitted - 1
+            # watermark: keep one growth block per active sequence
+            if ledger.blocks_needed(kv0) > \
+                    ledger.free_blocks - len(self._decoding_b) - 1:
+                if not self._decoding_b and ledger.used_blocks == 0:
+                    raise OutOfBlocks(
+                        "dpd decode pool cannot fit one sequence (need "
+                        f"{ledger.blocks_needed(kv0)} blocks of "
+                        f"{ledger.num_blocks})")
+                break
+            seq = SchedSeq(r.req_id, len(r.prompt), r.max_new_tokens,
+                           payload=r)
+            seq.prefilled = seq.prefill_target
+            seq.kv = kv0
+            seq.emitted = emitted
+            ledger.allocate(seq.sid, kv0)
+            self._decoding_b.append(seq)
+            self._ready_b.popleft()
+
+    def _dpd_decode_step(self) -> None:
+        ledger = self._ledger_b
+        # block-pressure step composition, identical to the simulator's:
+        # boundary-crossers get the free blocks oldest-first, others stall
+        budget = ledger.free_blocks
+        stepping = []
+        for seq in self._decoding_b:
+            need = ledger.blocks_needed(seq.kv + 1) - ledger.held(seq.sid)
+            if need <= 0:
+                stepping.append(seq)
+            elif need <= budget:
+                stepping.append(seq)
+                budget -= need
+        if not stepping:
+            if len(self._decoding_b) == 1:
+                raise OutOfBlocks(
+                    f"dpd decode pool of {ledger.num_blocks} blocks cannot "
+                    f"grow a single sequence (kv={self._decoding_b[0].kv})")
+            # fully wedged: swap the youngest back over the link (ledger
+            # accounting only - the KV stays in the shared storage pool)
+            victim = self._decoding_b.pop()
+            ledger.free(victim.sid)
+            nbytes = dpd_kv_bytes(self.cfg, victim.kv)
+            self.link_bytes += nbytes
+            self.clock += self.interconnect.transfer_time(nbytes)
+            self._ready_b.append(victim.payload)
+            return
+        sids = [s.sid for s in stepping]
+        ctxs = tuple(s.ctx for s in stepping)
+        cache = self._gather(self.pool, sids, 1)
+        tokens = jnp.asarray([self.last_token[s] for s in sids], jnp.int32)
+        logits, cache = backbone.serve_step(self.params, cache, tokens,
+                                            self.cfg, self.exec_cfg)
+        new = np.asarray(self._sample(logits))
+        self._commit(self.pool, sids, cache, np.asarray(cache["pos"]))
+        hs = hybrid_step_charges(
+            "dpd", self.cfg, None, self.new_chip, self.old_chip,
+            (), ctxs, 0, self.interconnect)
+        for chip_name, cost, rel_s in hs.charges:
+            self._charge(CHIP_DB[chip_name], cost, at_s=self.clock + rel_s)
+        self.clock += hs.duration_s
+        for seq, tok in zip(stepping, new):
+            r: EngineRequest = seq.payload
+            r.out_tokens.append(int(tok))
+            r.last_token_s = self.clock
+            self.last_token[seq.sid] = int(tok)
+            seq.emitted += 1
+            seq.kv += 1
+            ledger.extend_to(seq.sid, seq.kv)
+            if seq.remaining <= 0:
+                self._decoding_b.remove(seq)
+                self._retire_continuous(seq, pool_b=True)
 
     def _emit(self, r: EngineRequest, tokens: list[int]) -> None:
         r.out_tokens.extend(tokens)

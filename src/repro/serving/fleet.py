@@ -34,15 +34,26 @@ from typing import Optional, Sequence
 from repro.core.carbon import CarbonBreakdown, CarbonTrace, DEFAULT_CI
 from repro.core.disagg import DisaggConfig
 from repro.core.spec_decode import expected_tokens_per_round
+from repro.serving.batching import (
+    BatchPolicy,
+    prompt_chunks,
+    resolve_batch_policy,
+)
 from repro.serving.costs import (
     dpd_kv_bytes,
     dsd_link_bytes,
+    hybrid_step_charges,
     spec_round_charges,
     spec_round_time,
 )
-from repro.serving.perfmodel import decode_cost, prefill_cost
+from repro.serving.perfmodel import decode_cost, hybrid_step_cost, prefill_cost
 from repro.serving.simulator import CHIP_DB, SimResult, simulate
 from repro.serving.workload import Dataset, Request
+
+# the fleet/autoscale layers run iteration-level continuous batching by
+# default (serving/batching.py); pass batching="serialized" to the entry
+# points below to reproduce the legacy stop-the-world-prefill fleets
+FLEET_BATCHING_DEFAULT = "continuous"
 
 
 # ---------------------------------------------------------------------------
@@ -104,18 +115,76 @@ class FleetSpec:
 # Analytic service-time estimate (dispatcher weight, not ground truth -
 # the per-replica simulation is the ground truth)
 # ---------------------------------------------------------------------------
-def estimate_service_s(cfg: DisaggConfig, prompt_len: int, output_len: int,
-                       batch_hint: int = 8) -> float:
-    """Rough busy-time a request adds to an instance of `cfg`.
+def _estimate_continuous_s(cfg: DisaggConfig, prompt_len: int,
+                           output_len: int, b: int,
+                           policy: BatchPolicy) -> float:
+    """Busy-time a request adds under iteration-level continuous batching.
 
-    Uses the same perfmodel rooflines the simulator charges, at a nominal
-    decode batch `batch_hint`, so relative weights across instance types
-    are faithful even though absolute queueing is not modeled here."""
+    Prefill is the *marginal* cost of riding the prompt's chunks on hybrid
+    steps that already carry `b` decode participants (standalone), or of
+    budget-bounded dedicated prefill steps (spec/dsd/dpd, where decode
+    slots are whole speculative rounds / a separate pool); decode is the
+    per-request share of a `b`-wide hybrid round. This is the capacity
+    frontier the continuous executor actually serves, so earliest-finish
+    routing weights replicas by what they can really absorb."""
     mode = cfg.mode
     new_chip = CHIP_DB[mode.new_chip]
     old_chip = CHIP_DB[mode.old_chip] if mode.old_chip else None
     ctx = prompt_len + output_len // 2
+    ctxs = (ctx,) * b
+    chunks = prompt_chunks(prompt_len, policy.chunk_tokens)
+    k = mode.spec_k
+    if mode.kind == "standalone":
+        base = hybrid_step_cost(cfg.target, new_chip, (), ctxs).time_s
+        pre = sum(hybrid_step_cost(cfg.target, new_chip, (c,), ctxs).time_s
+                  - base for c in chunks)
+        dec = base / b
+        return pre + max(output_len - 1, 0) * dec
+    if mode.kind == "dpd":
+        # pool A batches whole prompts under the step budget: amortize the
+        # shared weight read over the prompts one step carries
+        m = max(policy.token_budget // max(prompt_len, 1), 1)
+        batched = prompt_chunks(prompt_len, policy.token_budget)
+        pre = sum(hybrid_step_cost(cfg.target, new_chip,
+                                   ((c, s),) * m, ()).time_s
+                  for c, s in batched) / m
+        tx = mode.interconnect.transfer_time(
+            dpd_kv_bytes(cfg.target, prompt_len))
+        dec = hybrid_step_cost(cfg.target, old_chip, (), ctxs).time_s / b
+        return pre + tx + max(output_len - 1, 0) * dec
+    # spec / dsd: prefill chunks get dedicated budget-bounded steps; a
+    # decode slot is one whole speculative round (shared cost schedule)
+    hs_pre = hybrid_step_charges(mode.kind, cfg.target, cfg.draft,
+                                 new_chip, old_chip, chunks, (), k,
+                                 mode.interconnect,
+                                 overlap=mode.overlap_comm)
+    hs_round = hybrid_step_charges(mode.kind, cfg.target, cfg.draft,
+                                   new_chip, old_chip, (), ctxs, k,
+                                   mode.interconnect,
+                                   overlap=mode.overlap_comm)
+    e_tok = expected_tokens_per_round(mode.acceptance, k)
+    rounds = max(output_len - 1, 0) / max(e_tok, 1.0)
+    return hs_pre.duration_s + rounds * hs_round.duration_s / b
+
+
+def estimate_service_s(cfg: DisaggConfig, prompt_len: int, output_len: int,
+                       batch_hint: int = 8,
+                       batching: "BatchPolicy | str | None" = None) -> float:
+    """Rough busy-time a request adds to an instance of `cfg`.
+
+    Uses the same perfmodel rooflines the simulator charges, at a nominal
+    decode batch `batch_hint`, so relative weights across instance types
+    are faithful even though absolute queueing is not modeled here.
+    `batching` selects the scheduler policy the estimate models
+    (default: the fleet's continuous policy)."""
+    mode = cfg.mode
+    policy = resolve_batch_policy(batching, default=FLEET_BATCHING_DEFAULT)
     b = max(batch_hint, 1)
+    if policy.kind == "continuous":
+        return _estimate_continuous_s(cfg, prompt_len, output_len, b, policy)
+    new_chip = CHIP_DB[mode.new_chip]
+    old_chip = CHIP_DB[mode.old_chip] if mode.old_chip else None
+    ctx = prompt_len + output_len // 2
     pre = prefill_cost(cfg.target, new_chip, 1, prompt_len).time_s
     if mode.kind == "standalone":
         dec = decode_cost(cfg.target, new_chip, b, ctx).time_s / b
@@ -205,7 +274,9 @@ class OnlineDispatcher:
     static-fleet and autoscaled runs route identically.
     """
 
-    def __init__(self):
+    def __init__(self, batching: "BatchPolicy | str | None" = None):
+        self.batching = resolve_batch_policy(batching,
+                                             default=FLEET_BATCHING_DEFAULT)
         self.configs: dict[int, DisaggConfig] = {}
         self.busy_until: dict[int, float] = {}
         self._est_cache: dict[tuple[int, int, int], float] = {}
@@ -235,7 +306,8 @@ class OnlineDispatcher:
         key = (id(self.configs[rid]), req.prompt_len, req.output_len)
         if key not in self._est_cache:
             self._est_cache[key] = estimate_service_s(
-                self.configs[rid], req.prompt_len, req.output_len)
+                self.configs[rid], req.prompt_len, req.output_len,
+                batching=self.batching)
         return self._est_cache[key]
 
     def pick(self, req: Request,
@@ -254,8 +326,9 @@ class OnlineDispatcher:
         return best
 
 
-def _fleet_dispatcher(fleet: FleetSpec, start_s: float) -> OnlineDispatcher:
-    disp = OnlineDispatcher()
+def _fleet_dispatcher(fleet: FleetSpec, start_s: float,
+                      batching=None) -> OnlineDispatcher:
+    disp = OnlineDispatcher(batching=batching)
     for idx, cfg in enumerate(fleet.replicas()):
         disp.add(idx, cfg, ready_s=start_s)
     if not disp.configs:
@@ -264,9 +337,10 @@ def _fleet_dispatcher(fleet: FleetSpec, start_s: float) -> OnlineDispatcher:
 
 
 def route_least_loaded(requests: Sequence[Request], fleet: FleetSpec,
-                       start_s: float = 0.0) -> list[list[Request]]:
+                       start_s: float = 0.0,
+                       batching=None) -> list[list[Request]]:
     """Partition one arrival stream across all replicas, earliest-finish."""
-    disp = _fleet_dispatcher(fleet, start_s)
+    disp = _fleet_dispatcher(fleet, start_s, batching)
     parts: list[list[Request]] = [[] for _ in disp.configs]
     everyone = range(len(parts))
     for req in sorted(requests, key=lambda r: (r.arrival_s, r.req_id)):
@@ -277,13 +351,14 @@ def route_least_loaded(requests: Sequence[Request], fleet: FleetSpec,
 def route_bucketed(requests: Sequence[Request], fleet: FleetSpec,
                    buckets: SizeBuckets,
                    assignment: dict[tuple[int, int], Sequence[int]],
-                   start_s: float = 0.0) -> list[list[Request]]:
+                   start_s: float = 0.0,
+                   batching=None) -> list[list[Request]]:
     """Pin each size bucket to a replica subset; least-loaded within it.
 
     `assignment` maps bucket index (i, j) -> replica indices into
     `fleet.replicas()`. Buckets without an entry fall back to the whole
     fleet (so a coarse allocator assignment still routes everything)."""
-    disp = _fleet_dispatcher(fleet, start_s)
+    disp = _fleet_dispatcher(fleet, start_s, batching)
     n = len(disp.configs)
     for b, idxs in assignment.items():
         bad = [i for i in idxs if not 0 <= i < n]
@@ -336,21 +411,29 @@ def simulate_fleet(
     assignment: Optional[dict[tuple[int, int], Sequence[int]]] = None,
     seed: int = 0,
     start_s: float = 0.0,
+    batching: "BatchPolicy | str | None" = None,
 ) -> FleetResult:
     """Route `requests` across the fleet, simulate each replica, merge.
 
     Deterministic for a fixed (fleet, requests, policy, seed): routing has
-    no randomness and each replica gets a seed derived from its index."""
+    no randomness and each replica gets a seed derived from its index.
+
+    `batching` is the per-replica scheduler policy; the fleet default is
+    iteration-level continuous batching (serving/batching.py) - pass
+    "serialized" for the legacy stop-the-world-prefill executors."""
+    batching = resolve_batch_policy(batching, default=FLEET_BATCHING_DEFAULT)
     if policy == "least_loaded":
-        parts = route_least_loaded(requests, fleet, start_s)
+        parts = route_least_loaded(requests, fleet, start_s, batching)
     elif policy == "bucketed":
         if buckets is None or assignment is None:
             raise ValueError("bucketed routing needs buckets and assignment")
-        parts = route_bucketed(requests, fleet, buckets, assignment, start_s)
+        parts = route_bucketed(requests, fleet, buckets, assignment, start_s,
+                               batching)
     else:
         raise ValueError(f"unknown routing policy: {policy!r}")
     results = []
     for i, (cfg, part) in enumerate(zip(fleet.replicas(), parts)):
         results.append(simulate(cfg.mode, cfg.target, part, draft_cfg=cfg.draft,
-                                seed=seed + i, start_s=start_s))
+                                seed=seed + i, start_s=start_s,
+                                batching=batching))
     return FleetResult(fleet, results, parts, SimResult.merge(results))

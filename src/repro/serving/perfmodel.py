@@ -98,6 +98,55 @@ def _roofline(chip: ChipSpec, flops: float, bytes_hbm: float,
     return StepCost(time_s=t, energy_j=power * t, flops=flops, bytes_hbm=bytes_hbm, util=util)
 
 
+def hybrid_step_cost(cfg: ModelConfig, chip: ChipSpec,
+                     chunks: "tuple[tuple[int, int], ...] | list" = (),
+                     decode_ctxs: "tuple[int, ...] | list" = (),
+                     new_tokens: int = 1,
+                     dtype_bytes: int = 2) -> StepCost:
+    """One mixed (chunked-prefill + decode) iteration in a single roofline pass.
+
+    The continuous-batching scheduler (serving/batching.py) builds each
+    engine step as a hybrid batch: `chunks` is a sequence of
+    `(chunk_tokens, ctx_cached)` prefill chunks (the chunk attends causally
+    to `ctx_cached` already-cached tokens plus itself), `decode_ctxs` is
+    the per-sequence context length of every decode participant, each
+    emitting `new_tokens` (k+1 for a speculative verify pass). Weights are
+    read ONCE for the whole step - that shared read is the throughput win
+    of hybrid batching over serialized prefill.
+
+    Exact degeneracies (relied on by the serialized-equivalence property
+    test): a single whole-prompt chunk with nothing cached equals
+    `prefill_cost(cfg, chip, 1, prompt_len)` bit-for-bit, and an empty
+    chunk list equals `decode_cost(cfg, chip, b, ctx)` when every context
+    is `ctx`. Unlike `decode_cost`'s batch-mean context, decode KV traffic
+    and attention FLOPs here are summed per sequence - exact under the
+    roofline, so long-context stragglers are no longer undercharged."""
+    chunk_tok = sum(c for c, _ in chunks)
+    dec_tok = len(decode_ctxs) * new_tokens
+    tokens = chunk_tok + dec_tok
+    flops = 2.0 * cfg.active_param_count() * tokens
+    kv_per_tok = cfg.kv_bytes_per_token(dtype_bytes)
+    kv_bytes = 0.0
+    if cfg.attn is not None:
+        a = cfg.attn
+        unit = _attn_layers(cfg) * a.num_heads * a.head_dim
+        for c, s in chunks:
+            # causal: 2 matmuls * 2 flops * (c*s + c^2/2) keys per layer
+            flops += 2.0 * unit * c * (2.0 * s + c)
+        for ctx in decode_ctxs:
+            flops += 4.0 * unit * ctx * new_tokens
+    for c, s in chunks:
+        kv_bytes += (s + c) * kv_per_tok          # re-read cached ctx + write chunk
+    for ctx in decode_ctxs:
+        kv_bytes += ctx * kv_per_tok
+    w_bytes = cfg.param_count() * dtype_bytes
+    act_bytes = 12.0 * tokens * cfg.d_model * dtype_bytes
+    state_bytes = len(decode_ctxs) * cfg.state_bytes()
+    overhead = PREFILL_OVERHEAD_S if chunk_tok else DECODE_OVERHEAD_S
+    return _roofline(chip, flops, w_bytes + act_bytes + kv_bytes + state_bytes,
+                     overhead_s=overhead)
+
+
 def max_concurrency(cfg: ModelConfig, chip: ChipSpec, context_len: int,
                     dtype_bytes: int = 2, reserve_frac: float = 0.1) -> int:
     """How many sequences of `context_len` fit in HBM next to the weights."""

@@ -22,10 +22,21 @@ grid-intensity window boundaries. `simulate()` wraps it for the classic
 submit-everything-then-drain runs; both paths execute the identical event
 loop, pinned bit-exactly by tests/test_parity_golden.py.
 
+Two scheduler policies (serving/batching.py), selected per engine via
+`batching=`:
+
+  serialized  - the legacy loop: prefills run one whole prompt at a time
+                with priority over decode, admission by a one-shot KV cap
+                (`ReplicaSim.cap`), decode rounds priced at the batch-mean
+                context. Bit-exact against tests/data/golden_simulate.json.
+  continuous  - vLLM/Sarathi-style iteration-level batching: every step is
+                a hybrid batch of prefill *chunks* + decode tokens under a
+                per-step token budget, KV admission/preemption is
+                block-granular (BlockLedger mirrors the engine's
+                PagedKVPool), and decode KV traffic is summed per sequence
+                (exact roofline). The default for fleet/autoscale runs.
+
 Modeling notes (documented deltas from a hardware run):
- - iteration-level continuous batching; prefills run one request at a time
-   with priority over decode (vLLM-style), so prefill/decode interference
-   appears naturally in standalone mode;
  - speculative acceptance is sampled per request per round from the
    geometric acceptance model with measured/profiled rate `acceptance`
    (the real-compute engine in serving/engine.py measures it end-to-end);
@@ -38,6 +49,7 @@ carbon intensity and lifetime (Figs. 14-15) reuse one simulation.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import math
 from collections import deque
@@ -54,14 +66,31 @@ from repro.core.carbon import (
     resolve_ci,
 )
 from repro.models.config import ModelConfig
+from repro.serving.batching import (
+    BatchPolicy,
+    BlockLedger,
+    ContinuousScheduler,
+    OutOfBlocks,
+    SchedSeq,
+    build_dpd_decode_ledger,
+    build_dpd_prefill_scheduler,
+    build_single_pool_scheduler,
+    resolve_batch_policy,
+)
 from repro.serving.costs import (
     dpd_kv_bytes,
     dsd_link_bytes,
+    hybrid_step_charges,
     prefill_charges,
     spec_round_charges,
     spec_round_time,
 )
-from repro.serving.perfmodel import Interconnect, decode_cost, max_concurrency
+from repro.serving.perfmodel import (
+    Interconnect,
+    decode_cost,
+    hybrid_step_cost,
+    max_concurrency,
+)
 from repro.serving.workload import Dataset, Request
 
 
@@ -289,11 +318,13 @@ class ReplicaSim:
         seed: int = 0,
         ctx_estimate: Optional[int] = None,
         start_s: float = 0.0,
+        batching: "BatchPolicy | str | None" = None,
     ):
         if mode.kind in ("spec", "dsd") and draft_cfg is None:
             raise ValueError(f"{mode.kind} needs a draft model")
         if start_s < 0:
             raise ValueError(f"negative start_s: {start_s}")
+        self.policy = resolve_batch_policy(batching, default="serialized")
         self.mode = mode
         self.target_cfg = target_cfg
         self.draft_cfg = draft_cfg
@@ -320,6 +351,15 @@ class ReplicaSim:
         self._link_free = start_s
         self._ready: list[tuple[float, ReqTrace]] = []
         self._i_ready = 0
+        # dpd continuous: reshipped (swap-preempted) sequences re-enter
+        # through their own queue, merged with `_ready` by ready time
+        self._requeue: list = []
+        self._i_requeue = 0
+        # continuous-policy state (built lazily, like `cap`)
+        self._sched: Optional[ContinuousScheduler] = None   # single-pool
+        self._sched_a: Optional[ContinuousScheduler] = None  # dpd prefill pool
+        self._ledger_b: Optional[BlockLedger] = None         # dpd decode pool
+        self._active_b: list[SchedSeq] = []
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> ReqTrace:
@@ -374,7 +414,12 @@ class ReplicaSim:
     # ------------------------------------------------------------- driving
     def advance_to(self, t_stop: float) -> "ReplicaSim":
         """Run every step that begins before `t_stop` (non-preemptive)."""
-        if self.mode.kind == "dpd":
+        if self.policy.kind == "continuous":
+            if self.mode.kind == "dpd":
+                self._advance_dpd_continuous(t_stop)
+            else:
+                self._advance_continuous(t_stop)
+        elif self.mode.kind == "dpd":
             self._advance_dpd(t_stop)
         else:
             self._advance_single(t_stop)
@@ -557,6 +602,286 @@ class ReplicaSim:
             for a in done:
                 self._active.remove(a)
 
+    # ------------------------------------------------- continuous batching
+    def _scheduler(self) -> ContinuousScheduler:
+        """Single-pool hybrid scheduler (standalone/spec/dsd), lazy like
+        `cap` so policy overrides stay explicit per construction. Built by
+        the shared factory in batching.py, identically to the engine's."""
+        if self._sched is None:
+            self._sched = build_single_pool_scheduler(
+                self.policy, self.mode.kind, self.mode.max_batch,
+                self.mode.spec_k, self.target_cfg, self.draft_cfg,
+                self.new_chip)
+        return self._sched
+
+    def _finish_prefill(self, seq: SchedSeq, sched: ContinuousScheduler,
+                        at_s: float) -> None:
+        """First token emitted off a completed prefill (fresh, not resumed)."""
+        tr: ReqTrace = seq.payload
+        tr.ttft_s = at_s - tr.req.arrival_s
+        tr.first_token_s = tr.last_token_s = at_s
+        tr.tokens_out = 1
+        if sched.note_first_token(seq):
+            tr.finish_s = at_s
+
+    def _advance_continuous(self, t_stop: float) -> None:
+        """Hybrid chunked-prefill + decode loop (standalone/spec/dsd).
+
+        Each iteration asks the shared `ContinuousScheduler` for a
+        `StepPlan` and prices it through `costs.hybrid_step_charges` - the
+        same function the real-compute engine charges, so the two
+        executors stay parity-comparable on this policy too. Decode
+        contexts are summed per sequence (exact roofline), not batch-mean
+        like the serialized path."""
+        sched = self._scheduler()
+        traces = self.traces
+        mode = self.mode
+        k = mode.spec_k
+        while True:
+            if self._t >= t_stop:
+                return
+            while (self._i_arrival < len(traces)
+                   and traces[self._i_arrival].req.arrival_s <= self._t):
+                tr = traces[self._i_arrival]
+                sched.submit(SchedSeq(self._i_arrival, tr.req.prompt_len,
+                                      tr.req.output_len, payload=tr))
+                self._i_arrival += 1
+            plan = sched.next_plan()
+            if plan is None:
+                if self._i_arrival >= len(traces):
+                    return                        # fully idle
+                nxt = traces[self._i_arrival].req.arrival_s
+                if nxt >= t_stop:
+                    return
+                self._t = max(self._t, nxt)
+                continue
+            hs = hybrid_step_charges(
+                mode.kind, self.target_cfg, self.draft_cfg,
+                self.new_chip, self.old_chip,
+                plan.chunk_specs(), plan.decode_ctxs(), k,
+                mode.interconnect, overlap=mode.overlap_comm)
+            for chip_name, cost, rel_s in hs.charges:
+                self._charge(chip_name, cost, self._t + rel_s)
+            if hs.link_ids_bytes or hs.link_probs_bytes:
+                self.link_bytes += hs.link_ids_bytes + hs.link_probs_bytes
+                self.link_busy_s += (
+                    mode.interconnect.transfer_time(hs.link_ids_bytes)
+                    + mode.interconnect.transfer_time(hs.link_probs_bytes))
+            self._t += hs.duration_s
+            for ch in plan.chunks:
+                if sched.complete_chunk(ch.seq, ch.tokens) \
+                        and ch.seq.emitted == 0:
+                    self._finish_prefill(ch.seq, sched, self._t)
+            for seq in plan.decodes:
+                if mode.kind == "standalone":
+                    e = 1
+                else:
+                    e = min(_emit_round_tokens(self.rng, mode.acceptance, k),
+                            seq.remaining)
+                tr = seq.payload
+                tr.tokens_out += e
+                tr.last_token_s = self._t
+                if sched.note_decode(seq, e):
+                    tr.finish_s = self._t
+
+    def _sched_a_pool(self) -> ContinuousScheduler:
+        if self._sched_a is None:
+            self._sched_a = build_dpd_prefill_scheduler(
+                self.policy, self.mode.max_batch, self.target_cfg,
+                self.new_chip)
+        return self._sched_a
+
+    def _ledger_b_pool(self) -> BlockLedger:
+        if self._ledger_b is None:
+            self._ledger_b = build_dpd_decode_ledger(
+                self.policy, self.target_cfg, self.old_chip)
+        return self._ledger_b
+
+    def _advance_dpd_continuous(self, t_stop: float) -> None:
+        """Disg-Pref-Decode under the continuous policy.
+
+        Pool A batches the waiting prompts into shared prefill steps
+        (weights read once per step; prompts longer than the token budget
+        proceed in chunks), instead of the serialized one-prompt-at-a-time
+        pipeline; finished prompts ship KV over the FIFO link exactly as
+        before. Pool B admits KV-arrived sequences block-granularly
+        against its own ledger by their *actual* cached bytes - denser
+        than the serialized path's count-based `cap`, which silently
+        overcommits HBM on long-context mixes - and decodes with
+        per-sequence context sums. A sequence needs a new block only every
+        `block_size` tokens, so under block pressure the step simply
+        STALLS the boundary-crossing sequences for a round (oldest-first
+        get the free blocks) until a finishing sequence releases blocks;
+        only a fully wedged pool (zero free blocks, every active sequence
+        at a boundary) preempts the youngest swap-style, re-shipping its
+        KV over the FIFO link before re-admission."""
+        cfg = self.target_cfg
+        mode = self.mode
+        traces = self.traces
+        sched = self._sched_a_pool()
+        # pool A: chunked batched prefill + FIFO link
+        while True:
+            if self._t_a >= t_stop:
+                break
+            while (self._i_arrival < len(traces)
+                   and traces[self._i_arrival].req.arrival_s <= self._t_a):
+                tr = traces[self._i_arrival]
+                # pool A only prefills: model each prompt as output_len=1
+                # so prefill completion retires the sequence (and frees
+                # its pool-A blocks - the KV ships to pool B)
+                sched.submit(SchedSeq(self._i_arrival, tr.req.prompt_len, 1,
+                                      payload=tr))
+                self._i_arrival += 1
+            plan = sched.next_plan()
+            if plan is None:
+                if self._i_arrival >= len(traces):
+                    break
+                nxt = traces[self._i_arrival].req.arrival_s
+                if nxt >= t_stop:
+                    break
+                self._t_a = max(self._t_a, nxt)
+                continue
+            cost = hybrid_step_cost(cfg, self.new_chip, plan.chunk_specs(), ())
+            self._charge(self.new_chip.name, cost, self._t_a)
+            self._t_a += cost.time_s
+            for ch in plan.chunks:
+                if not sched.complete_chunk(ch.seq, ch.tokens):
+                    continue
+                tr = ch.seq.payload
+                tr.ttft_s = self._t_a - tr.req.arrival_s
+                tr.first_token_s = tr.last_token_s = self._t_a
+                tr.tokens_out = 1
+                sched.note_first_token(ch.seq)     # retires the pool-A seq
+                nbytes = dpd_kv_bytes(cfg, tr.req.prompt_len)
+                tx = mode.interconnect.transfer_time(nbytes)
+                start = max(self._t_a, self._link_free)
+                self._link_free = start + tx
+                self.link_bytes += nbytes
+                self.link_busy_s += tx
+                if tr.req.output_len > 1:
+                    self._ready.append((self._link_free, tr, 1))
+                else:
+                    tr.finish_s = self._t_a
+
+        # pool B: block-granular continuous decode over KV-arrived requests
+        ledger = self._ledger_b_pool()
+
+        def reship(seq: SchedSeq) -> None:
+            """Swap-style preemption: free the blocks now, pay the link to
+            bring the sequence's KV back before re-admission.
+
+            The transfer is priced on the link (bytes + busy seconds) but
+            modeled contention-free with pool A's FIFO prefill shipments:
+            the wedged pool idles while it waits either way, and pool A's
+            schedule must stay independent of pool-B state so windowed
+            `advance_to` equals a one-shot drain bit-exactly
+            (tests/test_batching.py)."""
+            ledger.free(seq.sid)
+            self._active_b.remove(seq)
+            nbytes = dpd_kv_bytes(cfg, seq.kv)
+            tx = mode.interconnect.transfer_time(nbytes)
+            self.link_bytes += nbytes
+            self.link_busy_s += tx
+            # keep the requeue time-ordered (tx scales with kv, so a later
+            # short-kv reship can be ready before an earlier long-kv one);
+            # ready > _t_b >= every already-admitted entry, so the insert
+            # never lands before _i_requeue
+            bisect.insort(self._requeue, (self._t_b + tx, seq.payload,
+                                          seq.emitted),
+                          lo=self._i_requeue, key=lambda e: e[0])
+
+        def head() -> "tuple[Optional[tuple], bool]":
+            """Earliest-ready of the pool-A ship stream and the reship
+            requeue (each internally time-ordered); ties go to pool A."""
+            a = self._ready[self._i_ready] \
+                if self._i_ready < len(self._ready) else None
+            b = self._requeue[self._i_requeue] \
+                if self._i_requeue < len(self._requeue) else None
+            if a is not None and (b is None or a[0] <= b[0]):
+                return a, True
+            return b, False
+
+        while (self._i_ready < len(self._ready)
+               or self._i_requeue < len(self._requeue) or self._active_b):
+            if self._t_b >= t_stop:
+                return
+            while len(self._active_b) < mode.max_batch:
+                entry, from_ships = head()
+                if entry is None or entry[0] > self._t_b:
+                    break
+                _, tr, resume_emitted = entry
+                sid = tr.req.req_id
+                kv0 = tr.req.prompt_len + resume_emitted - 1
+                # watermark: keep one growth block per active sequence
+                if ledger.blocks_needed(kv0) > \
+                        ledger.free_blocks - len(self._active_b) - 1:
+                    break                          # wait for blocks to free
+                seq = SchedSeq(sid, tr.req.prompt_len, tr.req.output_len,
+                               payload=tr)
+                seq.prefilled = seq.prefill_target
+                seq.kv = kv0
+                seq.emitted = resume_emitted
+                ledger.allocate(sid, kv0)
+                self._active_b.append(seq)
+                if from_ships:
+                    self._i_ready += 1
+                else:
+                    self._i_requeue += 1
+            if not self._active_b:
+                entry, _ = head()
+                if entry is None:
+                    return                        # waiting on pool A / link
+                nxt, tr, resume_emitted = entry
+                if nxt <= self._t_b:
+                    raise OutOfBlocks(
+                        "dpd decode pool cannot fit one sequence (need "
+                        f"{ledger.blocks_needed(tr.req.prompt_len + resume_emitted - 1)}"
+                        f" blocks of {ledger.num_blocks})")
+                if nxt >= t_stop:
+                    return
+                self._t_b = nxt
+                continue
+            # block-pressure step composition: sequences not at a block
+            # boundary decode for free; boundary-crossers get the free
+            # blocks oldest-first, the rest stall this round
+            budget = ledger.free_blocks
+            stepping = []
+            for seq in self._active_b:
+                need = ledger.blocks_needed(seq.kv + 1) - ledger.held(seq.sid)
+                if need <= 0:
+                    stepping.append(seq)
+                elif need <= budget:
+                    stepping.append(seq)
+                    budget -= need
+            if not stepping:
+                # fully wedged: zero free blocks and every sequence at a
+                # boundary - swap out the youngest to break the deadlock
+                if len(self._active_b) == 1:
+                    raise OutOfBlocks(
+                        f"dpd decode pool of {ledger.num_blocks} blocks "
+                        f"cannot grow a single sequence "
+                        f"(kv={self._active_b[0].kv})")
+                reship(self._active_b[-1])
+                continue
+            ctxs = tuple(s.ctx for s in stepping)
+            c = hybrid_step_cost(cfg, self.old_chip, (), ctxs)
+            self._charge(self.old_chip.name, c, self._t_b)
+            self._t_b += c.time_s
+            done = []
+            for seq in stepping:
+                seq.emitted += 1
+                seq.kv += 1
+                ledger.extend_to(seq.sid, seq.kv)
+                tr = seq.payload
+                tr.tokens_out += 1
+                tr.last_token_s = self._t_b
+                if seq.remaining <= 0:
+                    tr.finish_s = self._t_b
+                    ledger.free(seq.sid)
+                    done.append(seq)
+            for seq in done:
+                self._active_b.remove(seq)
+
 
 def simulate(
     mode: ServingMode,
@@ -566,6 +891,7 @@ def simulate(
     seed: int = 0,
     ctx_estimate: Optional[int] = None,
     start_s: float = 0.0,
+    batching: "BatchPolicy | str | None" = None,
 ) -> SimResult:
     """Simulate one engine over `requests` (arrival-sorted, absolute times).
 
@@ -575,9 +901,16 @@ def simulate(
     calls this per replica, so request lists may be any subset of a
     workload as long as arrivals are non-decreasing.
 
+    `batching` selects the scheduler policy: None/"serialized" is the
+    legacy loop (bit-exact against tests/data/golden_simulate.json);
+    "continuous" or a `BatchPolicy` enables iteration-level continuous
+    batching with chunked prefill and block-granular KV admission
+    (serving/batching.py) - the default for the fleet/autoscale layers.
+
     Thin wrapper: submit everything into a `ReplicaSim` and drain it."""
     sim = ReplicaSim(mode, target_cfg, draft_cfg=draft_cfg, seed=seed,
-                     ctx_estimate=ctx_estimate, start_s=start_s)
+                     ctx_estimate=ctx_estimate, start_s=start_s,
+                     batching=batching)
     for r in requests:
         sim.submit(r)
     return sim.drain().result()

@@ -1,0 +1,265 @@
+"""Continuous-batching invariants (scheduler, ledger, simulator policies).
+
+Hypothesis property tests over serving/batching.py plus deterministic
+policy-equivalence checks:
+
+  - the scheduler conserves tokens: every submitted sequence finishes with
+    exactly `output_len` emissions, nothing lost to chunking/preemption;
+  - the KV block budget is never exceeded at any step (the `BlockLedger`
+    high-water mark stays within the pool);
+  - with `chunk_tokens=inf, max_batch=1` the continuous policy degenerates
+    to the serialized schedule bit-exactly (the hybrid step cost's exact
+    degeneracies to prefill_cost/decode_cost);
+  - windowed `advance_to` == one-shot drain under the continuous policy
+    for every serving kind - the property the autoscaler's window loop
+    rests on, previously pinned only for the serialized policy.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving.batching import (
+    BatchPolicy,
+    BlockLedger,
+    ContinuousScheduler,
+    OutOfBlocks,
+    SchedSeq,
+)
+from repro.serving.simulator import ReplicaSim, ServingMode, simulate
+from repro.serving.workload import DATASETS, Request, sample_mixture_requests
+
+try:                                # hypothesis fuzz is CI-optional; the
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                 # deterministic invariants always run
+    HAVE_HYPOTHESIS = False
+
+DS = DATASETS["sharegpt"]
+T7 = get_config("llama-7b")
+D1 = get_config("llama-1b")
+
+
+# --------------------------------------------------------------- scheduler
+def _drive(sched: ContinuousScheduler, seqs, rng: np.random.Generator,
+           k: int):
+    """Run the scheduler to completion with random per-round emissions,
+    checking the block budget at every step."""
+    for s in seqs:
+        sched.submit(s)
+    ledger = sched.ledger
+    for _ in range(200_000):
+        if not sched.has_work:
+            break
+        plan = sched.next_plan()
+        assert plan is not None, "has_work but nothing schedulable"
+        assert plan.chunks or plan.decodes
+        assert ledger.used_blocks <= ledger.num_blocks
+        for ch in plan.chunks:
+            if sched.complete_chunk(ch.seq, ch.tokens) and ch.seq.emitted == 0:
+                sched.note_first_token(ch.seq)
+        for seq in plan.decodes:
+            e = min(int(rng.integers(1, sched.decode_tokens + 1)),
+                    seq.remaining) if k else 1
+            sched.note_decode(seq, e)
+    else:  # pragma: no cover
+        pytest.fail("scheduler did not converge")
+    assert ledger.peak_used <= ledger.num_blocks
+
+
+def _random_case(n, sizes, spec_kind, k, chunk, budget, bs, slack, mb, seed):
+    """One randomized scheduler run: drive to completion, assert the
+    token-conservation and block-budget invariants."""
+    # the pool must fit at least one max-length sequence + one round's
+    # worst-case growth, or OutOfBlocks is the contractual outcome
+    worst = max(pl + ol for pl, ol in sizes) + k + 1
+    floor = -(-worst // bs)
+    pol = BatchPolicy(chunk_tokens=chunk, token_budget=budget,
+                      block_size=bs, num_blocks=floor + slack)
+    sched = ContinuousScheduler(
+        pol, max_batch=mb, ledger=BlockLedger(pol.num_blocks, bs),
+        decode_tokens=k + 1 if spec_kind else 1, mix_decode=not spec_kind)
+    seqs = [SchedSeq(i, pl, ol) for i, (pl, ol) in enumerate(sizes)]
+    _drive(sched, seqs, np.random.default_rng(seed), k)
+    # token conservation: all sequences finished with exact output counts
+    assert len(sched.finished) == n
+    assert sorted(s.sid for s in sched.finished) == list(range(n))
+    for s in sched.finished:
+        assert s.emitted == s.output_len
+        assert s.prefilled >= s.prompt_len
+    assert sched.ledger.used_blocks == 0        # everything freed
+
+
+def test_scheduler_conserves_tokens_and_block_budget_seeded():
+    """Deterministic sweep of the same invariants (hypothesis-free)."""
+    for seed in range(25):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 13))
+        sizes = [(int(rng.integers(1, 301)), int(rng.integers(1, 41)))
+                 for _ in range(n)]
+        spec_kind = bool(rng.integers(0, 2))
+        k = int(rng.integers(1, 5)) if spec_kind else 0
+        _random_case(n, sizes, spec_kind, k,
+                     chunk=int(rng.integers(8, 257)),
+                     budget=int(rng.integers(64, 513)),
+                     bs=int(rng.choice([1, 8, 16])),
+                     slack=int(rng.integers(0, 41)),
+                     mb=int(rng.integers(1, 9)), seed=seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(data=st.data())
+    def test_scheduler_conserves_tokens_and_block_budget_fuzzed(data):
+        n = data.draw(st.integers(1, 12), label="n_seqs")
+        sizes = [(data.draw(st.integers(1, 300), label=f"pl{i}"),
+                  data.draw(st.integers(1, 40), label=f"ol{i}"))
+                 for i in range(n)]
+        spec_kind = data.draw(st.booleans(), label="spec_kind")
+        k = data.draw(st.integers(1, 4), label="k") if spec_kind else 0
+        _random_case(
+            n, sizes, spec_kind, k,
+            chunk=data.draw(st.integers(8, 256), label="chunk"),
+            budget=data.draw(st.integers(64, 512), label="budget"),
+            bs=data.draw(st.sampled_from([1, 8, 16]), label="bs"),
+            slack=data.draw(st.integers(0, 40), label="slack"),
+            mb=data.draw(st.integers(1, 8), label="mb"),
+            seed=data.draw(st.integers(0, 2**31 - 1), label="seed"))
+
+
+def test_scheduler_raises_when_pool_cannot_fit_one_sequence():
+    pol = BatchPolicy(num_blocks=2, block_size=16)     # 32-token pool
+    sched = ContinuousScheduler(pol, 4, BlockLedger(2, 16))
+    sched.submit(SchedSeq(0, 20, 40))                  # needs 60 tokens
+    plan = sched.next_plan()                           # prefill fits...
+    for ch in plan.chunks:
+        if sched.complete_chunk(ch.seq, ch.tokens) and ch.seq.emitted == 0:
+            sched.note_first_token(ch.seq)
+    with pytest.raises(OutOfBlocks):
+        for _ in range(100):                           # ...growth cannot
+            plan = sched.next_plan()
+            for seq in plan.decodes:
+                sched.note_decode(seq, 1)
+
+
+def test_block_ledger_mirrors_paged_pool_arithmetic():
+    led = BlockLedger(10, 16)
+    led.allocate(0, 17)                                # 2 blocks
+    assert led.used_blocks == 2 and led.held(0) == 2
+    led.extend_to(0, 32)                               # still 2
+    assert led.used_blocks == 2
+    led.extend_to(0, 33)                               # 3rd block
+    assert led.used_blocks == 3 and led.peak_used == 3
+    assert led.blocks_needed(1) == 1 and led.can_admit(112)
+    assert not led.can_admit(113)                      # 7 free = 112 tokens
+    with pytest.raises(ValueError):
+        led.allocate(0, 8)                             # double alloc
+    with pytest.raises(OutOfBlocks):
+        led.allocate(1, 16 * 8)
+    led.free(0)
+    assert led.used_blocks == 0 and led.peak_used == 3
+
+
+# ---------------------------------------------------- simulator invariants
+@pytest.mark.parametrize("seed,qps", [(0, 3.0), (7, 6.0), (42, 10.0)])
+def test_continuous_sim_conserves_tokens_within_block_budget(seed, qps):
+    reqs = sample_mixture_requests(DS, qps, 12.0, seed=seed)
+    if not reqs:
+        return
+    pol = BatchPolicy(num_blocks=4096)
+    res = simulate(ServingMode("s", "standalone", "a100"), T7, reqs,
+                   seed=seed, batching=pol)
+    assert res.total_tokens == sum(r.output_len for r in reqs)
+    assert all(t.tokens_out == t.req.output_len for t in res.traces)
+    assert all(not math.isnan(t.finish_s) for t in res.traces)
+
+
+# ----------------------------------------------- serialized degeneracy
+@pytest.mark.parametrize("kind", ["standalone", "spec"])
+@pytest.mark.parametrize("seed", [3, 11, 40])
+def test_continuous_degenerates_to_serialized_at_whole_prompt_batch_one(
+        kind, seed):
+    """chunk_tokens=inf (whole-prompt chunks) + max_batch=1 must replay the
+    serialized schedule bit-exactly: one prefill pass, then one-at-a-time
+    decode - relying on hybrid_step_cost's exact degeneracies to
+    prefill_cost and decode_cost."""
+    reqs = sample_mixture_requests(DS, 3.0, 10.0, seed=seed)
+    if not reqs:
+        return
+    mode = ServingMode(kind, kind, "a100", spec_k=4, acceptance=0.7,
+                       max_batch=1)
+    draft = D1 if kind == "spec" else None
+    big = 10**9
+    ref = simulate(mode, T7, reqs, draft_cfg=draft, seed=7,
+                   batching="serialized")
+    got = simulate(mode, T7, reqs, draft_cfg=draft, seed=7,
+                   batching=BatchPolicy(chunk_tokens=big, token_budget=big,
+                                        num_blocks=big))
+    assert got.duration_s == ref.duration_s
+    for tg, tr in zip(got.traces, ref.traces):
+        assert tg.ttft_s == tr.ttft_s
+        assert tg.finish_s == tr.finish_s
+        assert tg.tokens_out == tr.tokens_out
+    for name in ref.use:
+        assert got.use[name].busy_s == ref.use[name].busy_s
+        assert got.use[name].energy_j == ref.use[name].energy_j
+
+
+# ------------------------------------------------- windowed == drain
+@pytest.mark.parametrize("kind,mode,needs_draft", [
+    ("standalone", ServingMode("standalone", "standalone", "a100"), False),
+    ("spec", ServingMode("spec", "spec", "a100", spec_k=4, acceptance=0.7),
+     True),
+    ("dsd", ServingMode("dsd", "dsd", "a100", "t4", spec_k=4, acceptance=0.7),
+     True),
+    ("dpd", ServingMode("dpd", "dpd", "a100", "v100"), False),
+])
+def test_windowed_advance_equals_drain_continuous(kind, mode, needs_draft):
+    """The autoscaler drives continuous replicas window-by-window; the
+    incremental schedule must equal the one-shot drain bit-exactly, like
+    the serialized policy's pin in test_autoscale.py."""
+    reqs = sample_mixture_requests(DS, 4.0, 20.0, seed=11)
+    draft = D1 if needs_draft else None
+    ref = simulate(mode, T7, reqs, draft_cfg=draft, seed=7, start_s=2.0,
+                   batching="continuous")
+    sim = ReplicaSim(mode, T7, draft_cfg=draft, seed=7, start_s=2.0,
+                     batching="continuous")
+    i = 0
+    for w in (3.0, 7.5, 8.0, 15.0, 21.0, 30.0):
+        while i < len(reqs) and reqs[i].arrival_s < w:
+            sim.submit(reqs[i])
+            i += 1
+        sim.advance_to(w)
+    for r in reqs[i:]:
+        sim.submit(r)
+    got = sim.drain().result()
+    assert got.duration_s == ref.duration_s
+    assert got.link_bytes == ref.link_bytes
+    for tg, tr in zip(got.traces, ref.traces):
+        assert tg.ttft_s == tr.ttft_s
+        assert tg.tokens_out == tr.tokens_out
+        assert tg.finish_s == tr.finish_s or (
+            math.isnan(tg.finish_s) and math.isnan(tr.finish_s))
+    for name in ref.use:
+        assert got.use[name].busy_s == ref.use[name].busy_s
+        assert got.use[name].energy_j == ref.use[name].energy_j
+        assert got.use[name].segments == ref.use[name].segments
+
+
+def test_preemption_recomputes_and_still_finishes():
+    """A pool sized to force preemption: the victim re-prefills its prompt
+    + emitted prefix and every request still completes exactly."""
+    mode = ServingMode("s", "standalone", "a100", max_batch=8)
+    reqs = [Request(i, 0.0, 64, 48) for i in range(6)]
+    # 6 seqs x 112 tokens = 42 blocks of 16; give the pool less
+    pol = BatchPolicy(num_blocks=30, block_size=16)
+    sim = ReplicaSim(mode, T7, seed=0, batching=pol)
+    for r in reqs:
+        sim.submit(r)
+    res = sim.drain().result()
+    sched = sim._scheduler()
+    assert res.total_tokens == sum(r.output_len for r in reqs)
+    assert sched.ledger.peak_used <= pol.num_blocks
+    assert any(s.preemptions > 0 for s in sched.finished), \
+        "pool was sized to force at least one preemption"

@@ -18,12 +18,15 @@ import pytest
 
 from repro.configs import get_reduced_config
 from repro.models import init_params
+from repro.serving.batching import BatchPolicy
 from repro.serving.engine import ServingEngine
 from repro.serving.simulator import ServingMode, simulate
 from repro.serving.workload import Request
 
 PL, OUT, N = 12, 6, 3
 SPEC_K = 4
+POOL_BLOCKS = 512
+MAX_BATCH = 8
 
 
 @pytest.fixture(scope="module")
@@ -33,11 +36,12 @@ def tiny():
     return cfg, params
 
 
-def _run_pair(cfg, params, kind, old_chip, gap_s):
+def _run_pair(cfg, params, kind, old_chip, gap_s, batching="serialized"):
     draft = dict(draft_cfg=cfg, draft_params=params) \
         if kind in ("spec", "dsd") else {}
     eng = ServingEngine(cfg, params, kind=kind, old_chip=old_chip,
-                        temperature=0.0, seed=1, **draft)
+                        temperature=0.0, seed=1, max_batch=MAX_BATCH,
+                        pool_blocks=POOL_BLOCKS, batching=batching, **draft)
     for i in range(N):
         eng.submit((np.arange(PL) + i) % cfg.vocab_size,
                    max_new_tokens=OUT, arrival_s=i * gap_s)
@@ -45,13 +49,19 @@ def _run_pair(cfg, params, kind, old_chip, gap_s):
 
     reqs = [Request(i, i * gap_s, PL, OUT) for i in range(N)]
     mode = ServingMode(kind, kind, "a100", old_chip,
-                       spec_k=SPEC_K, acceptance=1.0)
+                       spec_k=SPEC_K, acceptance=1.0, max_batch=MAX_BATCH)
+    # the simulator's continuous ledger must model the engine's REAL pool
+    # (num_blocks), so both schedulers replay identical admission
+    sim_batching = BatchPolicy(num_blocks=POOL_BLOCKS) \
+        if batching == "continuous" else batching
     res = simulate(mode, cfg, reqs,
-                   draft_cfg=cfg if kind in ("spec", "dsd") else None, seed=1)
+                   draft_cfg=cfg if kind in ("spec", "dsd") else None, seed=1,
+                   batching=sim_batching)
     return eng, res
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("batching", ["serialized", "continuous"])
 @pytest.mark.parametrize("kind,old_chip,gap_s", [
     ("standalone", None, 0.0),
     ("spec", None, 0.0),
@@ -59,9 +69,10 @@ def _run_pair(cfg, params, kind, old_chip, gap_s):
     ("dpd", "t4", 1.0),
 ])
 def test_engine_and_simulator_agree_on_clock_and_energy(tiny, kind,
-                                                        old_chip, gap_s):
+                                                        old_chip, gap_s,
+                                                        batching):
     cfg, params = tiny
-    eng, res = _run_pair(cfg, params, kind, old_chip, gap_s)
+    eng, res = _run_pair(cfg, params, kind, old_chip, gap_s, batching)
     assert len(eng.finished) == N
     assert all(len(r.out_tokens) == OUT for r in eng.finished)
     if kind in ("spec", "dsd"):

@@ -272,7 +272,9 @@ def test_build_gpu_info_slo_gates_old_modes():
     tight = dataclasses.replace(DS, tpot_slo_s=0.017)
     info = build_gpu_info(cat, tight, buckets)
     assert not info["dsd-t4-llama-300m"].feasible_anywhere()
-    assert info["standalone"].feasible_anywhere()
+    # the colocated new-chip spec mode survives (standalone's continuous
+    # TPOT honestly includes chunked-prefill interference and gates too)
+    assert info["spec-llama-300m"].feasible_anywhere()
     alloc = allocate(((1.0,),), 4.0, info)
     assert alloc.feasible
     assert set(alloc.counts) <= {"standalone", "spec-llama-300m"}
@@ -283,13 +285,13 @@ def test_allocator_end_to_end_mixed_fleet_beats_all_new():
     provisions old+new DSD instances, and replaying its fleet through the
     simulator yields less carbon than the all-new allocation at equal
     (perfect) SLO attainment."""
-    reqs = sample_mixture_requests(DS, 12.0, 45.0, seed=2)
+    reqs = sample_mixture_requests(DS, 16.0, 45.0, seed=2)
     buckets = SizeBuckets.from_dataset(DS)
     dist = bucket_workload(reqs, buckets)
     info = build_gpu_info(CATALOG, DS, buckets)
     by_name = {c.name: c for c in CATALOG}
-    mixed = allocate(dist, 12.0, info)
-    all_new = allocate(dist, 12.0, {k: v for k, v in info.items()
+    mixed = allocate(dist, 16.0, info)
+    all_new = allocate(dist, 16.0, {k: v for k, v in info.items()
                                     if not by_name[k].mode.old_chip})
     assert any(by_name[n].mode.old_chip for n in mixed.counts), \
         f"expected old-chip modes in {mixed.counts}"
