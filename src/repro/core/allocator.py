@@ -58,7 +58,7 @@ from repro.serving.costs import (
 )
 from repro.serving.fleet import FLEET_BATCHING_DEFAULT, SizeBuckets
 from repro.serving.perfmodel import decode_cost, max_concurrency
-from repro.serving.workload import Dataset, Request
+from repro.serving.workload import SLO_CLASSES, Dataset, Request, slo_targets
 
 Matrix = tuple[tuple[float, ...], ...]
 
@@ -408,10 +408,11 @@ def build_gpu_info(
     dataset: Dataset,
     buckets: SizeBuckets,
     ci: "float | CarbonTrace" = DEFAULT_CI,
-    utilization: float = 0.6,
+    utilization: Optional[float] = None,
     include_idle: bool = False,
     window_s: float = 3600.0,
     batching: "BatchPolicy | str | None" = None,
+    slo_class: Optional[str] = None,
 ) -> dict[str, InstanceProfile]:
     """Profile every catalog config over the bucket grid (Mélange gpu_info).
 
@@ -424,9 +425,30 @@ def build_gpu_info(
     `batching` selects which executor the profiles model: the default is
     the fleet's iteration-level continuous policy (the real serving
     frontier - see `_engine_profile_continuous`); pass "serialized" to
-    profile the legacy stop-the-world-prefill engines."""
+    profile the legacy stop-the-world-prefill engines.
+
+    `slo_class` gates per-bucket QPS on THAT latency class's TTFT/TPOT
+    targets (workload.SLO_CLASSES scales of the dataset's base targets)
+    instead of the dataset's single global pair, and - unless
+    `utilization` is passed explicitly - provisions at the CLASS's load
+    target (a relaxed class spends its TTFT slack on queueing and runs
+    its instances hotter; tight keeps burst headroom). This is the
+    per-class carbon headroom the priority scheduler then protects at
+    serve time. None keeps the dataset targets and the 0.6 default
+    (identical to the pre-class profiles)."""
+    if utilization is None:
+        utilization = SLO_CLASSES[slo_class].utilization \
+            if slo_class is not None else 0.6
     if not 0 < utilization <= 1:
         raise ValueError(f"utilization must be in (0, 1]: {utilization}")
+    if slo_class is not None:
+        ttft, tpot = slo_targets(dataset, slo_class)
+        # NOTE: the class scaling is baked into the targets here, so the
+        # replaced dataset keeps slo_class="standard" (scale 1.0) - also
+        # tagging it with `slo_class` would double-encode the class for
+        # any downstream slo_targets/slo_ok consumer
+        dataset = dataclasses.replace(dataset, ttft_slo_s=ttft,
+                                      tpot_slo_s=tpot)
     policy = resolve_batch_policy(batching, default=FLEET_BATCHING_DEFAULT)
     ci_val = resolve_ci(ci, 0.0, window_s)
     out: dict[str, InstanceProfile] = {}

@@ -237,7 +237,13 @@ class CarbonTrace:
 
     @staticmethod
     def from_csv(path: str) -> "CarbonTrace":
-        """Load `t_seconds,ci_g_per_kwh` rows (header optional, '#' comments)."""
+        """Load `t_seconds,ci_g_per_kwh` rows (header optional, '#' comments).
+
+        Row order does not matter (real exports are often tail-appended or
+        region-interleaved): rows are sorted by timestamp, and rows with
+        an exactly duplicated timestamp collapse to the LAST occurrence
+        (the usual convention for corrected re-publishes of a grid
+        boundary). A single-row file is a flat trace."""
         times, vals = [], []
         with open(path) as f:
             for line in f:
@@ -250,7 +256,13 @@ class CarbonTrace:
                 except ValueError:
                     continue              # header row
                 vals.append(float(b))
-        return CarbonTrace(tuple(times), tuple(vals))
+        by_time = {}                      # last value per timestamp wins
+        for t, v in zip(times, vals):
+            by_time[t] = v
+        if not by_time:
+            raise ValueError(f"no data rows in trace CSV: {path}")
+        ts = sorted(by_time)
+        return CarbonTrace(tuple(ts), tuple(by_time[t] for t in ts))
 
     def scaled(self, time_scale: float) -> "CarbonTrace":
         """Compress/stretch the time axis by `time_scale` (CI values keep

@@ -53,7 +53,7 @@ from repro.serving.fleet import (
     SizeBuckets,
 )
 from repro.serving.simulator import ReplicaSim, SimResult
-from repro.serving.workload import Dataset, Request
+from repro.serving.workload import SLO_CLASSES, Dataset, Request
 
 
 # ---------------------------------------------------------------------------
@@ -78,7 +78,9 @@ class AutoscalePolicy:
     # over boot_s (a boot wastes at least its own reservation)
     boot_carbon_g: Optional[float] = None
     inventory: Optional[dict[str, int]] = None   # per-chip-type caps
-    utilization: float = 0.6        # per-instance load target (head-room)
+    # per-instance load target (head-room); None = the `slo_class`'s own
+    # target when one is set (a relaxed fleet runs hotter), else 0.6
+    utilization: Optional[float] = None
     min_window_s: float = 0.0       # merge trace windows shorter than this
     slice_factor: int = 4
     # per-replica scheduler policy (serving/batching.py); None = the fleet
@@ -87,12 +89,20 @@ class AutoscalePolicy:
     # EWMA smoothing for rate_estimator="ewma" (weight of the newest
     # observed window rate)
     ewma_alpha: float = 0.5
+    # SLO class the window re-solves provision for (None = the dataset's
+    # own targets). Provisioning a mixed-class stream at its tightest
+    # present class is the conservative single-knob option; the class-
+    # split allocation lives in benchmarks/priority_sweep.py
+    slo_class: Optional[str] = None
 
     def __post_init__(self):
         if self.boot_s < 0:
             raise ValueError(f"negative boot_s: {self.boot_s}")
         if not 0 < self.ewma_alpha <= 1:
             raise ValueError(f"ewma_alpha must be in (0, 1]: {self.ewma_alpha}")
+        if self.slo_class is not None and self.slo_class not in SLO_CLASSES:
+            raise ValueError(f"unknown slo_class: {self.slo_class!r} "
+                             f"(one of {sorted(SLO_CLASSES)})")
 
 
 # ---------------------------------------------------------------------------
@@ -195,13 +205,14 @@ class _AffineProfiles:
     re-solve cost proportional to the solver, not the profiler."""
 
     def __init__(self, catalog: Sequence[DisaggConfig], dataset: Dataset,
-                 buckets: SizeBuckets, utilization: float, batching=None):
+                 buckets: SizeBuckets, utilization: Optional[float],
+                 batching=None, slo_class: Optional[str] = None):
         self._at0 = build_gpu_info(catalog, dataset, buckets, ci=0.0,
                                    utilization=utilization, include_idle=True,
-                                   batching=batching)
+                                   batching=batching, slo_class=slo_class)
         self._at1 = build_gpu_info(catalog, dataset, buckets, ci=1.0,
                                    utilization=utilization, include_idle=True,
-                                   batching=batching)
+                                   batching=batching, slo_class=slo_class)
 
     def at(self, ci: float) -> dict[str, InstanceProfile]:
         out = {}
@@ -279,7 +290,7 @@ def simulate_autoscaled(
     batching = resolve_batch_policy(policy.batching,
                                     default=FLEET_BATCHING_DEFAULT)
     profiles = _AffineProfiles(catalog, dataset, buckets, policy.utilization,
-                               batching)
+                               batching, slo_class=policy.slo_class)
     by_name = {c.name: c for c in catalog}
     ctx_estimate = int(np.mean([r.prompt_len + r.output_len for r in reqs]))
 

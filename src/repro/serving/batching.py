@@ -21,10 +21,36 @@ The policy is vLLM/Sarathi-style hybrid batching:
     (`blocks_needed`/`can_admit`/free-on-finish) through the storage-free
     `BlockLedger`: a chunk is admitted only if its blocks fit next to a
     worst-case growth reservation for the running decodes;
-  - when decode growth still outruns the pool, the scheduler PREEMPTS the
-    youngest running sequence (vLLM recompute-style: its blocks are freed
-    and its prompt + generated prefix re-prefills later); the pool must
-    fit at least one max-length sequence or `OutOfBlocks` surfaces.
+  - when decode growth still outruns the pool, the scheduler PREEMPTS
+    (vLLM recompute-style: the victim's blocks are freed and its prompt +
+    generated prefix re-prefills later); the pool must fit at least one
+    max-length sequence or `OutOfBlocks` surfaces.
+
+SLO classes (priority scheduling, the PR-5 layer): every `SchedSeq`
+carries a `priority` (0 = most latency-critical; executors map it from
+`Request.slo_class` - serving/workload.py). The scheduler is strict-
+priority with aging:
+
+  - ADMISSION orders the waiting queue by effective priority, where a
+    sequence waiting `age_steps` scheduler steps is promoted one level
+    (so a relaxed request behind an endless stream of tight arrivals
+    still schedules - no starvation); ties and single-class workloads
+    keep exact submission order, so the pre-class schedule is replayed
+    bit-identically when every request is one class;
+  - DECODE-SLOT COMPOSITION is shortest-remaining-first within priority:
+    when more sequences are running than the step's token budget has
+    slots, the slots go to the highest classes first and, within a
+    class, to the sequences closest to finishing (SRF drains the decode
+    pool fastest, freeing blocks for waiting prefills);
+  - PREEMPTION is class-ordered: victims are drawn from the worst
+    (most relaxed) class first - a tight sequence is never evicted while
+    a relaxed one holds blocks - and within a class least-sunk-first
+    (partial prefills, then deferred/youngest decodes);
+  - a waiting sequence of strictly better effective priority than the
+    worst block-holder may preempt it AT ADMISSION when no chunk fits
+    otherwise, so a full relaxed decode pool cannot gate a tight TTFT
+    behind whole relaxed generations (and cannot deadlock admission -
+    preemption always makes progress).
 
 `BatchPolicy(kind="serialized")` routes executors to their legacy loops
 (one whole prompt at a time, prefill priority, batch-mean decode context)
@@ -34,7 +60,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from collections import deque
 from typing import Optional
 
 from repro.core.carbon import ChipSpec
@@ -59,6 +84,9 @@ class BatchPolicy:
     block_size    KV block granularity (tokens per block)
     num_blocks    KV pool size in blocks; None derives it from the decode
                   chip's HBM next to the weights (`default_kv_blocks`)
+    age_steps     scheduler steps a waiting sequence spends per one-level
+                  priority promotion (anti-starvation aging; only
+                  relevant on mixed-class workloads)
     """
 
     kind: str = "continuous"
@@ -66,6 +94,7 @@ class BatchPolicy:
     token_budget: int = 512
     block_size: int = 16
     num_blocks: Optional[int] = None
+    age_steps: int = 512
 
     def __post_init__(self):
         if self.kind not in ("serialized", "continuous"):
@@ -77,6 +106,35 @@ class BatchPolicy:
                 raise ValueError(f"token_budget must be >= 1: {self.token_budget}")
             if self.block_size < 1:
                 raise ValueError(f"block_size must be >= 1: {self.block_size}")
+            if self.age_steps < 1:
+                raise ValueError(f"age_steps must be >= 1: {self.age_steps}")
+
+    @staticmethod
+    def from_dataset(ds, block_size: int = 16,
+                     num_blocks: Optional[int] = None,
+                     decode_slots: int = 64,
+                     age_steps: int = 512) -> "BatchPolicy":
+        """Workload-adaptive knobs from the dataset's prompt percentiles.
+
+        The default (256, 512) policy is tuned for chatbot-length prompts;
+        chunked prefill re-reads the weights once per chunk, so a
+        long-prompt workload (longbench: P50 prompt ~1.5k tokens) pays ~6
+        weight reads per median prompt under it. This derives:
+
+          chunk_tokens  covers the P50 prompt in ONE chunk (rounded up to
+                        a multiple of 64, floored at the default 256)
+          token_budget  covers a P75 prompt's chunk plus `decode_slots`
+                        decode tokens, so admission of a long prompt does
+                        not starve the step of decode slots
+
+        `ds` is any object with `p50`/`p75` (prompt, output) percentile
+        pairs - `workload.Dataset` in practice."""
+        rnd = lambda v: int(-(-v // 64) * 64)           # noqa: E731
+        chunk = max(256, rnd(ds.p50[0]))
+        budget = max(512, rnd(min(ds.p75[0], 4 * chunk)) + decode_slots)
+        return BatchPolicy(chunk_tokens=chunk, token_budget=budget,
+                           block_size=block_size, num_blocks=num_blocks,
+                           age_steps=age_steps)
 
 
 SERIALIZED = BatchPolicy(kind="serialized")
@@ -199,6 +257,36 @@ def build_dpd_decode_ledger(
     return BlockLedger(blocks, policy.block_size)
 
 
+def plan_dpd_decode_step(active: "list[SchedSeq]", ledger: "BlockLedger",
+                         ) -> "tuple[list[SchedSeq], Optional[SchedSeq]]":
+    """One dpd pool-B round's composition, shared by BOTH executors.
+
+    (stepping, wedge_victim): sequences not at a block boundary decode
+    for free; boundary-crossers get the free blocks class-first (tight
+    before relaxed), oldest within a class; the rest stall this round.
+    When nothing can step (zero free blocks, every sequence at a
+    boundary) the worst-class youngest sequence is returned as the
+    swap-preemption victim - a tight seq is never reshipped while a
+    relaxed one holds blocks - or None when only one sequence is active
+    (the caller's OutOfBlocks case)."""
+    budget = ledger.free_blocks
+    granted: set[int] = set()
+    for i in sorted(range(len(active)),
+                    key=lambda i: (active[i].priority, i)):
+        seq = active[i]
+        need = ledger.blocks_needed(seq.kv + 1) - ledger.held(seq.sid)
+        if need <= 0:
+            granted.add(i)
+        elif need <= budget:
+            granted.add(i)
+            budget -= need
+    stepping = [active[i] for i in sorted(granted)]
+    if stepping or len(active) <= 1:
+        return stepping, None
+    return [], max(enumerate(active),
+                   key=lambda t: (t[1].priority, t[0]))[1]
+
+
 # ---------------------------------------------------------------------------
 # Block ledger: PagedKVPool's accounting without the storage
 # ---------------------------------------------------------------------------
@@ -275,6 +363,10 @@ class SchedSeq:
     prompt_len: int
     output_len: int
     payload: object = None
+    # SLO-class priority (0 = most latency-critical; workload.py maps
+    # class names to levels). Orders admission, decode-slot composition,
+    # and preemption; equal priorities reproduce the pre-class schedule.
+    priority: int = 1
     # prefill progress: `prefill_target` tokens must be (re)computed before
     # the sequence decodes; after a preemption it covers prompt + the
     # already-emitted prefix (vLLM recompute semantics)
@@ -283,6 +375,12 @@ class SchedSeq:
     emitted: int = 0
     kv: int = 0                       # tokens currently cached (pool length)
     preemptions: int = 0
+    # scheduler bookkeeping (assigned by submit): submission order for
+    # deterministic ties, and the step the seq entered the waiting queue
+    # (aging credit - preserved across preemptions, so a preempted seq
+    # keeps its seniority)
+    order: int = 0
+    enqueue_step: int = 0
 
     def __post_init__(self):
         if self.prefill_target < 0:
@@ -359,15 +457,30 @@ class ContinuousScheduler:
         # speculative kinds: the verify pass extends the cache by k+1
         # before rejected tokens are trimmed back)
         self.decode_tokens = max(decode_tokens, 1)
-        self.waiting: deque[SchedSeq] = deque()   # not yet holding blocks
+        self.waiting: list[SchedSeq] = []         # not yet holding blocks
         self.prefilling: list[SchedSeq] = []      # blocks held, chunks pending
         self.running: list[SchedSeq] = []         # fully prefilled, decoding
         self.finished: list[SchedSeq] = []
+        self._step = 0                            # next_plan() invocations
+        self._order = 0                           # submission counter
 
     # ------------------------------------------------------------- intake
     def submit(self, seq: SchedSeq) -> SchedSeq:
+        seq.order = self._order
+        self._order += 1
+        seq.enqueue_step = self._step
         self.waiting.append(seq)
         return seq
+
+    def _eff_priority(self, seq: SchedSeq) -> int:
+        """Waiting-queue priority with aging: one level of promotion per
+        `age_steps` scheduler steps spent waiting (floor 0), so lower
+        classes cannot starve behind an endless higher-class stream."""
+        waited = self._step - seq.enqueue_step
+        return max(seq.priority - waited // self.policy.age_steps, 0)
+
+    def _wkey(self, seq: SchedSeq) -> tuple[int, int]:
+        return (self._eff_priority(seq), seq.order)
 
     @property
     def n_scheduled(self) -> int:
@@ -395,13 +508,92 @@ class ContinuousScheduler:
         seq.prefill_target = seq.prompt_len + max(seq.emitted - 1, 0)
         seq.prefilled = 0
         seq.kv = 0
-        self.waiting.appendleft(seq)
+        # `order` keeps its original value (the seq still sorts ahead of
+        # later same-class arrivals, the list equivalent of the old
+        # appendleft re-queue), but aging credit RESETS: an aged victim
+        # that still out-sorted its preemptor would be re-admitted in the
+        # very step it was evicted for, churning forever
+        seq.enqueue_step = self._step
+        self.waiting.append(seq)
 
-    def _build_chunks(self, budget: int, reserve: int) -> list[PrefillChunk]:
+    def _select_decodes(self) -> list[SchedSeq]:
+        """This step's decode participants: every running sequence when
+        they all fit the token budget (the common case, identical to the
+        pre-class scheduler); under slot pressure the slots go to the
+        highest classes first and shortest-remaining-first within a
+        class. Plan order stays running-list (admission) order either
+        way, so executor-side iteration (and rng draws) are stable."""
+        slots = max(self.policy.token_budget // self.decode_tokens, 1)
+        if len(self.running) <= slots:
+            return list(self.running)
+        chosen = {id(s) for s in sorted(
+            self.running,
+            key=lambda s: (s.priority, s.remaining, s.order))[:slots]}
+        return [s for s in self.running if id(s) in chosen]
+
+    def _pick_victim(self, decodes: list[SchedSeq],
+                     max_priority: Optional[int] = None,
+                     ) -> Optional[SchedSeq]:
+        """Class-ordered preemption victim among the block holders.
+
+        Worst (highest-value) class first - a tight sequence is never
+        evicted while a relaxed one holds blocks - and within a class the
+        least-sunk work first: partial prefills (pure recompute), then
+        running sequences NOT decoding this step (SRF-deferred: evicting
+        them does not shrink the step), then active decodes, youngest
+        first. The last active decode is only evictable for a strictly
+        better class - a partial prefill during growth eviction, or the
+        pending class (`max_priority`) during admission eviction;
+        otherwise the step must keep its one decode and `OutOfBlocks`
+        can surface.
+
+        `max_priority` restricts victims to classes strictly worse than
+        it (admission preemption must never evict an equal-or-better
+        class)."""
+        in_decodes = {id(s) for s in decodes}
+        cands = [(s, 0) for s in self.prefilling]
+        cands += [(s, 1) for s in self.running if id(s) not in in_decodes]
+        if len(decodes) > 1:
+            cands += [(s, 2) for s in decodes]
+        elif decodes and (
+                any(p.priority < decodes[0].priority for p in self.prefilling)
+                or (max_priority is not None
+                    and decodes[0].priority > max_priority)):
+            cands += [(s, 2) for s in decodes]
+        if max_priority is not None:
+            cands = [(s, r) for s, r in cands if s.priority > max_priority]
+        if not cands:
+            return None
+        return max(cands, key=lambda c: (c[0].priority, -c[1], c[0].order))[0]
+
+    def _queue_head(self) -> Optional[SchedSeq]:
+        """The sequence admission would take next: the first prefilling
+        seq with chunks still pending (head-of-line continue), else the
+        sorted-waiting head."""
+        for s in self.prefilling:
+            if s.prefilled < s.prefill_target:
+                return s
+        if self.waiting:
+            self.waiting.sort(key=self._wkey)
+            return self.waiting[0]
+        return None
+
+    def _build_chunks(self, budget: int, reserve: int,
+                      skip: "frozenset[int] | set[int]" = frozenset(),
+                      ) -> list[PrefillChunk]:
         """Admit/continue prefill chunks into `budget` tokens, leaving
-        `reserve` blocks untouched for the running decodes' growth."""
+        `reserve` blocks untouched for the running decodes' growth.
+
+        `skip` bars sids from re-admission: a victim preempted earlier in
+        the SAME step must not take back the blocks it was evicted to
+        free (a small victim re-admitting while the head stays blocked
+        repeats every step and never converges). A skipped victim still
+        blocks the line behind it - letting later (worse-class) arrivals
+        overtake it would admit a relaxed seq in the very step a better
+        one was evicted."""
         chunks: list[PrefillChunk] = []
-        # in-flight prefills continue first (FCFS), one chunk per seq/step
+        # in-flight prefills continue first (admission order), one chunk
+        # per seq/step
         for seq in self.prefilling:
             if budget <= 0:
                 break
@@ -417,15 +609,20 @@ class ContinuousScheduler:
             chunks.append(PrefillChunk(seq, take, seq.prefilled,
                                        seq.prefilled + take >= seq.prefill_target))
             budget -= take
-        # then admit fresh sequences while budget and blocks allow
+        # then admit fresh sequences in effective-priority order (aged
+        # classes promote; within a class, submission order) while budget
+        # and blocks allow
+        self.waiting.sort(key=self._wkey)
         while (budget > 0 and self.waiting
                and self.n_scheduled < self.max_batch):
             seq = self.waiting[0]
+            if seq.sid in skip:
+                break                              # this-step victim blocks
             take = min(self.policy.chunk_tokens, seq.prefill_target, budget)
             need = self.ledger.blocks_needed(take)
             if need > self.ledger.free_blocks - reserve:
-                break                              # FCFS: no overtaking
-            self.waiting.popleft()
+                break                              # priority order: no overtaking
+            self.waiting.pop(0)
             self.ledger.allocate(seq.sid, take)
             self.prefilling.append(seq)
             chunks.append(PrefillChunk(seq, take, 0,
@@ -433,31 +630,89 @@ class ContinuousScheduler:
             budget -= take
         return chunks
 
+    def _admission_preempt(self, decodes: list[SchedSeq],
+                           preempted: list[SchedSeq],
+                           budget_of) -> list[PrefillChunk]:
+        """No chunk fit: evict block holders of strictly worse RAW class
+        than the QUEUE HEAD (class-ordered) until it admits, so a full
+        relaxed decode pool cannot gate a tight TTFT behind whole relaxed
+        generations - and admission can always make progress by
+        preemption when a better class heads the queue.
+
+        Two deliberate restrictions keep this churn-free: the comparison
+        is raw-vs-raw (aging promotes queue ORDER, never preemption
+        power - an aged standard seq evicting a standard holder would
+        churn a single-class workload forever), and the beneficiary is
+        the actual queue head (evicting on behalf of a better class
+        buried behind an aged head would free blocks the head, not the
+        better class, then consumes - the same churn one level up)."""
+        chunks: list[PrefillChunk] = []
+        while not chunks:
+            head = self._queue_head()
+            if head is None:
+                return chunks
+            # futility check: do not throw away worse-class KV when even
+            # reclaiming ALL of it cannot fit the head's next chunk (the
+            # blocks freed would sit next to same-class holders the head
+            # may not evict, for zero admission progress)
+            budget = budget_of(decodes)
+            if budget <= 0:
+                return chunks
+            take = min(self.policy.chunk_tokens,
+                       head.prefill_target - head.prefilled, budget)
+            need = (self.ledger.blocks_needed(head.prefilled + take)
+                    - self.ledger.held(head.sid))
+            reclaimable = sum(
+                self.ledger.held(s.sid)
+                for s in self.prefilling + self.running
+                if s.priority > head.priority)
+            # admission must also clear the growth reserve of the decodes
+            # that would REMAIN (equal-or-better class - not evictable
+            # for this head), so count it against the reclaimable blocks
+            reserve_keep = self._growth_reserve(
+                [s for s in decodes if s.priority <= head.priority])
+            if need > self.ledger.free_blocks + reclaimable - reserve_keep:
+                return chunks
+            victim = self._pick_victim(decodes, max_priority=head.priority)
+            if victim is None:
+                return chunks
+            self._preempt(victim)
+            if victim in decodes:
+                decodes.remove(victim)
+            preempted.append(victim)
+            chunks = self._build_chunks(budget_of(decodes),
+                                        self._growth_reserve(decodes),
+                                        skip={v.sid for v in preempted})
+        return chunks
+
     def next_plan(self) -> Optional[StepPlan]:
         """The next step, or None when nothing is schedulable."""
         if not self.has_work:
             return None
+        self._step += 1
+        preempted: list[SchedSeq] = []
         if not self.mix_decode:
             # prefill-priority composition: chunks get dedicated steps
             chunks = self._build_chunks(self.policy.token_budget,
                                         self._growth_reserve(self.running))
+            if not chunks:
+                chunks = self._admission_preempt(
+                    self.running, preempted,
+                    lambda _d: self.policy.token_budget)
             if chunks:
-                return StepPlan(chunks, [], [])
-        decodes = list(self.running)
-        preempted: list[SchedSeq] = []
+                return StepPlan(chunks, [], preempted)
+        decodes = self._select_decodes()
         # guarantee this step's worst-case decode growth fits: evict the
-        # least-sunk work first - partial prefills (pure recompute, no
-        # emitted tokens lost), then the youngest running sequences
-        while (self._growth_reserve(decodes) > self.ledger.free_blocks
-               and self.prefilling):
-            victim = self.prefilling[-1]
+        # worst class first, least-sunk within a class (partial prefills -
+        # pure recompute, no emitted tokens lost - then deferred, then the
+        # youngest active decodes)
+        while self._growth_reserve(decodes) > self.ledger.free_blocks:
+            victim = self._pick_victim(decodes)
+            if victim is None:
+                break
             self._preempt(victim)
-            preempted.append(victim)
-        while (self._growth_reserve(decodes) > self.ledger.free_blocks
-               and len(decodes) > 1):
-            victim = decodes[-1]
-            self._preempt(victim)
-            decodes.remove(victim)
+            if victim in decodes:
+                decodes.remove(victim)
             preempted.append(victim)
         reserve = self._growth_reserve(decodes)
         if reserve > self.ledger.free_blocks:
@@ -468,17 +723,24 @@ class ContinuousScheduler:
                 f"single sequence (kv={decodes[0].kv} "
                 f"+{self.decode_tokens} tokens)")
         chunks = [] if not self.mix_decode else self._build_chunks(
-            self.policy.token_budget - len(decodes), reserve)
+            self.policy.token_budget - len(decodes), reserve,
+            skip={v.sid for v in preempted})
+        if self.mix_decode and not chunks and decodes:
+            chunks = self._admission_preempt(
+                decodes, preempted,
+                lambda d: self.policy.token_budget - len(d))
         if not chunks and not decodes:
             # nothing runs and no decode will free blocks. Partially
             # prefilled sequences behind the head-of-line may be wedging
-            # the pool: preempt them youngest-first (recompute) until the
-            # head can take a chunk
+            # the pool: preempt them class-ordered-youngest-first
+            # (recompute) until the head can take a chunk
             while not chunks and len(self.prefilling) > 1:
-                victim = self.prefilling[-1]
+                victim = max(self.prefilling,
+                             key=lambda s: (s.priority, s.order))
                 self._preempt(victim)
                 preempted.append(victim)
-                chunks = self._build_chunks(self.policy.token_budget, 0)
+                chunks = self._build_chunks(self.policy.token_budget, 0,
+                                            skip={v.sid for v in preempted})
             if not chunks:
                 if self.prefilling or self.waiting:
                     # the pool is smaller than one chunk of the

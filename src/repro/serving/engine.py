@@ -53,6 +53,7 @@ from repro.serving.batching import (
     build_dpd_decode_ledger,
     build_dpd_prefill_scheduler,
     build_single_pool_scheduler,
+    plan_dpd_decode_step,
     resolve_batch_policy,
 )
 from repro.serving.costs import (
@@ -65,6 +66,7 @@ from repro.serving.costs import (
 from repro.serving.kv_cache import PagedKVPool
 from repro.serving.perfmodel import Interconnect, decode_cost
 from repro.serving.simulator import ChipUse
+from repro.serving.workload import SLO_CLASSES, class_priority
 
 
 @dataclasses.dataclass
@@ -73,6 +75,7 @@ class EngineRequest:
     prompt: np.ndarray               # (S,) int32
     max_new_tokens: int
     arrival_s: float = 0.0
+    slo_class: str = "standard"      # workload.SLO_CLASSES latency class
     out_tokens: list[int] = dataclasses.field(default_factory=list)
     ttft_s: float = float("nan")
     first_token_s: float = float("nan")
@@ -194,9 +197,13 @@ class ServingEngine:
                     target_cfg, draft_cfg, self.new_chip)
 
     # ------------------------------------------------------------------
-    def submit(self, prompt, max_new_tokens: int, arrival_s: float = 0.0) -> EngineRequest:
+    def submit(self, prompt, max_new_tokens: int, arrival_s: float = 0.0,
+               slo_class: str = "standard") -> EngineRequest:
+        if slo_class not in SLO_CLASSES:
+            raise ValueError(f"unknown slo_class: {slo_class!r} "
+                             f"(one of {sorted(SLO_CLASSES)})")
         r = EngineRequest(self._next_id, np.asarray(prompt, np.int32),
-                          max_new_tokens, arrival_s)
+                          max_new_tokens, arrival_s, slo_class=slo_class)
         self._next_id += 1
         self.waiting.append(r)
         return r
@@ -369,7 +376,7 @@ class ServingEngine:
             sched.submit(SchedSeq(
                 r.req_id, len(r.prompt),
                 r.max_new_tokens if output_len is None else output_len,
-                payload=r))
+                payload=r, priority=class_priority(r.slo_class)))
 
     def _prefix_tokens(self, r: EngineRequest, upto: int) -> np.ndarray:
         """First `upto` tokens of prompt + committed output (recompute
@@ -606,7 +613,7 @@ class ServingEngine:
                         f"{ledger.num_blocks})")
                 break
             seq = SchedSeq(r.req_id, len(r.prompt), r.max_new_tokens,
-                           payload=r)
+                           payload=r, priority=class_priority(r.slo_class))
             seq.prefilled = seq.prefill_target
             seq.kv = kv0
             seq.emitted = emitted
@@ -616,25 +623,19 @@ class ServingEngine:
 
     def _dpd_decode_step(self) -> None:
         ledger = self._ledger_b
-        # block-pressure step composition, identical to the simulator's:
-        # boundary-crossers get the free blocks oldest-first, others stall
-        budget = ledger.free_blocks
-        stepping = []
-        for seq in self._decoding_b:
-            need = ledger.blocks_needed(seq.kv + 1) - ledger.held(seq.sid)
-            if need <= 0:
-                stepping.append(seq)
-            elif need <= budget:
-                stepping.append(seq)
-                budget -= need
+        # block-pressure step composition, shared with the simulator
+        # (batching.plan_dpd_decode_step): boundary-crossers get the free
+        # blocks class-first, others stall
+        stepping, victim = plan_dpd_decode_step(self._decoding_b, ledger)
         if not stepping:
-            if len(self._decoding_b) == 1:
+            if victim is None:
                 raise OutOfBlocks(
                     f"dpd decode pool of {ledger.num_blocks} blocks cannot "
                     f"grow a single sequence (kv={self._decoding_b[0].kv})")
-            # fully wedged: swap the youngest back over the link (ledger
-            # accounting only - the KV stays in the shared storage pool)
-            victim = self._decoding_b.pop()
+            # fully wedged: swap the worst-class youngest back over the
+            # link (ledger accounting only - the KV stays in the shared
+            # storage pool)
+            self._decoding_b.remove(victim)
             ledger.free(victim.sid)
             nbytes = dpd_kv_bytes(self.cfg, victim.kv)
             self.link_bytes += nbytes

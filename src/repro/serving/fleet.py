@@ -48,7 +48,12 @@ from repro.serving.costs import (
 )
 from repro.serving.perfmodel import decode_cost, hybrid_step_cost, prefill_cost
 from repro.serving.simulator import CHIP_DB, SimResult, simulate
-from repro.serving.workload import Dataset, Request
+from repro.serving.workload import (
+    NUM_PRIORITIES,
+    Dataset,
+    Request,
+    class_priority,
+)
 
 # the fleet/autoscale layers run iteration-level continuous batching by
 # default (serving/batching.py); pass batching="serialized" to the entry
@@ -272,24 +277,42 @@ class OnlineDispatcher:
     past. The offline `route_least_loaded`/`route_bucketed` partitioners
     and the autoscaler's window loop both run on this dispatcher, so
     static-fleet and autoscaled runs route identically.
+
+    Routing is SLO-class aware: backlog is tracked per priority level, and
+    a request's finish estimate counts only the backlog of its own class
+    and better (the priority scheduler serves it ahead of more-relaxed
+    work - serving/batching.py), while its own service time extends every
+    equal-or-worse level. A tight arrival therefore prefers the replica
+    with the least *tight* backlog even when relaxed bulk sits elsewhere;
+    single-class streams reduce exactly to the scalar earliest-finish
+    dispatcher.
     """
 
     def __init__(self, batching: "BatchPolicy | str | None" = None):
         self.batching = resolve_batch_policy(batching,
                                              default=FLEET_BATCHING_DEFAULT)
         self.configs: dict[int, DisaggConfig] = {}
-        self.busy_until: dict[int, float] = {}
+        # per-priority-level completion estimate: _busy_class[rid][p] is
+        # when work of priority <= p (the backlog that precedes a class-p
+        # arrival under priority scheduling) is expected to finish
+        self._busy_class: dict[int, list[float]] = {}
         self._est_cache: dict[tuple[int, int, int], float] = {}
+
+    @property
+    def busy_until(self) -> dict[int, float]:
+        """All-class completion estimate per replica (the worst level) -
+        derived, so it can never desync from the per-class state."""
+        return {rid: lv[-1] for rid, lv in self._busy_class.items()}
 
     def add(self, rid: int, cfg: DisaggConfig, ready_s: float = 0.0) -> None:
         if rid in self.configs:
             raise ValueError(f"replica id {rid} already registered")
         self.configs[rid] = cfg
-        self.busy_until[rid] = ready_s
+        self._busy_class[rid] = [ready_s] * NUM_PRIORITIES
 
     def remove(self, rid: int) -> None:
         cfg = self.configs.pop(rid)
-        self.busy_until.pop(rid)
+        self._busy_class.pop(rid)
         # the estimate cache is keyed by config object identity; once no
         # registered replica holds this config, drop its entries so a
         # recycled id() of a *different* config can never serve them
@@ -299,8 +322,8 @@ class OnlineDispatcher:
 
     def sync(self, rid: int, clock_s: float) -> None:
         """Floor a replica's backlog estimate at its engine's real clock."""
-        if self.busy_until[rid] < clock_s:
-            self.busy_until[rid] = clock_s
+        self._busy_class[rid] = [max(v, clock_s)
+                                 for v in self._busy_class[rid]]
 
     def _est(self, rid: int, req: Request) -> float:
         key = (id(self.configs[rid]), req.prompt_len, req.output_len)
@@ -314,15 +337,25 @@ class OnlineDispatcher:
              candidates: Optional[Sequence[int]] = None) -> int:
         """Route one arrival; returns the chosen replica id (ties break on
         iteration order of `candidates`, default all registered ids)."""
+        p = class_priority(req.slo_class)
         ids = candidates if candidates is not None else sorted(self.configs)
         best, best_finish = None, None
         for rid in ids:
-            finish = max(self.busy_until[rid], req.arrival_s) + self._est(rid, req)
+            finish = max(self._busy_class[rid][p], req.arrival_s) \
+                + self._est(rid, req)
             if best_finish is None or finish < best_finish - 1e-12:
                 best, best_finish = rid, finish
         if best is None:
             raise ValueError("cannot route onto an empty replica set")
-        self.busy_until[best] = best_finish
+        busy = self._busy_class[best]
+        start = max(busy[p], req.arrival_s)
+        est = best_finish - start
+        # the request EXTENDS every equal-or-worse level by its service
+        # time (priority scheduling inserts it ahead of that backlog);
+        # maxing with the finish instead would under-count relaxed
+        # completion whenever relaxed backlog already exceeds it
+        for q in range(p, NUM_PRIORITIES):
+            busy[q] = max(busy[q], start) + est
         return best
 
 

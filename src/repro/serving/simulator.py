@@ -75,6 +75,7 @@ from repro.serving.batching import (
     build_dpd_decode_ledger,
     build_dpd_prefill_scheduler,
     build_single_pool_scheduler,
+    plan_dpd_decode_step,
     resolve_batch_policy,
 )
 from repro.serving.costs import (
@@ -91,7 +92,7 @@ from repro.serving.perfmodel import (
     hybrid_step_cost,
     max_concurrency,
 )
-from repro.serving.workload import Dataset, Request
+from repro.serving.workload import Dataset, Request, class_priority, slo_targets
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,7 +129,11 @@ class ReqTrace:
         return (self.last_token_s - self.first_token_s) / (self.tokens_out - 1)
 
     def slo_ok(self, ds: Dataset) -> bool:
-        return self.ttft_s <= ds.ttft_slo_s and self.tpot_s <= ds.tpot_slo_s
+        """Against the request's own class targets (workload.SLO_CLASSES;
+        the default "standard" class is exactly the dataset's Table-2
+        targets, so single-class accounting is unchanged)."""
+        ttft, tpot = slo_targets(ds, self.req.slo_class)
+        return self.ttft_s <= ttft and self.tpot_s <= tpot
 
 
 @dataclasses.dataclass
@@ -169,11 +174,21 @@ class SimResult:
     def total_tokens(self) -> int:
         return sum(t.tokens_out for t in self.traces)
 
-    def slo_attainment(self, ds: Dataset) -> float:
-        done = [t for t in self.traces if t.tokens_out >= t.req.output_len]
-        if not self.traces:
+    def slo_attainment(self, ds: Dataset,
+                       slo_class: Optional[str] = None) -> float:
+        """Fraction of requests meeting their class targets; `slo_class`
+        restricts to one class (None = all, the legacy aggregate)."""
+        traces = self.traces if slo_class is None else \
+            [t for t in self.traces if t.req.slo_class == slo_class]
+        done = [t for t in traces if t.tokens_out >= t.req.output_len]
+        if not traces:
             return 1.0
-        return sum(t.slo_ok(ds) for t in done) / len(self.traces)
+        return sum(t.slo_ok(ds) for t in done) / len(traces)
+
+    def per_class_attainment(self, ds: Dataset) -> dict[str, float]:
+        """SLO attainment per class present in the trace set."""
+        classes = sorted({t.req.slo_class for t in self.traces})
+        return {c: self.slo_attainment(ds, slo_class=c) for c in classes}
 
     def mean_ttft(self) -> float:
         v = [t.ttft_s for t in self.traces if not math.isnan(t.ttft_s)]
@@ -644,7 +659,8 @@ class ReplicaSim:
                    and traces[self._i_arrival].req.arrival_s <= self._t):
                 tr = traces[self._i_arrival]
                 sched.submit(SchedSeq(self._i_arrival, tr.req.prompt_len,
-                                      tr.req.output_len, payload=tr))
+                                      tr.req.output_len, payload=tr,
+                                      priority=class_priority(tr.req.slo_class)))
                 self._i_arrival += 1
             plan = sched.next_plan()
             if plan is None:
@@ -730,7 +746,8 @@ class ReplicaSim:
                 # so prefill completion retires the sequence (and frees
                 # its pool-A blocks - the KV ships to pool B)
                 sched.submit(SchedSeq(self._i_arrival, tr.req.prompt_len, 1,
-                                      payload=tr))
+                                      payload=tr,
+                                      priority=class_priority(tr.req.slo_class)))
                 self._i_arrival += 1
             plan = sched.next_plan()
             if plan is None:
@@ -817,7 +834,8 @@ class ReplicaSim:
                         ledger.free_blocks - len(self._active_b) - 1:
                     break                          # wait for blocks to free
                 seq = SchedSeq(sid, tr.req.prompt_len, tr.req.output_len,
-                               payload=tr)
+                               payload=tr,
+                               priority=class_priority(tr.req.slo_class))
                 seq.prefilled = seq.prefill_target
                 seq.kv = kv0
                 seq.emitted = resume_emitted
@@ -841,27 +859,18 @@ class ReplicaSim:
                     return
                 self._t_b = nxt
                 continue
-            # block-pressure step composition: sequences not at a block
-            # boundary decode for free; boundary-crossers get the free
-            # blocks oldest-first, the rest stall this round
-            budget = ledger.free_blocks
-            stepping = []
-            for seq in self._active_b:
-                need = ledger.blocks_needed(seq.kv + 1) - ledger.held(seq.sid)
-                if need <= 0:
-                    stepping.append(seq)
-                elif need <= budget:
-                    stepping.append(seq)
-                    budget -= need
+            # block-pressure step composition (shared with the engine:
+            # batching.plan_dpd_decode_step) - boundary-crossers get the
+            # free blocks class-first, the rest stall this round
+            stepping, victim = plan_dpd_decode_step(self._active_b, ledger)
             if not stepping:
-                # fully wedged: zero free blocks and every sequence at a
-                # boundary - swap out the youngest to break the deadlock
-                if len(self._active_b) == 1:
+                if victim is None:
                     raise OutOfBlocks(
                         f"dpd decode pool of {ledger.num_blocks} blocks "
                         f"cannot grow a single sequence "
                         f"(kv={self._active_b[0].kv})")
-                reship(self._active_b[-1])
+                # fully wedged: swap out the worst-class youngest
+                reship(victim)
                 continue
             ctxs = tuple(s.ctx for s in stepping)
             c = hybrid_step_cost(cfg, self.old_chip, (), ctxs)

@@ -4,16 +4,78 @@ Each dataset is summarized by its latency SLOs and the P25/P50/P75
 (input, output) token lengths; samplers draw from a lognormal fitted
 through those percentiles, or run in fixed-size mode (the paper truncates
 prompts to a fixed size per experiment so results are comparable).
+
+SLO classes: GreenLLM's carbon headroom comes from exploiting *per-
+application* latency slack (Table 2: a chatbot turn needs 200 ms TTFT, a
+summarization job tolerates 15 s). `SLOClass` makes that slack a first-
+class request attribute: every `Request` carries an `slo_class`
+(tight / standard / relaxed), each class scaling the dataset's base
+TTFT/TPOT targets and mapping to a scheduler priority
+(serving/batching.py admits, composes, and preempts by it; the fleet
+dispatcher and the allocator gate per-class). "standard" has scale 1.0 -
+a single-class workload is bit-identical to the pre-class code paths.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Iterator, Optional
+from typing import Callable, Iterator, Optional
 
 import numpy as np
 
 Z75 = 0.6744897501960817  # Phi^-1(0.75)
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """One latency class: a scheduler priority + SLO scale factors + a
+    provisioning load target.
+
+    `priority` orders admission/preemption (0 = most latency-critical);
+    the scales multiply the *dataset's* Table-2 targets, so a class means
+    the same thing relative to every workload ("tight" chat is 100 ms
+    TTFT, "tight" summarization 7.5 s). `utilization` is the per-instance
+    load target the allocator provisions this class's traffic at: the
+    0.6 default exists to absorb Poisson queueing into tail TTFT, and a
+    class with TTFT slack can spend that slack on queueing instead of
+    idle headroom - running its instances hotter is exactly where the
+    per-class carbon headroom lives (EcoServe)."""
+
+    name: str
+    priority: int
+    ttft_scale: float
+    tpot_scale: float
+    utilization: float = 0.6
+
+    def targets(self, ds: "Dataset") -> tuple[float, float]:
+        return ds.ttft_slo_s * self.ttft_scale, ds.tpot_slo_s * self.tpot_scale
+
+
+SLO_CLASSES = {
+    # standard is the identity class: scale 1.0, the allocator's stock
+    # 0.6 load target - single-class code paths are bit-identical
+    "tight": SLOClass("tight", 0, ttft_scale=0.5, tpot_scale=0.75,
+                      utilization=0.5),
+    "standard": SLOClass("standard", 1, ttft_scale=1.0, tpot_scale=1.0,
+                         utilization=0.6),
+    "relaxed": SLOClass("relaxed", 2, ttft_scale=5.0, tpot_scale=2.0,
+                        utilization=0.9),
+}
+NUM_PRIORITIES = 1 + max(c.priority for c in SLO_CLASSES.values())
+
+# the mixed-class traffic shape the priority benchmarks serve (a latency-
+# critical minority over a bulk of standard turns plus batchy background)
+DEFAULT_CLASS_MIX = {"tight": 0.25, "standard": 0.5, "relaxed": 0.25}
+
+
+def class_priority(slo_class: str) -> int:
+    """Scheduler priority of a class name (0 = highest)."""
+    return SLO_CLASSES[slo_class].priority
+
+
+def slo_targets(ds: "Dataset", slo_class: str) -> tuple[float, float]:
+    """(TTFT, TPOT) targets of `slo_class` on dataset `ds` (Table 2 base)."""
+    return SLO_CLASSES[slo_class].targets(ds)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,6 +87,9 @@ class Dataset:
     p25: tuple[int, int]
     p50: tuple[int, int]
     p75: tuple[int, int]
+    # class newly sampled requests default to when no `class_mix` is given
+    # ("standard" = the dataset's own Table-2 targets, scale 1.0)
+    slo_class: str = "standard"
 
     def size_at(self, percentile: str) -> tuple[int, int]:
         return {"p25": self.p25, "p50": self.p50, "p75": self.p75}[percentile]
@@ -43,6 +108,16 @@ class Request:
     arrival_s: float
     prompt_len: int
     output_len: int
+    slo_class: str = "standard"
+
+    def __post_init__(self):
+        if self.slo_class not in SLO_CLASSES:
+            raise ValueError(f"unknown slo_class: {self.slo_class!r} "
+                             f"(one of {sorted(SLO_CLASSES)})")
+
+    @property
+    def priority(self) -> int:
+        return class_priority(self.slo_class)
 
 
 def _lognormal_params(p25: float, p50: float, p75: float) -> tuple[float, float]:
@@ -51,8 +126,34 @@ def _lognormal_params(p25: float, p50: float, p75: float) -> tuple[float, float]
     return mu, max(sigma, 1e-3)
 
 
+def _class_fn(dataset: Dataset,
+              class_mix: Optional[dict[str, float]],
+              seed: int) -> Callable[[np.random.Generator], str]:
+    """Per-request class sampler off a DEDICATED rng stream: adding or
+    changing `class_mix` never perturbs the arrival/size stream of the
+    same seed, so a mixed-class run is the SAME physical workload as its
+    classless twin with priorities overlaid (the controlled comparison
+    the priority benchmarks make). `class_mix=None` assigns the dataset's
+    default class."""
+    if class_mix is None:
+        default = dataset.slo_class
+        if default not in SLO_CLASSES:
+            raise ValueError(f"unknown dataset slo_class: {default!r}")
+        return lambda _rng: default
+    unknown = set(class_mix) - set(SLO_CLASSES)
+    if unknown:
+        raise ValueError(f"unknown slo classes in mix: {sorted(unknown)}")
+    if min(class_mix.values(), default=-1) < 0 or sum(class_mix.values()) <= 0:
+        raise ValueError(f"bad class mix: {class_mix}")
+    names = sorted(class_mix)
+    p = np.asarray([class_mix[n] for n in names], dtype=float)
+    p /= p.sum()
+    crng = np.random.default_rng((seed, 0x51_0C1A55))  # class-only stream
+    return lambda _rng: names[crng.choice(len(names), p=p)]
+
+
 def _poisson_requests(rng: np.random.Generator, qps: float, duration_s: float,
-                      size_fn) -> list[Request]:
+                      size_fn, cls_fn=None) -> list[Request]:
     """Shared arrival process: exponential gaps, sizes from `size_fn(rng)`."""
     reqs: list[Request] = []
     t = 0.0
@@ -62,7 +163,8 @@ def _poisson_requests(rng: np.random.Generator, qps: float, duration_s: float,
         if t >= duration_s:
             break
         pl, ol = size_fn(rng)
-        reqs.append(Request(i, t, pl, ol))
+        cls = "standard" if cls_fn is None else cls_fn(rng)
+        reqs.append(Request(i, t, pl, ol, slo_class=cls))
         i += 1
     return reqs
 
@@ -73,8 +175,13 @@ def sample_requests(
     duration_s: float,
     seed: int = 0,
     fixed_size: Optional[tuple[int, int]] = None,
+    class_mix: Optional[dict[str, float]] = None,
 ) -> list[Request]:
-    """Poisson arrivals at `qps` for `duration_s`; sizes lognormal or fixed."""
+    """Poisson arrivals at `qps` for `duration_s`; sizes lognormal or fixed.
+
+    `class_mix` ({class: weight}) samples each request's `slo_class` from
+    the mix; None assigns the dataset's default class (and leaves the rng
+    stream untouched, so legacy streams are bit-identical)."""
     rng = np.random.default_rng(seed)
     if fixed_size is not None:
         size_fn = lambda _rng: fixed_size  # noqa: E731
@@ -85,7 +192,8 @@ def sample_requests(
         def size_fn(r):
             return (int(np.clip(r.lognormal(mu_in, sg_in), 1, 8192)),
                     int(np.clip(r.lognormal(mu_out, sg_out), 1, 4096)))
-    return _poisson_requests(rng, qps, duration_s, size_fn)
+    return _poisson_requests(rng, qps, duration_s, size_fn,
+                             _class_fn(dataset, class_mix, seed))
 
 
 def sample_mixture_requests(
@@ -94,6 +202,7 @@ def sample_mixture_requests(
     duration_s: float,
     seed: int = 0,
     weights: tuple[float, float, float] = (0.25, 0.5, 0.25),
+    class_mix: Optional[dict[str, float]] = None,
 ) -> list[Request]:
     """Poisson arrivals whose sizes are a 3-point mixture of the dataset's
     P25/P50/P75 (input, output) pairs.
@@ -108,7 +217,8 @@ def sample_mixture_requests(
     p = np.asarray(weights, dtype=float) / sum(weights)
     sizes = (dataset.p25, dataset.p50, dataset.p75)
     return _poisson_requests(np.random.default_rng(seed), qps, duration_s,
-                             lambda r: sizes[r.choice(3, p=p)])
+                             lambda r: sizes[r.choice(3, p=p)],
+                             _class_fn(dataset, class_mix, seed))
 
 
 def sample_piecewise_requests(
@@ -117,6 +227,7 @@ def sample_piecewise_requests(
     duration_s: float,
     seed: int = 0,
     weights: tuple[float, float, float] = (0.25, 0.5, 0.25),
+    class_mix: Optional[dict[str, float]] = None,
 ) -> list[Request]:
     """Poisson arrivals whose rate follows a piecewise-constant profile.
 
@@ -136,6 +247,7 @@ def sample_piecewise_requests(
         raise ValueError(f"bad mixture weights: {weights}")
     p = np.asarray(weights, dtype=float) / sum(weights)
     sizes = (dataset.p25, dataset.p50, dataset.p75)
+    cls_fn = _class_fn(dataset, class_mix, seed)
     rng = np.random.default_rng(seed)
     reqs: list[Request] = []
     i = 0
@@ -150,6 +262,6 @@ def sample_piecewise_requests(
             if t >= t1:
                 break
             pl, ol = sizes[rng.choice(3, p=p)]
-            reqs.append(Request(i, t, pl, ol))
+            reqs.append(Request(i, t, pl, ol, slo_class=cls_fn(rng)))
             i += 1
     return reqs

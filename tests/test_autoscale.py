@@ -148,6 +148,34 @@ def test_online_dispatcher_drops_estimate_cache_with_config():
     assert not disp._est_cache                # last user gone -> cache gone
 
 
+def test_online_dispatcher_routes_by_slo_class():
+    """Backlog is tracked per priority level: a tight arrival ignores
+    relaxed bulk (the priority scheduler serves ahead of it) and lands on
+    the replica with the least equal-or-better-class backlog, while a
+    relaxed arrival sees everything."""
+    disp = OnlineDispatcher()
+    disp.add(0, CATALOG[0])
+    disp.add(1, CATALOG[0])
+    # replica 0 takes one TIGHT request; replica 1 takes a pile of RELAXED
+    disp.pick(Request(0, 0.0, 160, 140, slo_class="tight"), [0])
+    for i in range(1, 4):
+        disp.pick(Request(i, 0.0, 160, 140, slo_class="relaxed"), [1])
+    assert disp.busy_until[1] > disp.busy_until[0]
+    # class-blind earliest-finish would route the next tight to replica 0
+    # (it has less TOTAL backlog); the class-aware pick sends it to
+    # replica 1, whose TIGHT-level backlog is empty - the relaxed pile
+    # there does not delay a tight arrival under priority scheduling
+    assert disp.pick(Request(9, 0.0, 160, 140, slo_class="tight")) == 1
+    # a relaxed arrival counts all classes and avoids the loaded replica
+    assert disp.pick(Request(10, 0.0, 160, 140, slo_class="relaxed")) == 0
+    # tight service EXTENDS the relaxed-level estimate (priority
+    # scheduling inserts it ahead of the relaxed backlog), it does not
+    # just max into it
+    before = disp._busy_class[1][2]
+    disp.pick(Request(11, 0.0, 160, 140, slo_class="tight"), [1])
+    assert disp._busy_class[1][2] > before
+
+
 def test_estimate_service_s_dpd_includes_link_transfer():
     """dpd service estimates must include the KV-cache link transfer -
     otherwise least-loaded routing under-weights dpd replicas."""

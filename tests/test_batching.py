@@ -7,12 +7,21 @@ policy-equivalence checks:
     exactly `output_len` emissions, nothing lost to chunking/preemption;
   - the KV block budget is never exceeded at any step (the `BlockLedger`
     high-water mark stays within the pool);
+  - SLO-class invariants (the priority layer): class-ordered preemption
+    (with aging promotion disabled, a sequence is never evicted while a
+    worse-class sequence holds blocks), no starvation under aging (a
+    relaxed request behind an endless tight stream still schedules), and
+    admission progress against a full decode pool (preemption, not
+    deadlock, when a better class waits; decode drain when classes tie);
+  - shortest-remaining-first decode-slot composition under slot pressure;
+  - `BatchPolicy.from_dataset` adapts chunk/budget to prompt percentiles
+    (longbench stops re-reading weights once per 256-token chunk);
   - with `chunk_tokens=inf, max_batch=1` the continuous policy degenerates
     to the serialized schedule bit-exactly (the hybrid step cost's exact
     degeneracies to prefill_cost/decode_cost);
   - windowed `advance_to` == one-shot drain under the continuous policy
-    for every serving kind - the property the autoscaler's window loop
-    rests on, previously pinned only for the serialized policy.
+    for every serving kind and for mixed-class (priority) workloads - the
+    property the autoscaler's window loop rests on.
 """
 import math
 
@@ -28,7 +37,12 @@ from repro.serving.batching import (
     SchedSeq,
 )
 from repro.serving.simulator import ReplicaSim, ServingMode, simulate
-from repro.serving.workload import DATASETS, Request, sample_mixture_requests
+from repro.serving.workload import (
+    DATASETS,
+    DEFAULT_CLASS_MIX,
+    Request,
+    sample_mixture_requests,
+)
 
 try:                                # hypothesis fuzz is CI-optional; the
     from hypothesis import given, settings, strategies as st
@@ -39,13 +53,15 @@ except ImportError:                 # deterministic invariants always run
 DS = DATASETS["sharegpt"]
 T7 = get_config("llama-7b")
 D1 = get_config("llama-1b")
+NO_AGING = 10**9                    # aging never promotes within a test run
 
 
 # --------------------------------------------------------------- scheduler
 def _drive(sched: ContinuousScheduler, seqs, rng: np.random.Generator,
-           k: int):
+           k: int, check_class_order: bool = False):
     """Run the scheduler to completion with random per-round emissions,
-    checking the block budget at every step."""
+    checking the block budget (and optionally the class-ordered
+    preemption invariant) at every step."""
     for s in seqs:
         sched.submit(s)
     ledger = sched.ledger
@@ -56,6 +72,15 @@ def _drive(sched: ContinuousScheduler, seqs, rng: np.random.Generator,
         assert plan is not None, "has_work but nothing schedulable"
         assert plan.chunks or plan.decodes
         assert ledger.used_blocks <= ledger.num_blocks
+        if check_class_order and plan.preempted:
+            # with aging promotion out of play, a sequence must never be
+            # evicted while a WORSE-class sequence still holds blocks
+            best_victim = min(v.priority for v in plan.preempted)
+            holders = sched.prefilling + sched.running
+            assert not any(h.priority > best_victim for h in holders), (
+                f"victim of class {best_victim} evicted while worse-class "
+                f"holders remain: "
+                f"{[(h.sid, h.priority) for h in holders]}")
         for ch in plan.chunks:
             if sched.complete_chunk(ch.seq, ch.tokens) and ch.seq.emitted == 0:
                 sched.note_first_token(ch.seq)
@@ -68,20 +93,26 @@ def _drive(sched: ContinuousScheduler, seqs, rng: np.random.Generator,
     assert ledger.peak_used <= ledger.num_blocks
 
 
-def _random_case(n, sizes, spec_kind, k, chunk, budget, bs, slack, mb, seed):
+def _random_case(n, sizes, spec_kind, k, chunk, budget, bs, slack, mb, seed,
+                 priorities=None, age_steps=512):
     """One randomized scheduler run: drive to completion, assert the
-    token-conservation and block-budget invariants."""
+    token-conservation and block-budget invariants (plus class-ordered
+    preemption when priorities are mixed and aging is disabled)."""
     # the pool must fit at least one max-length sequence + one round's
     # worst-case growth, or OutOfBlocks is the contractual outcome
     worst = max(pl + ol for pl, ol in sizes) + k + 1
     floor = -(-worst // bs)
     pol = BatchPolicy(chunk_tokens=chunk, token_budget=budget,
-                      block_size=bs, num_blocks=floor + slack)
+                      block_size=bs, num_blocks=floor + slack,
+                      age_steps=age_steps)
     sched = ContinuousScheduler(
         pol, max_batch=mb, ledger=BlockLedger(pol.num_blocks, bs),
         decode_tokens=k + 1 if spec_kind else 1, mix_decode=not spec_kind)
-    seqs = [SchedSeq(i, pl, ol) for i, (pl, ol) in enumerate(sizes)]
-    _drive(sched, seqs, np.random.default_rng(seed), k)
+    prios = priorities if priorities is not None else [1] * n
+    seqs = [SchedSeq(i, pl, ol, priority=prios[i])
+            for i, (pl, ol) in enumerate(sizes)]
+    _drive(sched, seqs, np.random.default_rng(seed), k,
+           check_class_order=priorities is not None and age_steps >= NO_AGING)
     # token conservation: all sequences finished with exact output counts
     assert len(sched.finished) == n
     assert sorted(s.sid for s in sched.finished) == list(range(n))
@@ -108,6 +139,28 @@ def test_scheduler_conserves_tokens_and_block_budget_seeded():
                      mb=int(rng.integers(1, 9)), seed=seed)
 
 
+def test_scheduler_mixed_class_invariants_seeded():
+    """Mixed-class sweep: conservation + block budget + class-ordered
+    preemption hold with priorities in play. Aging is swept too (the
+    class-order check only applies where promotion cannot fire)."""
+    for seed in range(25):
+        rng = np.random.default_rng(seed + 10_000)
+        n = int(rng.integers(2, 13))
+        sizes = [(int(rng.integers(1, 301)), int(rng.integers(1, 41)))
+                 for _ in range(n)]
+        prios = [int(rng.integers(0, 3)) for _ in range(n)]
+        spec_kind = bool(rng.integers(0, 2))
+        k = int(rng.integers(1, 5)) if spec_kind else 0
+        _random_case(n, sizes, spec_kind, k,
+                     chunk=int(rng.integers(8, 257)),
+                     budget=int(rng.integers(64, 513)),
+                     bs=int(rng.choice([1, 8, 16])),
+                     slack=int(rng.integers(0, 41)),
+                     mb=int(rng.integers(1, 9)), seed=seed,
+                     priorities=prios,
+                     age_steps=int(rng.choice([1, 4, 512, NO_AGING])))
+
+
 if HAVE_HYPOTHESIS:
     @settings(max_examples=40, deadline=None)
     @given(data=st.data())
@@ -118,6 +171,9 @@ if HAVE_HYPOTHESIS:
                  for i in range(n)]
         spec_kind = data.draw(st.booleans(), label="spec_kind")
         k = data.draw(st.integers(1, 4), label="k") if spec_kind else 0
+        mixed = data.draw(st.booleans(), label="mixed_class")
+        prios = [data.draw(st.integers(0, 2), label=f"prio{i}")
+                 for i in range(n)] if mixed else None
         _random_case(
             n, sizes, spec_kind, k,
             chunk=data.draw(st.integers(8, 256), label="chunk"),
@@ -125,7 +181,10 @@ if HAVE_HYPOTHESIS:
             bs=data.draw(st.sampled_from([1, 8, 16]), label="bs"),
             slack=data.draw(st.integers(0, 40), label="slack"),
             mb=data.draw(st.integers(1, 8), label="mb"),
-            seed=data.draw(st.integers(0, 2**31 - 1), label="seed"))
+            seed=data.draw(st.integers(0, 2**31 - 1), label="seed"),
+            priorities=prios,
+            age_steps=data.draw(st.sampled_from([1, 8, 512, NO_AGING]),
+                                label="age_steps") if mixed else 512)
 
 
 def test_scheduler_raises_when_pool_cannot_fit_one_sequence():
@@ -159,6 +218,209 @@ def test_block_ledger_mirrors_paged_pool_arithmetic():
         led.allocate(1, 16 * 8)
     led.free(0)
     assert led.used_blocks == 0 and led.peak_used == 3
+
+
+# ------------------------------------------------ SLO-class scheduling
+def _step_once(sched: ContinuousScheduler, emit: int = 1):
+    """One plan executed with fixed emissions; returns the plan."""
+    plan = sched.next_plan()
+    if plan is None:
+        return None
+    for ch in plan.chunks:
+        if sched.complete_chunk(ch.seq, ch.tokens) and ch.seq.emitted == 0:
+            sched.note_first_token(ch.seq)
+    for s in plan.decodes:
+        sched.note_decode(s, min(emit, s.remaining))
+    return plan
+
+
+def _relaxed_first_chunk_step(age_steps: int, horizon: int = 400):
+    """Steps until a relaxed request schedules its first prefill chunk
+    against a standing queue of tight arrivals (None = starved)."""
+    pol = BatchPolicy(chunk_tokens=64, token_budget=64, num_blocks=64,
+                      block_size=16, age_steps=age_steps)
+    sched = ContinuousScheduler(pol, max_batch=2, ledger=BlockLedger(64, 16))
+    sched.submit(SchedSeq(0, 64, 8, priority=2))
+    nxt = 1
+    for step in range(horizon):
+        while sum(1 for s in sched.waiting if s.priority == 0) < 2:
+            sched.submit(SchedSeq(nxt, 64, 8, priority=0))
+            nxt += 1
+        plan = _step_once(sched)
+        if any(c.seq.sid == 0 for c in plan.chunks):
+            return step
+    return None
+
+
+def test_no_starvation_under_aging():
+    """A relaxed request behind an endless tight stream must still
+    schedule: aging promotes its queue position one level per `age_steps`
+    waited. With promotion disabled the same workload starves it - the
+    pre-aging behavior the knob exists to fix."""
+    aged = _relaxed_first_chunk_step(age_steps=16)
+    assert aged is not None and aged < 100
+    assert _relaxed_first_chunk_step(age_steps=NO_AGING) is None
+
+
+def test_admission_preempts_relaxed_pool_for_tight_arrival():
+    """satellite regression (growth-reserve/admission interplay): a full
+    relaxed decode pool must not gate a tight prefill behind whole
+    relaxed generations - class-ordered preemption frees the blocks, and
+    the victims are ALL of relaxed class."""
+    pol = BatchPolicy(num_blocks=8, block_size=16)
+    sched = ContinuousScheduler(pol, max_batch=8, ledger=BlockLedger(8, 16))
+    for i in range(2):                       # 2 relaxed, 200-token outputs
+        sched.submit(SchedSeq(i, 32, 200, priority=2))
+    for _ in range(3):
+        _step_once(sched)
+    assert len(sched.running) == 2 and sched.ledger.free_blocks == 2
+    sched.submit(SchedSeq(10, 96, 10, priority=0))   # needs 6 of 8 blocks
+    plan = _step_once(sched)
+    assert any(c.seq.sid == 10 for c in plan.chunks), \
+        "tight prefill must admit immediately by preempting relaxed holders"
+    assert plan.preempted and all(v.priority == 2 for v in plan.preempted)
+
+
+def test_admission_preemption_is_futility_guarded():
+    """A tight head whose chunk cannot fit even after reclaiming ALL
+    worse-class blocks must not trigger evictions: the relaxed KV would
+    be recomputed for zero admission progress."""
+    pol = BatchPolicy(num_blocks=8, block_size=16)
+    sched = ContinuousScheduler(pol, max_batch=8, ledger=BlockLedger(8, 16))
+    sched.submit(SchedSeq(0, 64, 200, priority=0))   # tight holds 4 blocks
+    sched.submit(SchedSeq(1, 32, 200, priority=2))   # relaxed holds 2
+    for _ in range(2):
+        _step_once(sched)
+    assert len(sched.running) == 2
+    # head needs 7 blocks; free + relaxed-reclaimable < 7 -> futile
+    sched.submit(SchedSeq(10, 112, 10, priority=0))
+    for _ in range(5):
+        plan = _step_once(sched)
+        assert not plan.preempted, "futile eviction of relaxed KV"
+        assert {s.sid for s in plan.decodes} == {0, 1}
+
+
+def test_full_decode_pool_same_class_cannot_deadlock_admission():
+    """Equal classes get no preemption power - but a full decode pool
+    still must not deadlock admission: decodes keep running, finish, and
+    the waiting prefill admits off the freed blocks."""
+    pol = BatchPolicy(num_blocks=8, block_size=16)
+    sched = ContinuousScheduler(pol, max_batch=8, ledger=BlockLedger(8, 16))
+    for i in range(2):
+        sched.submit(SchedSeq(i, 32, 20, priority=1))
+    for _ in range(3):
+        _step_once(sched)
+    assert sched.ledger.free_blocks == 2
+    sched.submit(SchedSeq(10, 96, 5, priority=1))    # needs 6 > 2 free
+    admitted_at = None
+    for step in range(200):
+        if not sched.has_work:
+            break
+        plan = _step_once(sched)
+        assert plan.chunks or plan.decodes           # progress every step
+        assert not plan.preempted                    # equal class: no power
+        if admitted_at is None and any(c.seq.sid == 10 for c in plan.chunks):
+            admitted_at = step
+    assert admitted_at is not None
+    assert sorted(s.sid for s in sched.finished) == [0, 1, 10]
+    for s in sched.finished:
+        assert s.emitted == s.output_len
+
+
+def test_tight_seq_never_evicted_while_relaxed_holds_blocks():
+    """Growth pressure picks victims class-ordered: with tight and
+    relaxed decodes sharing a too-small pool, every eviction hits the
+    relaxed class while any relaxed sequence still holds blocks."""
+    pol = BatchPolicy(num_blocks=12, block_size=16, age_steps=NO_AGING)
+    sched = ContinuousScheduler(pol, max_batch=8,
+                                ledger=BlockLedger(12, 16))
+    prios = [0, 2, 0, 2, 2]
+    for i, p in enumerate(prios):
+        sched.submit(SchedSeq(i, 30, 120, priority=p))
+    evictions = []
+    for _ in range(3000):
+        if not sched.has_work:
+            break
+        plan = _step_once(sched)
+        for v in plan.preempted:
+            holders = sched.prefilling + sched.running
+            evictions.append(v.priority)
+            assert not any(h.priority > v.priority for h in holders)
+    assert not sched.has_work
+    assert evictions, "pool was sized to force evictions"
+    # the relaxed class absorbs the bulk of the pressure; a tight victim
+    # is legal only once no relaxed holder remains (the in-loop assert)
+    assert evictions.count(2) > evictions.count(0)
+
+
+def test_decode_slots_srf_within_class_under_slot_pressure():
+    """Spec-kind decode slots cost k+1 tokens each; with more running
+    sequences than slots, the slots go to the highest class first and
+    shortest-remaining-first within a class, and the plan keeps
+    admission order (stable executor iteration)."""
+    pol = BatchPolicy(chunk_tokens=8, token_budget=8, num_blocks=1000,
+                      block_size=16)
+    sched = ContinuousScheduler(pol, max_batch=8,
+                                ledger=BlockLedger(1000, 16),
+                                decode_tokens=4, mix_decode=False)  # k=3
+    outs = [9, 3, 7, 30, 5]
+    prios = [1, 1, 1, 0, 2]
+    for i, ol in enumerate(outs):
+        sched.submit(SchedSeq(i, 2, ol, priority=prios[i]))
+    while len(sched.running) < 5:
+        _step_once(sched, emit=2)
+    slots = pol.token_budget // sched.decode_tokens
+    assert slots == 2
+    while sched.has_work:
+        running = list(sched.running)
+        plan = _step_once(sched, emit=2)
+        if not plan.decodes:
+            continue
+        if len(running) > slots:
+            want = sorted(running,
+                          key=lambda s: (s.priority, s.remaining, s.order))
+            assert {s.sid for s in plan.decodes} == \
+                {s.sid for s in want[:slots]}
+        # plan order must follow the running-list (stable executor
+        # iteration), whatever SRF selected
+        pos = {id(s): i for i, s in enumerate(running)}
+        assert [pos[id(s)] for s in plan.decodes] == \
+            sorted(pos[id(s)] for s in plan.decodes)
+
+
+def test_batch_policy_from_dataset_scales_with_prompt_percentiles():
+    """Workload-adaptive knobs: the median prompt fits one chunk, the
+    budget covers a P75 chunk plus decode slots; chatbot-sized datasets
+    stay at the hand-tuned defaults."""
+    share = BatchPolicy.from_dataset(DATASETS["sharegpt"])
+    code = BatchPolicy.from_dataset(DATASETS["humaneval"])
+    long_ = BatchPolicy.from_dataset(DATASETS["longbench"])
+    for pol, ds in ((share, DATASETS["sharegpt"]),
+                    (code, DATASETS["humaneval"]),
+                    (long_, DATASETS["longbench"])):
+        assert pol.chunk_tokens >= min(ds.p50[0], 256)
+        assert pol.chunk_tokens >= ds.p50[0] or pol.chunk_tokens == 256
+        assert pol.token_budget > pol.chunk_tokens
+    assert share.chunk_tokens == 256 and code.chunk_tokens == 256
+    assert long_.chunk_tokens >= DATASETS["longbench"].p50[0]
+    assert long_.chunk_tokens > share.chunk_tokens
+
+
+def test_batch_policy_from_dataset_improves_longbench_ttft_and_energy():
+    """The point of the knob: on long-prompt traffic the adapted policy
+    stops re-reading weights once per 256-token chunk - better mean TTFT
+    at no extra energy than the chatbot-tuned default."""
+    ds = DATASETS["longbench"]
+    reqs = sample_mixture_requests(ds, 1.5, 40.0, seed=2)
+    mode = ServingMode("s", "standalone", "a100")
+    runs = {}
+    for tag, pol in (("default", BatchPolicy()),
+                     ("adaptive", BatchPolicy.from_dataset(ds))):
+        res = simulate(mode, T7, reqs, seed=7, batching=pol)
+        runs[tag] = (res.mean_ttft(),
+                     sum(u.energy_j for u in res.use.values()))
+    assert runs["adaptive"][0] < runs["default"][0]
+    assert runs["adaptive"][1] <= runs["default"][1]
 
 
 # ---------------------------------------------------- simulator invariants
@@ -207,6 +469,8 @@ def test_continuous_degenerates_to_serialized_at_whole_prompt_batch_one(
 
 
 # ------------------------------------------------- windowed == drain
+@pytest.mark.parametrize("class_mix", [None, DEFAULT_CLASS_MIX],
+                         ids=["single-class", "mixed-class"])
 @pytest.mark.parametrize("kind,mode,needs_draft", [
     ("standalone", ServingMode("standalone", "standalone", "a100"), False),
     ("spec", ServingMode("spec", "spec", "a100", spec_k=4, acceptance=0.7),
@@ -215,11 +479,16 @@ def test_continuous_degenerates_to_serialized_at_whole_prompt_batch_one(
      True),
     ("dpd", ServingMode("dpd", "dpd", "a100", "v100"), False),
 ])
-def test_windowed_advance_equals_drain_continuous(kind, mode, needs_draft):
+def test_windowed_advance_equals_drain_continuous(kind, mode, needs_draft,
+                                                  class_mix):
     """The autoscaler drives continuous replicas window-by-window; the
     incremental schedule must equal the one-shot drain bit-exactly, like
-    the serialized policy's pin in test_autoscale.py."""
-    reqs = sample_mixture_requests(DS, 4.0, 20.0, seed=11)
+    the serialized policy's pin in test_autoscale.py - including on the
+    priority path (mixed SLO classes)."""
+    reqs = sample_mixture_requests(DS, 4.0, 20.0, seed=11,
+                                   class_mix=class_mix)
+    if class_mix is not None:
+        assert len({r.slo_class for r in reqs}) == 3
     draft = D1 if needs_draft else None
     ref = simulate(mode, T7, reqs, draft_cfg=draft, seed=7, start_s=2.0,
                    batching="continuous")
@@ -263,3 +532,32 @@ def test_preemption_recomputes_and_still_finishes():
     assert sched.ledger.peak_used <= pol.num_blocks
     assert any(s.preemptions > 0 for s in sched.finished), \
         "pool was sized to force at least one preemption"
+
+
+def test_priority_scheduling_protects_tight_ttft_under_overload():
+    """The PR's behavioral headline at replica level: on an overloaded
+    mixed-class stream the priority scheduler buys the tight class its
+    TTFT back from the relaxed class - vs the same stream served
+    class-blind, tight mean TTFT improves by >2x and relaxed degrades
+    (the slack being spent is exactly the relaxed class's)."""
+    reqs = sample_mixture_requests(DS, 16.0, 30.0, seed=3,
+                                   class_mix=DEFAULT_CLASS_MIX)
+    mode = ServingMode("s", "standalone", "a100")
+    res = simulate(mode, T7, reqs, seed=7, batching="continuous")
+    blind = [Request(r.req_id, r.arrival_s, r.prompt_len, r.output_len)
+             for r in reqs]                       # same stream, one class
+    res0 = simulate(mode, T7, blind, seed=7, batching="continuous")
+
+    def mean_ttft(r, ids):
+        v = [t.ttft_s for t in r.traces if t.req.req_id in ids]
+        return float(np.mean(v))
+
+    by_class = {c: {r.req_id for r in reqs if r.slo_class == c}
+                for c in ("tight", "relaxed")}
+    tight_gain = mean_ttft(res0, by_class["tight"]) \
+        / mean_ttft(res, by_class["tight"])
+    assert tight_gain > 2.0
+    assert mean_ttft(res, by_class["relaxed"]) > \
+        mean_ttft(res0, by_class["relaxed"])
+    # conservation still holds with priorities in play
+    assert res.total_tokens == sum(r.output_len for r in reqs)

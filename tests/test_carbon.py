@@ -1,4 +1,4 @@
-"""Carbon accounting (Eq. 1-3) and chip DB."""
+"""Carbon accounting (Eq. 1-3), chip DB, and CarbonTrace CSV edge cases."""
 import math
 
 import pytest
@@ -7,6 +7,7 @@ from repro.core.carbon import (
     CHIP_DB,
     GRID_CI,
     CarbonBreakdown,
+    CarbonTrace,
     J_PER_KWH,
     SECONDS_PER_YEAR,
     embodied_carbon_g,
@@ -84,3 +85,58 @@ def test_negative_inputs_rejected():
         operational_carbon_g(-1.0)
     with pytest.raises(ValueError):
         embodied_carbon_g(-1.0, CHIP_DB["t4"])
+
+
+# ------------------------------------------------- CarbonTrace CSV edges
+def test_from_csv_sorts_unsorted_timestamps(tmp_path):
+    """Real grid exports are often tail-appended: row order must not
+    matter. An unsorted file loads as the sorted trace."""
+    p = tmp_path / "t.csv"
+    p.write_text("t_seconds,ci\n7200,300\n0,100\n3600,200\n")
+    tr = CarbonTrace.from_csv(str(p))
+    assert tr.times_s == (0.0, 3600.0, 7200.0)
+    assert tr.ci == (100.0, 200.0, 300.0)
+    assert tr.ci_at(3600.0) == 200.0
+
+
+def test_from_csv_duplicate_boundaries_keep_last(tmp_path):
+    """A corrected re-publish of a window boundary (same timestamp twice)
+    collapses to the LAST occurrence instead of raising on the
+    strictly-increasing-times validation."""
+    p = tmp_path / "t.csv"
+    p.write_text("0,100\n3600,250\n3600,200\n")
+    tr = CarbonTrace.from_csv(str(p))
+    assert tr.times_s == (0.0, 3600.0)
+    assert tr.ci == (100.0, 200.0)
+
+
+def test_from_csv_single_row_is_flat_trace(tmp_path):
+    p = tmp_path / "t.csv"
+    p.write_text("# a single sample\n0,261\n")
+    tr = CarbonTrace.from_csv(str(p))
+    assert tr.times_s == (0.0,) and tr.ci == (261.0,)
+    assert tr.ci_at(1e9) == 261.0
+    assert tr.mean_ci(0.0, 86400.0) == 261.0
+
+
+def test_from_csv_empty_file_raises(tmp_path):
+    p = tmp_path / "t.csv"
+    p.write_text("# only comments\nt_seconds,ci\n")
+    with pytest.raises(ValueError):
+        CarbonTrace.from_csv(str(p))
+
+
+def test_trace_scaled_roundtrip():
+    """scaled(k) then scaled(1/k) reproduces the original trace (values
+    exactly, times to fp round-off), and mean_ci is invariant under the
+    matching window rescale."""
+    tr = CarbonTrace((0.0, 3600.0, 7200.0, 10800.0),
+                     (100.0, 220.0, 310.0, 150.0))
+    k = 600.0 / 86400.0
+    rt = tr.scaled(k).scaled(1.0 / k)
+    assert rt.ci == tr.ci
+    assert rt.times_s == pytest.approx(tr.times_s, rel=1e-12)
+    assert tr.scaled(k).mean_ci(0.0 * k, 9000.0 * k) == \
+        pytest.approx(tr.mean_ci(0.0, 9000.0), rel=1e-12)
+    with pytest.raises(ValueError):
+        tr.scaled(0.0)

@@ -36,18 +36,22 @@ def tiny():
     return cfg, params
 
 
-def _run_pair(cfg, params, kind, old_chip, gap_s, batching="serialized"):
+def _run_pair(cfg, params, kind, old_chip, gap_s, batching="serialized",
+              classes=None):
     draft = dict(draft_cfg=cfg, draft_params=params) \
         if kind in ("spec", "dsd") else {}
+    cls = classes or ["standard"] * N
     eng = ServingEngine(cfg, params, kind=kind, old_chip=old_chip,
                         temperature=0.0, seed=1, max_batch=MAX_BATCH,
                         pool_blocks=POOL_BLOCKS, batching=batching, **draft)
     for i in range(N):
         eng.submit((np.arange(PL) + i) % cfg.vocab_size,
-                   max_new_tokens=OUT, arrival_s=i * gap_s)
+                   max_new_tokens=OUT, arrival_s=i * gap_s,
+                   slo_class=cls[i])
     eng.run_until_idle()
 
-    reqs = [Request(i, i * gap_s, PL, OUT) for i in range(N)]
+    reqs = [Request(i, i * gap_s, PL, OUT, slo_class=cls[i])
+            for i in range(N)]
     mode = ServingMode(kind, kind, "a100", old_chip,
                        spec_k=SPEC_K, acceptance=1.0, max_batch=MAX_BATCH)
     # the simulator's continuous ledger must model the engine's REAL pool
@@ -90,6 +94,41 @@ def test_engine_and_simulator_agree_on_clock_and_energy(tiny, kind,
             res.use[name].busy_s, rel=0.05), f"{kind}/{name} busy"
     if kind in ("dsd", "dpd"):
         assert eng.link_bytes == pytest.approx(res.link_bytes, rel=1e-9)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind,old_chip,gap_s", [
+    ("standalone", None, 0.0),
+    ("spec", None, 0.0),
+    ("dsd", "t4", 0.0),
+    ("dpd", "t4", 1.0),
+])
+def test_engine_and_simulator_agree_on_mixed_class_workload(tiny, kind,
+                                                            old_chip, gap_s):
+    """Differential pin of the PRIORITY path: with one request per SLO
+    class, both executors must drive the identical class-aware schedule
+    (admission order, SRF slots, preemption) off the shared scheduler -
+    clock and per-chip energy agree like the single-class rows above."""
+    cfg, params = tiny
+    classes = ["relaxed", "tight", "standard"][:N]
+    eng, res = _run_pair(cfg, params, kind, old_chip, gap_s,
+                         batching="continuous", classes=classes)
+    assert len(eng.finished) == N
+    assert all(len(r.out_tokens) == OUT for r in eng.finished)
+    assert eng.clock == pytest.approx(res.duration_s, rel=0.02), \
+        f"{kind}: modeled clock diverged on the priority path"
+    for name in res.use:
+        assert eng.use[name].energy_j == pytest.approx(
+            res.use[name].energy_j, rel=0.05), f"{kind}/{name} energy"
+        assert eng.use[name].busy_s == pytest.approx(
+            res.use[name].busy_s, rel=0.05), f"{kind}/{name} busy"
+    if kind in ("dsd", "dpd"):
+        assert eng.link_bytes == pytest.approx(res.link_bytes, rel=1e-9)
+    # per-request parity: the class-aware schedule finished the same
+    # requests with the same token counts on both executors
+    for r in eng.finished:
+        tr = next(t for t in res.traces if t.req.req_id == r.req_id)
+        assert len(r.out_tokens) == tr.tokens_out
 
 
 @pytest.mark.slow

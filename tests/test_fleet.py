@@ -280,6 +280,34 @@ def test_build_gpu_info_slo_gates_old_modes():
     assert set(alloc.counts) <= {"standalone", "spec-llama-300m"}
 
 
+def test_build_gpu_info_gates_per_bucket_qps_on_class_slo():
+    """`slo_class` swaps the dataset's single SLO pair for the class's
+    scaled targets: tight gates old-chip modes out of many buckets that
+    relaxed opens up (the per-class carbon headroom the class-split
+    allocation exploits), "standard" is bit-identical to the default
+    profiles, and relaxed feasibility is a superset of tight."""
+    buckets = SizeBuckets.from_dataset(DS)
+    cat = [c for c in CATALOG if c.name in ("standalone", "dpd-t4")]
+    by_class = {cls: build_gpu_info(cat, DS, buckets, slo_class=cls)
+                for cls in ("tight", "relaxed")}
+    default = build_gpu_info(cat, DS, buckets)
+    standard = build_gpu_info(cat, DS, buckets, slo_class="standard")
+    assert standard["dpd-t4"].tputs == default["dpd-t4"].tputs
+    assert standard["standalone"].tputs == default["standalone"].tputs
+
+    def zero_buckets(info, name):
+        return {(i, j) for i, row in enumerate(info[name].tputs)
+                for j, t in enumerate(row) if t == 0}
+
+    tz = zero_buckets(by_class["tight"], "dpd-t4")
+    rz = zero_buckets(by_class["relaxed"], "dpd-t4")
+    assert rz < tz, "relaxed must open buckets tight gates to zero"
+    # where both are feasible, the looser class sustains >= QPS
+    for i, row in enumerate(by_class["tight"]["dpd-t4"].tputs):
+        for j, t in enumerate(row):
+            assert by_class["relaxed"]["dpd-t4"].tputs[i][j] >= t
+
+
 def test_allocator_end_to_end_mixed_fleet_beats_all_new():
     """The headline: on a percentile-mixture ShareGPT stream the solver
     provisions old+new DSD instances, and replaying its fleet through the

@@ -234,6 +234,63 @@ def test_sample_mixture_requests_sizes_and_weights():
         sample_mixture_requests(ds, 1.0, 1.0, weights=(1.0, -1.0, 0.0))
 
 
+def test_sample_class_mix_assigns_slo_classes():
+    """`class_mix` samples each request's SLO class at the mix weights;
+    None leaves every request on the dataset's default class AND the
+    arrival/size rng stream untouched (legacy streams stay bit-exact)."""
+    import numpy as np
+
+    from repro.serving.workload import (
+        DEFAULT_CLASS_MIX,
+        sample_mixture_requests,
+        slo_targets,
+    )
+
+    ds = DATASETS["sharegpt"]
+    plain = sample_mixture_requests(ds, qps=50.0, duration_s=30.0, seed=4)
+    mixed = sample_mixture_requests(ds, qps=50.0, duration_s=30.0, seed=4,
+                                    class_mix=DEFAULT_CLASS_MIX)
+    assert all(r.slo_class == "standard" for r in plain)
+    # class sampling must not perturb arrivals or sizes
+    assert [(r.arrival_s, r.prompt_len, r.output_len) for r in mixed] == \
+        [(r.arrival_s, r.prompt_len, r.output_len) for r in plain]
+    frac = {c: np.mean([r.slo_class == c for r in mixed])
+            for c in DEFAULT_CLASS_MIX}
+    for c, w in DEFAULT_CLASS_MIX.items():
+        assert frac[c] == pytest.approx(w, abs=0.07)
+    # class targets scale the dataset's base SLOs; standard is identity
+    assert slo_targets(ds, "standard") == (ds.ttft_slo_s, ds.tpot_slo_s)
+    tt, tp = slo_targets(ds, "tight")
+    assert tt < ds.ttft_slo_s and tp < ds.tpot_slo_s
+    rt, rp = slo_targets(ds, "relaxed")
+    assert rt > ds.ttft_slo_s and rp > ds.tpot_slo_s
+    with pytest.raises(ValueError):
+        sample_mixture_requests(ds, 1.0, 1.0, class_mix={"bogus": 1.0})
+
+
+def test_per_class_slo_attainment_uses_class_targets():
+    """`slo_ok` judges each request against its own class's targets and
+    `slo_attainment(slo_class=...)` filters per class."""
+    from repro.serving.simulator import ReqTrace, SimResult
+    from repro.serving.workload import Request
+
+    ds = DATASETS["sharegpt"]
+    mode = ServingMode("s", "standalone", "a100")
+    mk = lambda i, cls, ttft: ReqTrace(  # noqa: E731
+        Request(i, 0.0, 10, 5, slo_class=cls), ttft_s=ttft, tokens_out=5,
+        first_token_s=ttft, last_token_s=ttft + 4 * 0.01, finish_s=1.0)
+    # 0.15s TTFT: inside standard (0.2) and relaxed (1.0), outside tight (0.1)
+    traces = [mk(0, "tight", 0.15), mk(1, "standard", 0.15),
+              mk(2, "relaxed", 0.15)]
+    res = SimResult(mode, traces, {}, 1.0)
+    assert res.slo_attainment(ds, slo_class="tight") == 0.0
+    assert res.slo_attainment(ds, slo_class="standard") == 1.0
+    assert res.slo_attainment(ds, slo_class="relaxed") == 1.0
+    assert res.slo_attainment(ds) == pytest.approx(2.0 / 3.0)
+    assert res.per_class_attainment(ds) == {
+        "tight": 0.0, "standard": 1.0, "relaxed": 1.0}
+
+
 def test_simulator_carbon_sweeps_without_resim():
     ds, reqs = _reqs(qps=1.0)
     t7 = get_config("llama-7b")
