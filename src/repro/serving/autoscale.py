@@ -242,6 +242,22 @@ def _window_bounds(trace: CarbonTrace, t_end: float,
     return bounds
 
 
+def drain_victims(disp: OnlineDispatcher, candidates: "list[_Replica]",
+                  count: int) -> "list[_Replica]":
+    """Pick `count` replicas to drain, emptiest first.
+
+    Emptiest compares the PER-CLASS backlog vector (tight level first),
+    not the scalar worst-level `busy_until`: two replicas can tie on
+    total backlog while only one holds the tight-class queue, and
+    draining that one would stall tight traffic behind the drain while
+    the other sits on relaxed bulk any survivor could absorb. Ties break
+    on replica id for determinism. Single-class fleets (every vector a
+    constant) reduce exactly to the old scalar ordering."""
+    victims = sorted(candidates,
+                     key=lambda r: (tuple(disp._busy_class[r.rid]), r.rid))
+    return victims[:count]
+
+
 # ---------------------------------------------------------------------------
 # The controller
 # ---------------------------------------------------------------------------
@@ -384,12 +400,11 @@ def simulate_autoscaled(
                 next_rid += 1
                 boots += 1
             if have > target:
-                # drain the emptiest replicas of this type first - they
-                # finish their backlog (and stop burning idle) soonest
-                victims = sorted(
-                    (r for r in active if r.cfg.name == name and r.active),
-                    key=lambda r: (disp.busy_until[r.rid], r.rid))
-                for r in victims[:have - target]:
+                victims = drain_victims(
+                    disp, [r for r in active
+                           if r.cfg.name == name and r.active],
+                    have - target)
+                for r in victims:
                     r.drain_mark_s = w0
                     disp.remove(r.rid)
                     drains += 1

@@ -67,6 +67,7 @@ from repro.models.config import ModelConfig
 
 # re-use the engine pool's error type so callers catch one exception
 from repro.serving.kv_cache import OutOfBlocks
+from repro.serving.prefix_cache import PrefixCache
 
 
 # ---------------------------------------------------------------------------
@@ -87,6 +88,17 @@ class BatchPolicy:
     age_steps     scheduler steps a waiting sequence spends per one-level
                   priority promotion (anti-starvation aging; only
                   relevant on mixed-class workloads)
+    prefix_cache  enable cross-request prefix KV caching: finished
+                  prompts' blocks are RETAINED in a radix cache and later
+                  prompts sharing a block-aligned prefix skip its prefill
+                  (serving/prefix_cache.py). Off by default - the PR-5
+                  schedule replays bit-exactly with it off, and also with
+                  it ON on a zero-share workload (retained blocks count
+                  as free for every admission decision).
+    retain_frac   ceiling on the retained population, as a fraction of
+                  `num_blocks`, reached when grid carbon intensity is at
+                  its greenest; the effective cap ramps down to 0 as the
+                  trace approaches `PrefixCache.ci_high`
     """
 
     kind: str = "continuous"
@@ -95,6 +107,8 @@ class BatchPolicy:
     block_size: int = 16
     num_blocks: Optional[int] = None
     age_steps: int = 512
+    prefix_cache: bool = False
+    retain_frac: float = 0.5
 
     def __post_init__(self):
         if self.kind not in ("serialized", "continuous"):
@@ -108,6 +122,9 @@ class BatchPolicy:
                 raise ValueError(f"block_size must be >= 1: {self.block_size}")
             if self.age_steps < 1:
                 raise ValueError(f"age_steps must be >= 1: {self.age_steps}")
+            if not 0.0 <= self.retain_frac <= 1.0:
+                raise ValueError(
+                    f"retain_frac must be in [0, 1]: {self.retain_frac}")
 
     @staticmethod
     def from_dataset(ds, block_size: int = 16,
@@ -183,6 +200,15 @@ def prompt_chunks(prompt_len: int,
                  for s in range(0, prompt_len, chunk_tokens))
 
 
+def _maybe_cache(policy: BatchPolicy, ledger: "BlockLedger",
+                 ci_trace) -> "Optional[PrefixCache]":
+    """The policy's prefix cache bound to `ledger`, or None when off."""
+    if not policy.prefix_cache:
+        return None
+    return PrefixCache(ledger, policy.block_size, policy.retain_frac,
+                       ci_trace=ci_trace)
+
+
 def build_single_pool_scheduler(
     policy: BatchPolicy,
     kind: str,
@@ -191,6 +217,7 @@ def build_single_pool_scheduler(
     target_cfg: ModelConfig,
     draft_cfg: Optional[ModelConfig],
     new_chip: ChipSpec,
+    ci_trace=None,
 ) -> "ContinuousScheduler":
     """The single-pool hybrid scheduler for standalone/spec/dsd engines.
 
@@ -219,10 +246,12 @@ def build_single_pool_scheduler(
     elif blocks is None:
         blocks = default_kv_blocks(target_cfg, new_chip, policy.block_size)
     spec_kind = kind in ("spec", "dsd")
+    ledger = BlockLedger(blocks, policy.block_size)
     return ContinuousScheduler(
-        policy, max_batch, BlockLedger(blocks, policy.block_size),
+        policy, max_batch, ledger,
         decode_tokens=spec_k + 1 if spec_kind else 1,
-        mix_decode=not spec_kind)
+        mix_decode=not spec_kind,
+        cache=_maybe_cache(policy, ledger, ci_trace))
 
 
 def build_dpd_prefill_scheduler(
@@ -230,6 +259,7 @@ def build_dpd_prefill_scheduler(
     max_batch: int,
     target_cfg: ModelConfig,
     new_chip: ChipSpec,
+    ci_trace=None,
 ) -> "ContinuousScheduler":
     """The dpd prefill-pool (pool A) scheduler, shared by both executors.
 
@@ -237,12 +267,20 @@ def build_dpd_prefill_scheduler(
     nothing there: batch whole prompts under the step token budget
     (chunks still split prompts longer than the budget). Its ledger is
     always derived from the *new* chip's HBM - `policy.num_blocks`
-    describes the decode pool (pool B), the binding KV resource in dpd."""
+    describes the decode pool (pool B), the binding KV resource in dpd.
+
+    The prefix cache (when enabled) lives HERE: prefill is what matched
+    blocks skip, so pool A retains finished prompts' KV; the decode pool
+    never caches (its blocks turn over with generation, not prompts).
+    The full prompt's KV still ships over the link regardless of match -
+    only the prefill compute is elided."""
     pol_a = dataclasses.replace(policy, chunk_tokens=policy.token_budget)
+    ledger = BlockLedger(
+        default_kv_blocks(target_cfg, new_chip, policy.block_size),
+        policy.block_size)
     return ContinuousScheduler(
-        pol_a, max_batch,
-        BlockLedger(default_kv_blocks(target_cfg, new_chip, policy.block_size),
-                    policy.block_size), 1)
+        pol_a, max_batch, ledger, 1,
+        cache=_maybe_cache(pol_a, ledger, ci_trace))
 
 
 def build_dpd_decode_ledger(
@@ -297,7 +335,25 @@ class BlockLedger:
     alloc/extend/free lifecycle, no K/V arrays - the simulator runs
     admission against this, the engine against the real pool, and the
     shared scheduler keeps the two in lockstep. `peak_used` records the
-    high-water mark for the block-budget property test."""
+    high-water mark for the block-budget property test.
+
+    With a `PrefixCache` bound (`bind_cache`), the pool splits into FOUR
+    populations whose sum is `num_blocks` at every step (the conservation
+    invariant of tests/test_prefix_property.py):
+
+      owned      (`used_blocks`)    blocks a live sequence allocated
+      shared     (`shared_blocks`)  distinct cached blocks some live
+                                    sequence holds a reference on
+      retained   (`retained_blocks`) cached blocks nobody references
+      physical-free (`physical_free`)
+
+    `free_blocks` counts retained blocks as FREE: they are always
+    reclaimable ahead of preempting an active sequence, so every
+    admission / growth-reserve / preemption decision is arithmetically
+    identical to a cache-less run - retention can never CAUSE a
+    preemption. The physical reclaim happens lazily inside
+    allocate/extend_to (`_ensure` -> `PrefixCache.reclaim`), invisible
+    to the scheduler."""
 
     def __init__(self, num_blocks: int, block_size: int):
         if num_blocks < 0 or block_size < 1:
@@ -305,16 +361,38 @@ class BlockLedger:
         self.num_blocks = num_blocks
         self.block_size = block_size
         self._held: dict[int, int] = {}          # sid -> blocks held
-        self._used = 0
+        self._used = 0                           # owned blocks only
         self.peak_used = 0
+        self._cache = None                       # bound PrefixCache
+        self._shared: dict[int, int] = {}        # sid -> shared prefix blocks
+        self._shared_used = 0                    # distinct active cached blocks
+        self._retained = 0                       # cached blocks, refs == 0
+
+    def bind_cache(self, cache) -> None:
+        if self._cache is not None:
+            raise ValueError("ledger already has a prefix cache bound")
+        self._cache = cache
 
     @property
     def used_blocks(self) -> int:
         return self._used
 
     @property
+    def shared_blocks(self) -> int:
+        return self._shared_used
+
+    @property
+    def retained_blocks(self) -> int:
+        return self._retained
+
+    @property
     def free_blocks(self) -> int:
-        return self.num_blocks - self._used
+        """Schedulable blocks: physical free + retained (reclaimable)."""
+        return self.num_blocks - self._used - self._shared_used
+
+    @property
+    def physical_free(self) -> int:
+        return self.num_blocks - self._used - self._shared_used - self._retained
 
     def blocks_needed(self, tokens: int) -> int:
         return -(-tokens // self.block_size)
@@ -325,13 +403,27 @@ class BlockLedger:
     def held(self, sid: int) -> int:
         return self._held.get(sid, 0)
 
+    def _ensure(self, need: int) -> None:
+        """Make `need` blocks PHYSICALLY free, shedding retained cache
+        blocks if the free list alone cannot cover it. Only reachable
+        with a cache bound - without one, retained is always 0 and the
+        `free_blocks` check above already guaranteed the space."""
+        gap = need - self.physical_free
+        if gap > 0:
+            self._cache.reclaim(gap)
+
     def allocate(self, sid: int, tokens: int) -> None:
+        """Allocate `tokens` of fresh KV for `sid`. A sequence admitted
+        through a prefix match (`note_shared` already called) allocates
+        only its UNMATCHED tokens here; `held()` reports shared + owned
+        so growth math downstream needs no special case."""
         if sid in self._held:
             raise ValueError(f"seq {sid} already allocated")
         need = self.blocks_needed(tokens)
         if need > self.free_blocks:
             raise OutOfBlocks(f"need {need} blocks, {self.free_blocks} free")
-        self._held[sid] = need
+        self._ensure(need)
+        self._held[sid] = self._shared.get(sid, 0) + need
         self._used += need
         self.peak_used = max(self.peak_used, self._used)
 
@@ -344,12 +436,45 @@ class BlockLedger:
         if need > self.free_blocks:
             raise OutOfBlocks(f"extend needs {need} blocks, "
                               f"{self.free_blocks} free")
+        self._ensure(need)
         self._held[sid] = have + need
         self._used += need
         self.peak_used = max(self.peak_used, self._used)
 
     def free(self, sid: int) -> None:
-        self._used -= self._held.pop(sid)
+        # shared blocks return to the cache (their refs drop separately
+        # via PrefixCache.release); blocks donated to the cache at
+        # publish were already moved out of `_used` by cache_retain_from
+        self._used -= self._held.pop(sid) - self._shared.pop(sid, 0)
+
+    # ---------------------------------------------- PrefixCache accounting
+    # Called only by the bound cache; each moves ONE block (or records a
+    # seq's shared count) between the four populations above.
+    def note_shared(self, sid: int, nblocks: int) -> None:
+        """Seq `sid`'s first `nblocks` blocks live in the cache."""
+        if sid in self._held or sid in self._shared:
+            raise ValueError(f"seq {sid} already tracked")
+        self._shared[sid] = nblocks
+
+    def cache_activate(self) -> None:
+        """A retained block gained its first reference."""
+        self._retained -= 1
+        self._shared_used += 1
+
+    def cache_deactivate(self) -> None:
+        """An active cached block lost its last reference."""
+        self._shared_used -= 1
+        self._retained += 1
+
+    def cache_retain_from(self, sid: int) -> None:
+        """Publish: one of `sid`'s owned blocks becomes cache-retained."""
+        self._held[sid] -= 1
+        self._used -= 1
+        self._retained += 1
+
+    def cache_evict(self) -> None:
+        """A retained block was evicted - physically free again."""
+        self._retained -= 1
 
 
 # ---------------------------------------------------------------------------
@@ -381,6 +506,9 @@ class SchedSeq:
     # keeps its seniority)
     order: int = 0
     enqueue_step: int = 0
+    # chained content keys of the prompt's full KV blocks (empty when the
+    # executor runs without a prefix cache) - serving/prefix_cache.py
+    prefix_keys: tuple = ()
 
     def __post_init__(self):
         if self.prefill_target < 0:
@@ -436,7 +564,8 @@ class ContinuousScheduler:
 
     def __init__(self, policy: BatchPolicy, max_batch: int,
                  ledger: BlockLedger, decode_tokens: int = 1,
-                 mix_decode: bool = True):
+                 mix_decode: bool = True,
+                 cache: "Optional[PrefixCache]" = None):
         if policy.kind != "continuous":
             raise ValueError("ContinuousScheduler needs a continuous policy")
         if max_batch < 1:
@@ -444,6 +573,10 @@ class ContinuousScheduler:
         self.policy = policy
         self.max_batch = max_batch
         self.ledger = ledger
+        # cross-request prefix cache (None = off). All cache decisions -
+        # match, acquire, publish, release - happen HERE, never in
+        # executor code, so both executors replay identical reuse.
+        self.cache = cache
         # mix_decode=True (standalone/dpd): every step is a true hybrid
         # forward - decode tokens + prefill chunks share one weight read.
         # mix_decode=False (spec/dsd): a "decode slot" is a whole
@@ -499,6 +632,8 @@ class ContinuousScheduler:
             for s in decodes)
 
     def _preempt(self, seq: SchedSeq) -> None:
+        if self.cache is not None:
+            self.cache.release(seq.sid)      # drop shared-prefix refs
         self.ledger.free(seq.sid)
         if seq in self.running:
             self.running.remove(seq)
@@ -618,15 +753,33 @@ class ContinuousScheduler:
             seq = self.waiting[0]
             if seq.sid in skip:
                 break                              # this-step victim blocks
-            take = min(self.policy.chunk_tokens, seq.prefill_target, budget)
+            # longest cached prefix of the prompt, block-aligned and
+            # capped below the full prompt: the LAST prompt token must
+            # be computed (its logits sample the first output token).
+            # Matched tokens never enter a chunk - they are priced as
+            # cached context, not prefill (perfmodel.hybrid_step_cost)
+            hit = fresh = 0
+            if self.cache is not None and seq.prefix_keys:
+                hit = self.cache.match_blocks(
+                    seq.prefix_keys,
+                    (seq.prompt_len - 1) // self.policy.block_size)
+                # pinning retained nodes consumes schedulable-free blocks
+                fresh = self.cache.fresh_cost(seq.prefix_keys, hit)
+            start = hit * self.policy.block_size
+            take = min(self.policy.chunk_tokens,
+                       seq.prefill_target - start, budget)
             need = self.ledger.blocks_needed(take)
-            if need > self.ledger.free_blocks - reserve:
+            if need + fresh > self.ledger.free_blocks - reserve:
                 break                              # priority order: no overtaking
             self.waiting.pop(0)
+            if hit:
+                self.cache.acquire(seq.sid, seq.prefix_keys, hit)
+                seq.prefilled = start
+                seq.kv = start
             self.ledger.allocate(seq.sid, take)
             self.prefilling.append(seq)
-            chunks.append(PrefillChunk(seq, take, 0,
-                                       take >= seq.prefill_target))
+            chunks.append(PrefillChunk(seq, take, seq.prefilled,
+                                       seq.prefilled + take >= seq.prefill_target))
             budget -= take
         return chunks
 
@@ -783,5 +936,12 @@ class ContinuousScheduler:
 
     def _finish(self, seq: SchedSeq) -> None:
         self.running.remove(seq)
+        if self.cache is not None and seq.prefix_keys:
+            # publish-on-finish: the prompt's blocks move into the cache
+            # (carbon-capped) BEFORE the allocation is freed, so the
+            # engine can pin the real pool blocks while they still exist
+            self.cache.publish(seq.sid, seq.prefix_keys)
+        elif self.cache is not None:
+            self.cache.release(seq.sid)
         self.ledger.free(seq.sid)
         self.finished.append(seq)

@@ -157,6 +157,12 @@ def hybrid_step_charges(
     serialized policy. Decode KV traffic is summed per sequence (exact
     under the roofline), unlike the serialized path's batch-mean context.
 
+    Prefix-cache reuse is priced through the chunks' CACHED dimension:
+    a matched prompt prefix never appears in any chunk's token count -
+    it enters each chunk as `ctx_cached` context, so it costs one KV
+    re-read per attending step (perfmodel.prefix_reuse_bytes) instead of
+    prefill FLOPs + writes. No separate "cache hit" charge exists.
+
       standalone  one hybrid pass on the new chip
       spec        draft K+1 decode steps, then the target hybrid
                   verify+chunk pass, then the draft's own chunk prefill -

@@ -65,6 +65,7 @@ from repro.serving.costs import (
 )
 from repro.serving.kv_cache import PagedKVPool
 from repro.serving.perfmodel import Interconnect, decode_cost
+from repro.serving.prefix_cache import token_block_keys
 from repro.serving.simulator import ChipUse
 from repro.serving.workload import SLO_CLASSES, class_priority
 
@@ -113,6 +114,7 @@ class ServingEngine:
         seed: int = 0,
         exec_cfg: ExecConfig = DEFAULT_EXEC,
         batching: "BatchPolicy | str | None" = None,
+        ci_trace=None,
     ):
         if kind in ("spec", "dsd"):
             assert draft_cfg is not None and draft_params is not None
@@ -177,10 +179,14 @@ class ServingEngine:
         self._decoding_b: list[SchedSeq] = []                # dpd decode set
         # dpd: (EngineRequest, resume_emitted, stashed (k, v) or None)
         self._ready_b: deque = deque()
+        # tokens of ADOPTED (cache-shared) prefix per sid: KV the sequence
+        # aliases but must never rewrite (prefix_cache sharing)
+        self._shared_tok: dict[int, int] = {}
         if self.policy.kind == "continuous":
             if kind == "dpd":
                 self._sched_a = build_dpd_prefill_scheduler(
-                    self.policy, max_batch, target_cfg, self.new_chip)
+                    self.policy, max_batch, target_cfg, self.new_chip,
+                    ci_trace=ci_trace)
                 # the two ledgers model the two CHIPS' HBM; on the engine
                 # both logical pools share ONE physical PagedKVPool, so cap
                 # pool A's (chip-derived, effectively unbounded for reduced
@@ -194,7 +200,14 @@ class ServingEngine:
             else:
                 self._sched = build_single_pool_scheduler(
                     self.policy, kind, max_batch, spec.num_draft_tokens,
-                    target_cfg, draft_cfg, self.new_chip)
+                    target_cfg, draft_cfg, self.new_chip, ci_trace=ci_trace)
+            # the engine realizes cache decisions PHYSICALLY: published
+            # nodes pin real pool blocks (target + draft), eviction
+            # releases them. The scheduler stays the only decision-maker.
+            sched = self._sched or self._sched_a
+            if sched.cache is not None:
+                sched.cache.grab_fn = self._cache_grab
+                sched.cache.drop_fn = self._cache_drop
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int, arrival_s: float = 0.0,
@@ -373,10 +386,49 @@ class ServingEngine:
         while self.waiting and self.waiting[0].arrival_s <= self.clock:
             r = self.waiting.popleft()
             self.active[r.req_id] = r
+            # the engine keys blocks by real token CONTENT (the simulator
+            # synthesizes equivalent keys from session metadata): two
+            # prompts sharing a token prefix share cached blocks
+            keys = token_block_keys(r.prompt, self.policy.block_size) \
+                if sched.cache is not None else ()
             sched.submit(SchedSeq(
                 r.req_id, len(r.prompt),
                 r.max_new_tokens if output_len is None else output_len,
-                payload=r, priority=class_priority(r.slo_class)))
+                payload=r, priority=class_priority(r.slo_class),
+                prefix_keys=keys))
+
+    # ------------------------------------------------- prefix-cache hooks
+    def _cache_grab(self, sid: int, i: int):
+        """Publish hook: pin block `i` of `sid`'s prompt in the real
+        pools. The returned payload rides on the cache node; a later
+        match adopts these block ids, eviction derefs them."""
+        bid = self.pool.seq(sid).block_table[i]
+        self.pool.ref_block(bid)
+        if self.draft_pool is not None:
+            dbid = self.draft_pool.seq(sid).block_table[i]
+            self.draft_pool.ref_block(dbid)
+            return (bid, dbid)
+        return (bid, None)
+
+    def _cache_drop(self, payload) -> None:
+        """Eviction hook: release the pinned pool blocks."""
+        bid, dbid = payload
+        self.pool.deref_block(bid)
+        if dbid is not None:
+            self.draft_pool.deref_block(dbid)
+
+    def _adopt_shared(self, cache, seq: SchedSeq) -> None:
+        """First chunk of a matched sequence: alias the cached blocks into
+        the real pools (ref-counted - the KV is physically shared, never
+        copied), so the sequence starts with its matched prefix resident."""
+        payloads = cache.acquired_payloads(seq.sid)
+        if not payloads:
+            return
+        toks = len(payloads) * self.policy.block_size
+        self.pool.adopt(seq.sid, [p[0] for p in payloads], toks)
+        if self.draft_pool is not None:
+            self.draft_pool.adopt(seq.sid, [p[1] for p in payloads], toks)
+        self._shared_tok[seq.sid] = toks
 
     def _prefix_tokens(self, r: EngineRequest, upto: int) -> np.ndarray:
         """First `upto` tokens of prompt + committed output (recompute
@@ -388,29 +440,45 @@ class ServingEngine:
                                   np.int32)])
 
     def _chunk_prefill(self, params, cfg, pool: PagedKVPool, sid: int,
-                       prefix: np.ndarray, fresh: bool):
+                       prefix: np.ndarray, fresh: bool,
+                       shared_tok: int = 0):
         """One real prefill chunk: compute the prefix, grow the sequence's
         pool blocks to cover it, scatter the KV. Returns the last-position
         logits (valid first-token logits once the prefill completes).
 
+        `shared_tok` > 0 marks the leading tokens whose KV lives in
+        ADOPTED cache blocks: those blocks are aliased by other holders
+        and must not be rewritten, so only the suffix scatters (the
+        recomputed prefix KV is bit-identical to what the blocks hold -
+        causal attention makes a shared token prefix produce shared KV).
+
         CPU-scale note: the chunk is realized by recomputing the whole
         prefix (the backbone's serve_step is single-token); the KV that
         lands in the pool is identical to a true incremental chunk pass,
-        and the *priced* cost is the chunk's (costs.hybrid_step_charges),
-        so scheduling and accounting see genuine chunked prefill."""
+        and the *priced* cost is the chunk's (costs.hybrid_step_charges) -
+        with a prefix-cache match, the matched tokens never appear in any
+        chunk, so they are priced as cached context (per-block KV
+        re-reads), not prefill."""
         batch = {"tokens": jnp.asarray(prefix)[None, :]}
         logits, cache = backbone.prefill(params, batch, cfg, self.exec_cfg)
         if fresh:
             pool.allocate(sid, len(prefix))
         else:
             pool.extend(sid, len(prefix) - pool.seq(sid).length)
-        pool.scatter([sid], cache["k"], cache["v"])
+        if shared_tok:
+            pool.scatter_suffix(sid, cache["k"], cache["v"], shared_tok)
+        else:
+            pool.scatter([sid], cache["k"], cache["v"])
         return logits
 
     def _retire_continuous(self, seq: SchedSeq, pool_b: bool = False) -> None:
         r: EngineRequest = seq.payload
         self.active.pop(seq.sid, None)
         self.last_token.pop(seq.sid, None)
+        self._shared_tok.pop(seq.sid, None)
+        # publish already pinned the prompt blocks the cache keeps (the
+        # scheduler's _finish ran first); free() only derefs, so donated
+        # and adopted blocks survive the sequence
         self.pool.free(seq.sid)
         if self.draft_pool is not None:
             self.draft_pool.free(seq.sid)
@@ -429,6 +497,8 @@ class ServingEngine:
         sched = self._sched
         while True:
             self._admit_continuous(sched)
+            if sched.cache is not None:
+                sched.cache.now_s = self.clock    # carbon lookup only
             plan = sched.next_plan()
             if plan is not None:
                 break
@@ -436,9 +506,11 @@ class ServingEngine:
                 return False
             self.clock = max(self.clock, self.waiting[0].arrival_s)
         for victim in plan.preempted:
-            # scheduler already freed its ledger and reset the seq for
-            # recompute; mirror on the real pools (tokens are kept - the
-            # re-prefill recomputes prompt + emitted prefix)
+            # scheduler already freed its ledger (and released its cache
+            # refs) and reset the seq for recompute; mirror on the real
+            # pools (tokens are kept - the re-prefill recomputes prompt +
+            # emitted prefix)
+            self._shared_tok.pop(victim.sid, None)
             self.pool.free(victim.sid)
             if self.draft_pool is not None:
                 self.draft_pool.free(victim.sid)
@@ -449,16 +521,23 @@ class ServingEngine:
         for chip_name, cost, rel_s in hs.charges:
             self._charge(CHIP_DB[chip_name], cost, at_s=self.clock + rel_s)
         t_end = self.clock + hs.duration_s
+        if sched.cache is not None:
+            sched.cache.now_s = t_end             # publish at step-end time
         for ch in plan.chunks:
             seq = ch.seq
             r: EngineRequest = seq.payload
             prefix = self._prefix_tokens(r, ch.ctx_before + ch.tokens)
+            if sched.cache is not None and not self.pool.has(seq.sid):
+                self._adopt_shared(sched.cache, seq)
+            fresh = not self.pool.has(seq.sid)
+            shared = self._shared_tok.get(seq.sid, 0)
             logits = self._chunk_prefill(self.params, self.cfg, self.pool,
-                                         seq.sid, prefix, ch.ctx_before == 0)
+                                         seq.sid, prefix, fresh,
+                                         shared_tok=shared)
             if self.kind in ("spec", "dsd"):
                 self._chunk_prefill(self.draft_params, self.draft_cfg,
                                     self.draft_pool, seq.sid, prefix,
-                                    ch.ctx_before == 0)
+                                    fresh, shared_tok=shared)
             if sched.complete_chunk(seq, ch.tokens):
                 if seq.emitted == 0:
                     tok = int(np.asarray(self._sample(logits))[0])
@@ -547,6 +626,8 @@ class ServingEngine:
         sched = self._sched_a
         while True:
             self._admit_continuous(sched, output_len=1)
+            if sched.cache is not None:
+                sched.cache.now_s = self.clock    # carbon lookup only
             plan = sched.next_plan()
             if plan is not None:
                 self._dpd_prefill_step(plan)
@@ -565,19 +646,27 @@ class ServingEngine:
             # wedged-pool recompute: scheduler freed its ledger; mirror on
             # the real pool (the re-prefill recomputes the prompt)
             self.pool.free(victim.sid)
+            self._shared_tok.pop(victim.sid, None)
         hs = hybrid_step_charges(
             "dpd", self.cfg, None, self.new_chip, self.old_chip,
             plan.chunk_specs(), (), 0, self.interconnect)
         for chip_name, cost, rel_s in hs.charges:
             self._charge(CHIP_DB[chip_name], cost, at_s=self.clock + rel_s)
         t_end = self.clock + hs.duration_s
+        if sched.cache is not None:
+            sched.cache.now_s = t_end
         tx_total = 0.0
         for ch in plan.chunks:
             seq = ch.seq
             r: EngineRequest = seq.payload
+            if sched.cache is not None and not self.pool.has(seq.sid):
+                self._adopt_shared(sched.cache, seq)
+            fresh = not self.pool.has(seq.sid)
+            shared = self._shared_tok.get(seq.sid, 0)
             prefix = self._prefix_tokens(r, ch.ctx_before + ch.tokens)
             logits = self._chunk_prefill(self.params, self.cfg, self.pool,
-                                         seq.sid, prefix, ch.ctx_before == 0)
+                                         seq.sid, prefix, fresh,
+                                         shared_tok=shared)
             if not sched.complete_chunk(seq, ch.tokens):
                 continue
             tok = int(np.asarray(self._sample(logits))[0])
@@ -591,6 +680,7 @@ class ServingEngine:
             if r.done:
                 self.active.pop(seq.sid, None)
                 self.pool.free(seq.sid)
+                self._shared_tok.pop(seq.sid, None)
                 self._finish(r)
             else:
                 self.last_token[seq.sid] = tok

@@ -286,6 +286,16 @@ class OnlineDispatcher:
     with the least *tight* backlog even when relaxed bulk sits elsewhere;
     single-class streams reduce exactly to the scalar earliest-finish
     dispatcher.
+
+    Routing is also session-STICKY: a multi-turn session's later turns
+    re-land on the replica that served its first turn (its "home"),
+    where the replica-local prefix cache holds the conversation's KV -
+    a different replica would re-prefill the shared prefix from scratch.
+    Stickiness yields only when the home is gone (drained) or its
+    projected finish trails the best alternative by more than one
+    service estimate of this request: at that point the re-prefill is
+    cheaper than the queueing, and the session re-homes to the pick.
+    Sessionless requests route exactly as before.
     """
 
     def __init__(self, batching: "BatchPolicy | str | None" = None):
@@ -297,6 +307,8 @@ class OnlineDispatcher:
         # arrival under priority scheduling) is expected to finish
         self._busy_class: dict[int, list[float]] = {}
         self._est_cache: dict[tuple[int, int, int], float] = {}
+        # session id -> replica that holds its prefix KV (sticky routing)
+        self._session_home: dict[int, int] = {}
 
     @property
     def busy_until(self) -> dict[int, float]:
@@ -313,6 +325,10 @@ class OnlineDispatcher:
     def remove(self, rid: int) -> None:
         cfg = self.configs.pop(rid)
         self._busy_class.pop(rid)
+        # sessions homed here re-home on their next turn (the drained
+        # replica's prefix cache is gone with it)
+        self._session_home = {s: r for s, r in self._session_home.items()
+                              if r != rid}
         # the estimate cache is keyed by config object identity; once no
         # registered replica holds this config, drop its entries so a
         # recycled id() of a *different* config can never serve them
@@ -340,13 +356,24 @@ class OnlineDispatcher:
         p = class_priority(req.slo_class)
         ids = candidates if candidates is not None else sorted(self.configs)
         best, best_finish = None, None
+        finishes: dict[int, float] = {}
         for rid in ids:
             finish = max(self._busy_class[rid][p], req.arrival_s) \
                 + self._est(rid, req)
+            finishes[rid] = finish
             if best_finish is None or finish < best_finish - 1e-12:
                 best, best_finish = rid, finish
         if best is None:
             raise ValueError("cannot route onto an empty replica set")
+        sid = getattr(req, "session_id", None)
+        if sid is not None:
+            home = self._session_home.get(sid)
+            if home is not None and home in finishes and home != best:
+                # prefix affinity: stay home unless the queueing penalty
+                # exceeds one service estimate (the re-prefill bound)
+                if finishes[home] - best_finish <= self._est(home, req):
+                    best, best_finish = home, finishes[home]
+            self._session_home[sid] = best
         busy = self._busy_class[best]
         start = max(busy[p], req.arrival_s)
         est = best_finish - start

@@ -47,6 +47,12 @@ class PagedKVPool:
         self.v = jnp.zeros(shape, dtype)
         self._free: list[int] = list(range(num_blocks))
         self._seqs: dict[int, SeqAlloc] = {}
+        # per-block reference counts (prefix sharing): a block popped off
+        # the free list starts at 1; `free`/`deref_block` decrement and
+        # only a 0 count returns the block to the free list, so a prompt
+        # block can be held by a sequence AND the prefix cache (and by
+        # several sequences adopting the same cached prefix) at once
+        self._refs: dict[int, int] = {}
 
     # ---------------- allocation ----------------
     @property
@@ -59,12 +65,32 @@ class PagedKVPool:
     def can_admit(self, tokens: int) -> bool:
         return self.blocks_needed(tokens) <= len(self._free)
 
-    def allocate(self, seq_id: int, tokens: int) -> SeqAlloc:
-        need = self.blocks_needed(tokens)
+    def _pop_blocks(self, need: int, what: str) -> list[int]:
         if need > len(self._free):
-            raise OutOfBlocks(f"need {need} blocks, {len(self._free)} free")
+            raise OutOfBlocks(f"{what} {need} blocks, {len(self._free)} free")
         blocks = [self._free.pop() for _ in range(need)]
-        alloc = SeqAlloc(seq_id, blocks, tokens)
+        for b in blocks:
+            self._refs[b] = 1
+        return blocks
+
+    def allocate(self, seq_id: int, tokens: int) -> SeqAlloc:
+        alloc = SeqAlloc(seq_id, self._pop_blocks(
+            self.blocks_needed(tokens), "need"), tokens)
+        self._seqs[seq_id] = alloc
+        return alloc
+
+    def adopt(self, seq_id: int, block_ids: list[int], tokens: int) -> SeqAlloc:
+        """Start `seq_id` on SHARED blocks (a cached prefix): its table
+        aliases `block_ids` (each ref-counted up) and covers `tokens` of
+        KV that will never be rewritten - `extend`/`scatter_suffix` grow
+        and write strictly past them."""
+        if seq_id in self._seqs:
+            raise ValueError(f"seq {seq_id} already allocated")
+        if tokens > len(block_ids) * self.block_size:
+            raise ValueError("adopted blocks cannot cover the claimed tokens")
+        for b in block_ids:
+            self.ref_block(b)
+        alloc = SeqAlloc(seq_id, list(block_ids), tokens)
         self._seqs[seq_id] = alloc
         return alloc
 
@@ -72,17 +98,42 @@ class PagedKVPool:
         alloc = self._seqs[seq_id]
         total = alloc.length + new_tokens
         need = self.blocks_needed(total) - len(alloc.block_table)
-        if need > len(self._free):
-            raise OutOfBlocks(f"extend needs {need} blocks, {len(self._free)} free")
-        alloc.block_table.extend(self._free.pop() for _ in range(need))
+        alloc.block_table.extend(self._pop_blocks(max(need, 0), "extend needs"))
         alloc.length = total
 
     def free(self, seq_id: int) -> None:
         alloc = self._seqs.pop(seq_id)
-        self._free.extend(alloc.block_table)
+        for b in alloc.block_table:
+            self.deref_block(b)
+
+    def has(self, seq_id: int) -> bool:
+        return seq_id in self._seqs
 
     def seq(self, seq_id: int) -> SeqAlloc:
         return self._seqs[seq_id]
+
+    # ---------------- block sharing ----------------
+    def ref_block(self, block_id: int) -> None:
+        """Take an extra reference on a live block (prefix-cache pin or
+        a sequence adopting a cached prefix)."""
+        if self._refs.get(block_id, 0) < 1:
+            raise ValueError(f"block {block_id} is not live")
+        self._refs[block_id] += 1
+
+    def deref_block(self, block_id: int) -> None:
+        """Drop one reference; the block frees when the last holder lets
+        go (sequence finish/preempt or prefix-cache eviction)."""
+        n = self._refs[block_id] - 1
+        if n < 0:
+            raise ValueError(f"block {block_id} ref underflow")
+        if n == 0:
+            del self._refs[block_id]
+            self._free.append(block_id)
+        else:
+            self._refs[block_id] = n
+
+    def block_refs(self, block_id: int) -> int:
+        return self._refs.get(block_id, 0)
 
     # ---------------- gather / scatter ----------------
     def _tables(self, seq_ids: list[int], pad_blocks: int) -> np.ndarray:
@@ -118,5 +169,32 @@ class PagedKVPool:
             l, b, kv, _, d = x.shape
             x = x.reshape(l, b, kv, nb, self.block_size, d)
             return jnp.moveaxis(x, 2, 3)                            # (L,B,nb,KV,bs,D)
+        self.k = self.k.at[:, tables].set(form(k))
+        self.v = self.v.at[:, tables].set(form(v))
+
+    def scatter_suffix(self, seq_id: int, k: jax.Array, v: jax.Array,
+                       start_tok: int) -> None:
+        """Write ONLY the blocks from `start_tok` (block-aligned) onward
+        of one sequence's contiguous (L, 1, KV, S, D) cache - the
+        prefix-sharing write path: the first `start_tok` tokens live in
+        adopted blocks other holders reference and must never be
+        rewritten."""
+        if start_tok % self.block_size:
+            raise ValueError(f"start_tok must be block-aligned: {start_tok}")
+        s = k.shape[3]
+        nb = self.blocks_needed(s)
+        pad = nb * self.block_size - s
+        if pad:
+            zp = [(0, 0)] * 5
+            zp[3] = (0, pad)
+            k = jnp.pad(k, zp)
+            v = jnp.pad(v, zp)
+        skip = start_tok // self.block_size
+        bt = self._seqs[seq_id].block_table
+        tables = jnp.asarray(np.array([bt[skip:nb]], np.int32))
+        def form(x):
+            l, b, kv, _, d = x.shape
+            x = x.reshape(l, b, kv, nb, self.block_size, d)[:, :, :, skip:]
+            return jnp.moveaxis(x, 2, 3)                        # (L,1,nb',KV,bs,D)
         self.k = self.k.at[:, tables].set(form(k))
         self.v = self.v.at[:, tables].set(form(v))

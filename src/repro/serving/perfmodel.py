@@ -147,6 +147,19 @@ def hybrid_step_cost(cfg: ModelConfig, chip: ChipSpec,
                      overhead_s=overhead)
 
 
+def prefix_reuse_bytes(cfg: ModelConfig, tokens: int,
+                       dtype_bytes: int = 2) -> float:
+    """HBM traffic a prefix-cache hit of `tokens` REPLACES prefill with.
+
+    Matched prompt tokens never appear in any chunk; instead their blocks
+    enter subsequent chunks as cached context (`ctx_cached` in
+    `hybrid_step_cost`), so the sequence pays one KV re-read per step that
+    attends over them - this helper is that per-step re-read cost, the
+    `(s + c) * kv_per_tok` term with the hit folded into `s`. The prefill
+    FLOPs and write traffic of the matched tokens are skipped entirely."""
+    return tokens * cfg.kv_bytes_per_token(dtype_bytes)
+
+
 def max_concurrency(cfg: ModelConfig, chip: ChipSpec, context_len: int,
                     dtype_bytes: int = 2, reserve_frac: float = 0.1) -> int:
     """How many sequences of `context_len` fit in HBM next to the weights."""

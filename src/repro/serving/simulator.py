@@ -92,6 +92,7 @@ from repro.serving.perfmodel import (
     hybrid_step_cost,
     max_concurrency,
 )
+from repro.serving.prefix_cache import request_block_keys
 from repro.serving.workload import Dataset, Request, class_priority, slo_targets
 
 
@@ -334,6 +335,7 @@ class ReplicaSim:
         ctx_estimate: Optional[int] = None,
         start_s: float = 0.0,
         batching: "BatchPolicy | str | None" = None,
+        ci_trace: Optional[CarbonTrace] = None,
     ):
         if mode.kind in ("spec", "dsd") and draft_cfg is None:
             raise ValueError(f"{mode.kind} needs a draft model")
@@ -344,6 +346,11 @@ class ReplicaSim:
         self.target_cfg = target_cfg
         self.draft_cfg = draft_cfg
         self.start_s = start_s
+        # grid-intensity trace for the prefix cache's carbon-aware
+        # retention knob (policy.prefix_cache); carbon ACCOUNTING still
+        # happens post-hoc in SimResult.account - this only modulates how
+        # aggressively finished prompts' KV is retained
+        self.ci_trace = ci_trace
         self.rng = np.random.default_rng(seed)
         self.new_chip = CHIP_DB[mode.new_chip]
         self.old_chip = CHIP_DB[mode.old_chip] if mode.old_chip else None
@@ -443,6 +450,14 @@ class ReplicaSim:
     def drain(self) -> "ReplicaSim":
         """Run until all submitted requests finish."""
         return self.advance_to(math.inf)
+
+    def prefix_cache_stats(self) -> Optional[dict]:
+        """Hit/eviction counters of the bound prefix cache (None when the
+        policy has none, or no continuous scheduler was ever built)."""
+        sched = self._sched or self._sched_a
+        if sched is None or sched.cache is None:
+            return None
+        return sched.cache.stats()
 
     def result(self) -> SimResult:
         """Snapshot of everything simulated so far."""
@@ -626,7 +641,7 @@ class ReplicaSim:
             self._sched = build_single_pool_scheduler(
                 self.policy, self.mode.kind, self.mode.max_batch,
                 self.mode.spec_k, self.target_cfg, self.draft_cfg,
-                self.new_chip)
+                self.new_chip, ci_trace=self.ci_trace)
         return self._sched
 
     def _finish_prefill(self, seq: SchedSeq, sched: ContinuousScheduler,
@@ -658,10 +673,15 @@ class ReplicaSim:
             while (self._i_arrival < len(traces)
                    and traces[self._i_arrival].req.arrival_s <= self._t):
                 tr = traces[self._i_arrival]
+                keys = request_block_keys(tr.req, self.policy.block_size) \
+                    if sched.cache is not None else ()
                 sched.submit(SchedSeq(self._i_arrival, tr.req.prompt_len,
                                       tr.req.output_len, payload=tr,
-                                      priority=class_priority(tr.req.slo_class)))
+                                      priority=class_priority(tr.req.slo_class),
+                                      prefix_keys=keys))
                 self._i_arrival += 1
+            if sched.cache is not None:
+                sched.cache.now_s = self._t       # carbon lookup only
             plan = sched.next_plan()
             if plan is None:
                 if self._i_arrival >= len(traces):
@@ -684,6 +704,8 @@ class ReplicaSim:
                     mode.interconnect.transfer_time(hs.link_ids_bytes)
                     + mode.interconnect.transfer_time(hs.link_probs_bytes))
             self._t += hs.duration_s
+            if sched.cache is not None:
+                sched.cache.now_s = self._t       # publish at step-end time
             for ch in plan.chunks:
                 if sched.complete_chunk(ch.seq, ch.tokens) \
                         and ch.seq.emitted == 0:
@@ -704,7 +726,7 @@ class ReplicaSim:
         if self._sched_a is None:
             self._sched_a = build_dpd_prefill_scheduler(
                 self.policy, self.mode.max_batch, self.target_cfg,
-                self.new_chip)
+                self.new_chip, ci_trace=self.ci_trace)
         return self._sched_a
 
     def _ledger_b_pool(self) -> BlockLedger:
@@ -744,11 +766,18 @@ class ReplicaSim:
                 tr = traces[self._i_arrival]
                 # pool A only prefills: model each prompt as output_len=1
                 # so prefill completion retires the sequence (and frees
-                # its pool-A blocks - the KV ships to pool B)
+                # its pool-A blocks - the KV ships to pool B; retirement
+                # also PUBLISHES the prompt into pool A's prefix cache,
+                # where the next turn's prefill will match)
+                keys = request_block_keys(tr.req, self.policy.block_size) \
+                    if sched.cache is not None else ()
                 sched.submit(SchedSeq(self._i_arrival, tr.req.prompt_len, 1,
                                       payload=tr,
-                                      priority=class_priority(tr.req.slo_class)))
+                                      priority=class_priority(tr.req.slo_class),
+                                      prefix_keys=keys))
                 self._i_arrival += 1
+            if sched.cache is not None:
+                sched.cache.now_s = self._t_a     # carbon lookup only
             plan = sched.next_plan()
             if plan is None:
                 if self._i_arrival >= len(traces):
@@ -761,6 +790,8 @@ class ReplicaSim:
             cost = hybrid_step_cost(cfg, self.new_chip, plan.chunk_specs(), ())
             self._charge(self.new_chip.name, cost, self._t_a)
             self._t_a += cost.time_s
+            if sched.cache is not None:
+                sched.cache.now_s = self._t_a     # publish at step-end time
             for ch in plan.chunks:
                 if not sched.complete_chunk(ch.seq, ch.tokens):
                     continue
@@ -901,6 +932,7 @@ def simulate(
     ctx_estimate: Optional[int] = None,
     start_s: float = 0.0,
     batching: "BatchPolicy | str | None" = None,
+    ci_trace: Optional[CarbonTrace] = None,
 ) -> SimResult:
     """Simulate one engine over `requests` (arrival-sorted, absolute times).
 
@@ -916,10 +948,14 @@ def simulate(
     batching with chunked prefill and block-granular KV admission
     (serving/batching.py) - the default for the fleet/autoscale layers.
 
+    `ci_trace` feeds the prefix cache's carbon-aware retention when the
+    policy enables `prefix_cache` (accounting stays post-hoc in
+    `SimResult.account`).
+
     Thin wrapper: submit everything into a `ReplicaSim` and drain it."""
     sim = ReplicaSim(mode, target_cfg, draft_cfg=draft_cfg, seed=seed,
                      ctx_estimate=ctx_estimate, start_s=start_s,
-                     batching=batching)
+                     batching=batching, ci_trace=ci_trace)
     for r in requests:
         sim.submit(r)
     return sim.drain().result()

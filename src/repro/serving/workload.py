@@ -104,16 +104,40 @@ DATASETS = {
 
 @dataclasses.dataclass(frozen=True)
 class Request:
+    """One arrival. The session fields describe PREFIX-SHARING structure
+    for the cross-request KV cache (serving/prefix_cache.py):
+
+    session_id       turns of one conversation share it; each turn's
+                     prompt is the previous turn's prompt + its output +
+                     the new user message, so consecutive turns share a
+                     growing block-aligned prefix. None (the default) =
+                     a one-shot request sharing nothing.
+    prefix_group     cross-session shared SYSTEM prompt id: requests of
+                     one group open with the same `prefix_share_len`
+                     tokens (an agent fleet's common scaffold).
+    prefix_share_len length of that shared opening, in tokens.
+
+    All three default to "no sharing", so existing workloads (and their
+    sampled rng streams) are untouched."""
+
     req_id: int
     arrival_s: float
     prompt_len: int
     output_len: int
     slo_class: str = "standard"
+    session_id: Optional[int] = None
+    prefix_group: Optional[int] = None
+    prefix_share_len: int = 0
 
     def __post_init__(self):
         if self.slo_class not in SLO_CLASSES:
             raise ValueError(f"unknown slo_class: {self.slo_class!r} "
                              f"(one of {sorted(SLO_CLASSES)})")
+        if self.prefix_share_len < 0:
+            raise ValueError(
+                f"negative prefix_share_len: {self.prefix_share_len}")
+        if self.prefix_group is not None and self.prefix_share_len == 0:
+            raise ValueError("prefix_group set but prefix_share_len is 0")
 
     @property
     def priority(self) -> int:
@@ -194,6 +218,78 @@ def sample_requests(
                     int(np.clip(r.lognormal(mu_out, sg_out), 1, 4096)))
     return _poisson_requests(rng, qps, duration_s, size_fn,
                              _class_fn(dataset, class_mix, seed))
+
+
+def sample_session_requests(
+    dataset: Dataset,
+    session_qps: float,
+    duration_s: float,
+    seed: int = 0,
+    turns: int = 4,
+    think_s: float = 8.0,
+    system_len: int = 256,
+    num_system_prompts: int = 1,
+    class_mix: Optional[dict[str, float]] = None,
+    max_prompt: int = 8192,
+) -> list[Request]:
+    """Multi-turn session traces - the prefix-cache workload (ROADMAP
+    item 5's session model).
+
+    Sessions (conversations / agent loops) arrive Poisson at
+    `session_qps`. A session opens with one of `num_system_prompts`
+    shared system prompts (`system_len` tokens - its `prefix_group`,
+    shared ACROSS sessions) and runs ~`turns` turns (Poisson-distributed
+    count, min 1). Turn t's prompt is the full conversation so far:
+
+        prompt_t = prompt_{t-1} + output_{t-1} + user_t
+
+    so consecutive turns share a strictly growing prefix (the
+    within-session reuse the cache converts into skipped prefill), with
+    per-turn user/output sizes lognormal-fitted to the dataset's Table-2
+    percentiles. Turn t+1 arrives an exponential(`think_s`) think time
+    after turn t. A session's turns share its `session_id` and SLO class.
+
+    Sampling runs on a DEDICATED rng stream (like `_class_fn`): session
+    workloads never perturb `sample_requests` streams of the same seed.
+    Requests are returned arrival-sorted with sequential `req_id`s.
+    Prompt growth caps at `max_prompt`: a session whose next turn would
+    exceed it ends early."""
+    if session_qps <= 0 or duration_s <= 0:
+        raise ValueError(f"bad session stream: {session_qps=} {duration_s=}")
+    if turns < 1 or think_s < 0 or system_len < 0 or num_system_prompts < 1:
+        raise ValueError(
+            f"bad session shape: {turns=} {think_s=} {system_len=}")
+    rng = np.random.default_rng((seed, 0x5E5510))   # session-only stream
+    cls_fn = _class_fn(dataset, class_mix, seed)
+    mu_in, sg_in = _lognormal_params(*(p[0] for p in
+                                       (dataset.p25, dataset.p50, dataset.p75)))
+    mu_out, sg_out = _lognormal_params(*(p[1] for p in
+                                         (dataset.p25, dataset.p50, dataset.p75)))
+    reqs: list[Request] = []
+    t = 0.0
+    session = 0
+    while True:
+        t += rng.exponential(1.0 / session_qps)
+        if t >= duration_s:
+            break
+        group = int(rng.integers(num_system_prompts))
+        n_turns = max(1, 1 + rng.poisson(turns - 1))
+        cls = cls_fn(rng)
+        arrival = t
+        prompt = system_len + int(np.clip(rng.lognormal(mu_in, sg_in), 1, 4096))
+        for _ in range(n_turns):
+            out = int(np.clip(rng.lognormal(mu_out, sg_out), 1, 4096))
+            reqs.append(Request(
+                0, arrival, prompt, out, slo_class=cls, session_id=session,
+                prefix_group=group if system_len else None,
+                prefix_share_len=system_len))
+            arrival += rng.exponential(think_s)
+            prompt += out + int(np.clip(rng.lognormal(mu_in, sg_in), 1, 4096))
+            if prompt > max_prompt:
+                break
+        session += 1
+    reqs.sort(key=lambda r: r.arrival_s)
+    return [dataclasses.replace(r, req_id=i) for i, r in enumerate(reqs)]
 
 
 def sample_mixture_requests(

@@ -176,6 +176,63 @@ def test_online_dispatcher_routes_by_slo_class():
     assert disp._busy_class[1][2] > before
 
 
+def test_online_dispatcher_sticky_sessions():
+    """Session turns re-land on the replica holding their prefix KV (the
+    home), yielding only when the home's queueing penalty exceeds one
+    service estimate (the re-prefill bound) or the home drained."""
+    disp = OnlineDispatcher()
+    disp.add(0, CATALOG[0])
+    disp.add(1, CATALOG[0])
+    # first turn: no home yet -> plain earliest-finish (tie-break rid 0)
+    assert disp.pick(Request(0, 0.0, 160, 140, session_id=7)) == 0
+    assert disp._session_home[7] == 0
+    # second turn: rid 1 is now emptier, but the affinity penalty (one
+    # service time) is under the re-prefill bound -> stay home
+    assert disp.pick(Request(1, 0.0, 200, 140, session_id=7)) == 0
+    # a sessionless arrival is untouched by stickiness: earliest finish
+    assert disp.pick(Request(2, 0.0, 160, 140)) == 1
+    # pile work on the home until staying costs more than a re-prefill:
+    # the session re-homes to the emptier replica
+    for i in range(3, 8):
+        disp.pick(Request(i, 0.0, 160, 140), [0])
+    assert disp.pick(Request(8, 0.0, 200, 140, session_id=7)) == 1
+    assert disp._session_home[7] == 1
+    # draining the home forgets the affinity (its cache died with it)
+    disp.remove(1)
+    assert 7 not in disp._session_home
+    assert disp.pick(Request(9, 0.0, 200, 140, session_id=7)) == 0
+
+
+def test_drain_victim_choice_is_class_aware():
+    """Regression: two same-type replicas tie on scalar busy_until, but
+    one holds the TIGHT backlog - the drain must pick the other one (the
+    old scalar key tie-broke on rid and drained the tight holder)."""
+    from types import SimpleNamespace
+
+    from repro.serving.autoscale import drain_victims
+
+    disp = OnlineDispatcher()
+    disp.add(0, CATALOG[0])
+    disp.add(1, CATALOG[0])
+    disp.pick(Request(0, 0.0, 160, 140, slo_class="tight"), [0])
+    disp.pick(Request(1, 0.0, 160, 140, slo_class="relaxed"), [1])
+    # identical service estimate -> scalar (worst-level) estimates tie
+    assert disp.busy_until[0] == disp.busy_until[1]
+    reps = [SimpleNamespace(rid=0), SimpleNamespace(rid=1)]
+    victims = drain_victims(disp, reps, 1)
+    assert [v.rid for v in victims] == [1], \
+        "drained the replica holding the tight-class backlog"
+    # single-class fleets reduce to the old scalar ordering: emptiest rid
+    disp2 = OnlineDispatcher()
+    disp2.add(0, CATALOG[0])
+    disp2.add(1, CATALOG[0])
+    disp2.pick(Request(0, 0.0, 160, 140), [0])
+    disp2.pick(Request(1, 0.0, 160, 140), [1])
+    disp2.pick(Request(2, 0.0, 160, 140), [1])
+    assert [v.rid for v in drain_victims(
+        disp2, [SimpleNamespace(rid=0), SimpleNamespace(rid=1)], 1)] == [0]
+
+
 def test_estimate_service_s_dpd_includes_link_transfer():
     """dpd service estimates must include the KV-cache link transfer -
     otherwise least-loaded routing under-weights dpd replicas."""

@@ -132,6 +132,76 @@ def test_engine_and_simulator_agree_on_mixed_class_workload(tiny, kind,
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("kind,old_chip", [
+    ("standalone", None),
+    ("spec", None),
+    ("dsd", "t4"),
+    ("dpd", "t4"),
+])
+def test_engine_and_simulator_agree_with_prefix_cache(tiny, kind, old_chip):
+    """Prefix-cache parity on a shared-prefix session workload.
+
+    The engine keys cached blocks by real token CONTENT
+    (token_block_keys) while the simulator synthesizes keys from session
+    metadata (request_block_keys); on a workload where each turn's
+    prompt literally extends the previous one, both must compute the
+    SAME match lengths at the same admissions and replay one schedule -
+    pinned through clock, energy, link and per-request TTFT parity.
+    Turn gaps exceed a whole service time so publish-on-finish lands
+    before the next turn in both executors."""
+    cfg, params = tiny
+    bs = 16
+    gap_s = 5.0
+    # one 3-turn session: prompts extend each other token-for-token
+    p0 = np.arange(33) % cfg.vocab_size                       # 2 full blocks
+    p1 = np.concatenate([p0, np.arange(33, 48)]) % cfg.vocab_size   # 3
+    p2 = np.concatenate([p1, np.arange(48, 70)]) % cfg.vocab_size   # 4
+    prompts = [p0, p1, p2]
+    pol = BatchPolicy(num_blocks=POOL_BLOCKS, prefix_cache=True)
+
+    draft = dict(draft_cfg=cfg, draft_params=params) \
+        if kind in ("spec", "dsd") else {}
+    eng = ServingEngine(cfg, params, kind=kind, old_chip=old_chip,
+                        temperature=0.0, seed=1, max_batch=MAX_BATCH,
+                        pool_blocks=POOL_BLOCKS, batching=pol, **draft)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=OUT, arrival_s=i * gap_s)
+    eng.run_until_idle()
+
+    reqs = [Request(i, i * gap_s, len(p), OUT, session_id=0)
+            for i, p in enumerate(prompts)]
+    mode = ServingMode(kind, kind, "a100", old_chip,
+                       spec_k=SPEC_K, acceptance=1.0, max_batch=MAX_BATCH)
+    res = simulate(mode, cfg, reqs,
+                   draft_cfg=cfg if kind in ("spec", "dsd") else None,
+                   seed=1, batching=pol)
+
+    assert len(eng.finished) == len(prompts)
+    assert all(len(r.out_tokens) == OUT for r in eng.finished)
+    # both executors hit the cache (turn 2 matches 2 blocks, turn 3
+    # matches 3: every preceding turn published before the next arrival)
+    sched = eng._sched or eng._sched_a
+    assert sched.cache.hits == 2
+    assert sched.cache.hit_tokens == (2 + 3) * bs
+    assert eng.clock == pytest.approx(res.duration_s, rel=0.02), \
+        f"{kind}: modeled clock diverged on the prefix-cache path"
+    for name in res.use:
+        assert eng.use[name].energy_j == pytest.approx(
+            res.use[name].energy_j, rel=0.05), f"{kind}/{name} energy"
+        assert eng.use[name].busy_s == pytest.approx(
+            res.use[name].busy_s, rel=0.05), f"{kind}/{name} busy"
+    if kind in ("dsd", "dpd"):
+        assert eng.link_bytes == pytest.approx(res.link_bytes, rel=1e-9)
+    # per-request TTFT parity pins the match structure itself: a missed
+    # (or phantom) hit on either side shifts that turn's prefill time
+    for r in eng.finished:
+        tr = next(t for t in res.traces if t.req.req_id == r.req_id)
+        assert r.ttft_s == pytest.approx(tr.ttft_s, rel=0.05), \
+            f"{kind}: req {r.req_id} ttft"
+        assert len(r.out_tokens) == tr.tokens_out
+
+
+@pytest.mark.slow
 def test_engine_records_carbon_segments(tiny):
     """Engine charges now carry the (start, end, energy) segments the
     CarbonTrace accounting integrates - same shape as the simulator's."""

@@ -1,0 +1,219 @@
+"""Property suite for the prefix cache / block ledger accounting.
+
+Drives PrefixCache + BlockLedger through seeded-random interleavings of
+the full scheduler lifecycle (match -> acquire -> allocate -> grow ->
+publish/preempt) under a swinging carbon retention cap, checking after
+EVERY operation:
+
+  - conservation: physical_free + owned + active-shared + retained ==
+    num_blocks (the four ledger populations always sum to the pool)
+  - refcounts never go negative; the cache's node populations agree
+    with the ledger's counters (refs>0 nodes == shared_blocks, refs==0
+    nodes == retained_blocks)
+  - eviction never frees a block an active sequence references (every
+    acquired node stays resident until its holder releases it)
+  - the resident set is prefix-closed (a node's parent chain is always
+    resident - leaf-only eviction)
+  - match lengths are block-aligned and capped below the full prompt
+
+The generators are plain seeded numpy rngs - no hypothesis dependency -
+and run >= 200 distinct interleavings (NUM_RUNS x OPS_PER_RUN ops).
+"""
+import numpy as np
+import pytest
+
+from repro.core.carbon import CarbonTrace
+from repro.serving.batching import BlockLedger, OutOfBlocks
+from repro.serving.prefix_cache import PrefixCache
+
+BS = 16
+NUM_RUNS = 220
+OPS_PER_RUN = 60
+
+
+def _chain(seed_tok, depth):
+    """A key chain like request_block_keys builds: h folds the parent."""
+    h = BS
+    keys = []
+    for i in range(depth):
+        h = hash((h, (seed_tok, i)))
+        keys.append(h)
+    return tuple(keys)
+
+
+def _keys_for(rng, sid):
+    """Random prompt keys: a shared group prefix + optional unique tail,
+    so interleavings hit heavy sharing AND divergence."""
+    group = int(rng.integers(3))
+    shared_depth = int(rng.integers(1, 7))
+    keys = list(_chain(("g", group), shared_depth))
+    tail = int(rng.integers(0, 4))
+    h = keys[-1]
+    for i in range(tail):
+        h = hash((h, ("u", sid, i)))
+        keys.append(h)
+    extra_tokens = int(rng.integers(0, BS))     # partial last block
+    prompt_len = len(keys) * BS + extra_tokens
+    return tuple(keys), prompt_len
+
+
+def _check_invariants(led, cache, live):
+    assert led.physical_free >= 0
+    assert (led.physical_free + led.used_blocks + led.shared_blocks
+            + led.retained_blocks == led.num_blocks), "conservation broke"
+    active = sum(1 for n in cache._nodes.values() if n.refs > 0)
+    retained = sum(1 for n in cache._nodes.values() if n.refs == 0)
+    assert all(n.refs >= 0 for n in cache._nodes.values())
+    assert active == led.shared_blocks
+    assert retained == led.retained_blocks
+    for sid in live:
+        for node in cache._acq.get(sid, []):
+            assert cache._nodes.get(node.key) is node, \
+                "evicted a block an active sequence references"
+    for node in cache._nodes.values():
+        assert node.parent is None \
+            or cache._nodes.get(node.parent.key) is node.parent, \
+            "resident set is not prefix-closed"
+
+
+def _run_interleaving(seed):
+    rng = np.random.default_rng((seed, 0x9EF1C))
+    num_blocks = int(rng.integers(24, 96))
+    led = BlockLedger(num_blocks, BS)
+    trace = CarbonTrace.step(10.0, 30.0, 500.0, horizon_s=1000.0)
+    cache = PrefixCache(led, BS, retain_frac=float(rng.uniform(0.2, 1.0)),
+                        ci_trace=trace)
+    live = {}          # sid -> (keys, kv_tokens)
+    next_sid = 0
+    for _ in range(OPS_PER_RUN):
+        cache.now_s = float(rng.uniform(0.0, 1000.0))
+        op = rng.random()
+        if op < 0.45 or not live:                       # admit
+            sid = next_sid
+            next_sid += 1
+            keys, prompt_len = _keys_for(rng, sid)
+            cap = (prompt_len - 1) // BS
+            hit = cache.match_blocks(keys, cap)
+            assert 0 <= hit <= min(cap, len(keys))
+            assert hit * BS <= prompt_len - 1
+            fresh = cache.fresh_cost(keys, hit)
+            take = prompt_len - hit * BS
+            need = led.blocks_needed(take)
+            if need + fresh > led.free_blocks:
+                continue                                 # admission refused
+            if hit:
+                cache.acquire(sid, keys, hit)
+            led.allocate(sid, take)
+            live[sid] = (keys, prompt_len)
+        elif op < 0.65:                                  # grow (decode)
+            sid = int(rng.choice(list(live)))
+            keys, kv = live[sid]
+            kv += int(rng.integers(1, 2 * BS))
+            try:
+                led.extend_to(sid, kv)
+                live[sid] = (keys, kv)
+            except OutOfBlocks:
+                pass                                     # growth stalled
+        elif op < 0.85:                                  # finish -> publish
+            sid = int(rng.choice(list(live)))
+            keys, _ = live.pop(sid)
+            cache.publish(sid, keys)
+            led.free(sid)
+        else:                                            # preempt -> release
+            sid = int(rng.choice(list(live)))
+            live.pop(sid)
+            cache.release(sid)
+            led.free(sid)
+        _check_invariants(led, cache, live)
+    # drain everything: all blocks end free or retained
+    for sid in sorted(live):
+        keys, _ = live.pop(sid)
+        cache.publish(sid, keys)
+        led.free(sid)
+        _check_invariants(led, cache, live)
+    assert led.used_blocks == 0 and led.shared_blocks == 0
+    assert led.physical_free + led.retained_blocks == led.num_blocks
+
+
+def test_interleavings_preserve_block_conservation():
+    for seed in range(NUM_RUNS):
+        _run_interleaving(seed)
+
+
+def test_reclaim_frees_retained_ahead_of_preemption():
+    """free_blocks counts retained blocks as schedulable: an allocation
+    that fits free+retained succeeds by evicting retained blocks, never
+    by failing (which would force the scheduler to preempt)."""
+    led = BlockLedger(8, BS)
+    cache = PrefixCache(led, BS, retain_frac=1.0)
+    keys = _chain(("g", 0), 6)
+    led.allocate(0, 6 * BS)
+    cache.publish(0, keys)
+    led.free(0)
+    assert led.retained_blocks == 6 and led.physical_free == 2
+    assert led.free_blocks == 8
+    led.allocate(1, 5 * BS)                    # needs 3 reclaimed blocks
+    assert led.physical_free == 0 and led.used_blocks == 5
+    assert led.retained_blocks == 3
+    assert cache.evictions == 3
+
+
+def test_eviction_is_lru_and_leaf_only():
+    led = BlockLedger(16, BS)
+    cache = PrefixCache(led, BS, retain_frac=1.0)
+    a = _chain(("g", 0), 3)
+    b = _chain(("g", 1), 2)
+    led.allocate(0, 3 * BS)
+    cache.publish(0, a)
+    led.free(0)
+    led.allocate(1, 2 * BS)
+    cache.publish(1, b)                        # b touched after a
+    led.free(1)
+    cache.reclaim(1)
+    # LRU leaf is a's deepest block, not any interior node
+    assert a[2] not in cache._nodes and a[1] in cache._nodes
+    assert set(b) <= set(cache._nodes)
+
+
+def test_carbon_cap_gates_retention():
+    """Dirty grid -> near-zero cap -> publish retains (almost) nothing;
+    green grid -> full retain_frac cap."""
+    trace = CarbonTrace.step(100.0, 50.0, 600.0, horizon_s=400.0,
+                             start_low=True)
+    led = BlockLedger(32, BS)
+    cache = PrefixCache(led, BS, retain_frac=0.5, ci_trace=trace)
+    cache.now_s = 50.0                         # green segment
+    assert cache.retention_cap() == 16
+    led.allocate(0, 8 * BS)
+    cache.publish(0, _chain(("g", 0), 8))
+    led.free(0)
+    assert led.retained_blocks == 8
+    cache.now_s = 150.0                        # dirty segment: cap 0
+    assert cache.retention_cap() == 0
+    led.allocate(1, 4 * BS)
+    cache.publish(1, _chain(("g", 1), 4))
+    led.free(1)
+    # a zero cap retains nothing new AND sheds the pre-existing retained
+    # population (publish ends in release -> _enforce_cap)
+    assert led.retained_blocks == 0
+    assert cache.match_blocks(_chain(("g", 0), 8), 8) == 0
+    cache.now_s = 250.0                        # green again: retention back
+    led.allocate(2, 4 * BS)
+    cache.publish(2, _chain(("g", 2), 4))
+    led.free(2)
+    assert led.retained_blocks == 4
+
+
+def test_refcount_underflow_raises():
+    led = BlockLedger(8, BS)
+    cache = PrefixCache(led, BS)
+    keys = _chain(("g", 0), 2)
+    led.allocate(0, 2 * BS)
+    cache.publish(0, keys)
+    led.free(0)
+    cache.acquire(1, keys, 2)
+    with pytest.raises(ValueError):
+        cache.acquire(1, keys, 2)              # double-acquire same sid
+    cache.release(1)
+    led._shared.pop(1, None)
+    cache.release(1)                           # idempotent no-op
