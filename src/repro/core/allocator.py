@@ -28,6 +28,7 @@ search - no external ILP dependency, deterministic for fixed inputs.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 from typing import Optional, Sequence
@@ -413,6 +414,7 @@ def build_gpu_info(
     window_s: float = 3600.0,
     batching: "BatchPolicy | str | None" = None,
     slo_class: Optional[str] = None,
+    calibration=None,
 ) -> dict[str, InstanceProfile]:
     """Profile every catalog config over the bucket grid (Mélange gpu_info).
 
@@ -435,7 +437,19 @@ def build_gpu_info(
     its instances hotter; tight keeps burst headroom). This is the
     per-class carbon headroom the priority scheduler then protects at
     serve time. None keeps the dataset targets and the 0.6 default
-    (identical to the pre-class profiles)."""
+    (identical to the pre-class profiles).
+
+    `include_idle` accounting: the fixed term charges idle power for the
+    whole reservation window, but the roofline step energies the profiles
+    sum ALSO include idle draw during busy seconds (P = idle + span*util).
+    To avoid double-charging, each request's dynamic energy is credited
+    idle_w x busy_s per chip - the profiles then rank by true
+    above-idle (marginal) energy under strict accounting.
+
+    `calibration` (a `perfmodel.Calibration`, artifact path, or True for
+    the committed artifact) evaluates every profile under the measured
+    roofline constants from `benchmarks/kernel_calibration.py` instead of
+    the literature defaults."""
     if utilization is None:
         utilization = SLO_CLASSES[slo_class].utilization \
             if slo_class is not None else 0.6
@@ -451,33 +465,46 @@ def build_gpu_info(
                                       tpot_slo_s=tpot)
     policy = resolve_batch_policy(batching, default=FLEET_BATCHING_DEFAULT)
     ci_val = resolve_ci(ci, 0.0, window_s)
+    from repro.serving import perfmodel
+
+    ctx = (perfmodel.calibrated(None if calibration is True else calibration)
+           if calibration else contextlib.nullcontext())
     out: dict[str, InstanceProfile] = {}
-    for cfg in catalog:
-        np_, no = buckets.shape
-        tputs, dyn = [], []
-        for i in range(np_):
-            trow, drow = [], []
-            for j in range(no):
-                pl, ol = buckets.rep_size(i, j)
-                if policy.kind == "continuous":
-                    qps, energy_j, _busy = _engine_profile_continuous(
-                        cfg, pl, ol, dataset, utilization, policy)
-                else:
-                    qps, energy_j, _busy = _engine_profile(
-                        cfg, pl, ol, dataset, utilization)
-                trow.append(qps)
-                drow.append(0.0 if math.isinf(energy_j)
-                            else energy_j / J_PER_KWH * ci_val)
-            tputs.append(tuple(trow))
-            dyn.append(tuple(drow))
-        out[cfg.name] = InstanceProfile(
-            name=cfg.name,
-            tputs=tuple(tputs),
-            carbon_fixed_g_per_hour=provisioned_carbon_g_per_hour(
-                cfg.mode.chips(), ci_val, include_idle=include_idle),
-            carbon_per_request_g=tuple(dyn),
-            chips=tuple(cfg.mode.chips()),
-        )
+    with ctx:
+        for cfg in catalog:
+            np_, no = buckets.shape
+            tputs, dyn = [], []
+            for i in range(np_):
+                trow, drow = [], []
+                for j in range(no):
+                    pl, ol = buckets.rep_size(i, j)
+                    if policy.kind == "continuous":
+                        qps, energy_j, busy = _engine_profile_continuous(
+                            cfg, pl, ol, dataset, utilization, policy)
+                    else:
+                        qps, energy_j, busy = _engine_profile(
+                            cfg, pl, ol, dataset, utilization)
+                    if include_idle and not math.isinf(energy_j):
+                        # idle power during busy seconds is already charged
+                        # by the whole-window fixed term; credit it so the
+                        # dynamic term is the marginal (above-idle) energy
+                        energy_j -= sum(
+                            CHIP_DB[cn].idle_power_w * t
+                            for cn, t in busy.items())
+                        energy_j = max(energy_j, 0.0)
+                    trow.append(qps)
+                    drow.append(0.0 if math.isinf(energy_j)
+                                else energy_j / J_PER_KWH * ci_val)
+                tputs.append(tuple(trow))
+                dyn.append(tuple(drow))
+            out[cfg.name] = InstanceProfile(
+                name=cfg.name,
+                tputs=tuple(tputs),
+                carbon_fixed_g_per_hour=provisioned_carbon_g_per_hour(
+                    cfg.mode.chips(), ci_val, include_idle=include_idle),
+                carbon_per_request_g=tuple(dyn),
+                chips=tuple(cfg.mode.chips()),
+            )
     return out
 
 

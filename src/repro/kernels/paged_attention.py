@@ -1,0 +1,284 @@
+"""Pallas TPU paged attention: gather-free decode + fused chunked prefill.
+
+Both kernels consume the serving layer's `PagedKVPool` storage DIRECTLY -
+one layer's (num_blocks + 1, KV, block_size, D) page arrays plus int32
+block tables - instead of a densified contiguous cache. The block-table
+indirection rides on `PrefetchScalarGridSpec`: tables arrive as
+scalar-prefetch arguments, and the K/V page BlockSpec *index maps* read
+them, so Mosaic streams exactly the physical pages each sequence owns
+HBM->VMEM and the O(B*S*L) gather/scatter round-trip of the dense engine
+path disappears.
+
+paged_decode_attention_grouped
+    One query token per sequence attends over its paged prefix. Grid
+    (B, KV, NB): each program owns one (batch, kv-head) pair and walks the
+    sequence's pages with online-softmax state for all G = H/KV grouped
+    query heads in VMEM scratch (the GQA reuse win, as in
+    decode_attention.py). The new token's K/V is NOT yet in the pool -
+    it is passed separately and merged into the running softmax in the
+    finalize step, so the pool write-back shrinks to one slot per layer
+    (`PagedKVPool.scatter_append`). Table rows are dump-padded; pages at
+    or past the ragged tail are skipped (`i * bs >= len`) and the tail
+    page's overhang is masked (`kpos < len`).
+
+paged_prefill_attention_fused
+    One prefill chunk (C tokens of a single sequence) attends over the
+    sequence's prior paged context AND itself causally - the hybrid
+    chunked-prefill step of the continuous scheduler. Grid (KV, NB + 1):
+    the first NB steps stream context pages (fully visible to every chunk
+    row, ragged tail masked); the final step merges the chunk's own K/V
+    with the causal intra-chunk mask and normalizes. Query rows are laid
+    out token-major per kv head ((C*G, D), row r is token r // G), so one
+    score matrix covers the whole grouped-query chunk.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def _paged_decode_kernel(
+    len_ref,                      # scalar-prefetch: (B,) cached lengths
+    tbl_ref,                      # scalar-prefetch: (B, NB) block tables
+    q_ref,                        # (1, 1, G, D)
+    kn_ref, vn_ref,               # (1, 1, 1, D) - the step's new K/V
+    k_ref, v_ref,                 # (1, 1, bs, D) - one physical page
+    o_ref,                        # (1, 1, G, D)
+    m_scr, l_scr, acc_scr,        # (G, 1), (G, 1), (G, D)
+    *,
+    block_size: int,
+    sm_scale: float,
+    nb: int,
+):
+    bi = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    cur = len_ref[bi]
+    # skip pages entirely past this sequence's cached prefix (dump-padded
+    # table rows land here: their pages are fetched but never read)
+    @pl.when(ik * block_size < cur)
+    def compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bs, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale                                   # (G, bs)
+        kpos = ik * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < cur, s, NEG_INF)          # ragged tail mask
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ik == nb - 1)
+    def finalize():
+        # merge the current token's self-attention term (its K/V is not in
+        # the pool yet - scatter_append writes it after the step)
+        q = q_ref[0, 0].astype(jnp.float32)            # (G, D)
+        kn = kn_ref[0, 0].astype(jnp.float32)          # (1, D)
+        vn = vn_ref[0, 0].astype(jnp.float32)
+        s_self = jax.lax.dot_general(
+            q, kn, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale                                    # (G, 1)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s_self)
+        p = jnp.exp(s_self - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l = l_scr[...] * alpha + p
+        acc = acc_scr[...] * alpha + p * vn
+        o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_grouped(
+    q: jax.Array,        # (B, KV, G, D) - query heads grouped by kv head
+    k_pages: jax.Array,  # (NBp, KV, bs, D) - ONE layer of the pool storage
+    v_pages: jax.Array,
+    tables: jax.Array,   # (B, NB) int32 physical page ids (dump-padded)
+    lengths: jax.Array,  # (B,) int32 cached tokens (new token sits at this index)
+    k_new: jax.Array,    # (B, KV, 1, D) - this step's K/V (post-RoPE)
+    v_new: jax.Array,
+    interpret: bool = False,
+) -> jax.Array:
+    b, kvh, g, d = q.shape
+    block_size = k_pages.shape[2]
+    nb = tables.shape[1]
+    assert nb >= 1, "tables must cover at least one page"
+
+    kernel = functools.partial(
+        _paged_decode_kernel, block_size=block_size, sm_scale=d ** -0.5, nb=nb
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, ik, lens, tbl: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, 1, d), lambda bi, hi, ik, lens, tbl: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, 1, d), lambda bi, hi, ik, lens, tbl: (bi, hi, 0, 0)),
+            # the paged-attention trick: the page index map READS the
+            # prefetched block table, so each grid step streams exactly
+            # the physical page tbl[bi, ik] for this sequence
+            pl.BlockSpec((1, 1, block_size, d),
+                         lambda bi, hi, ik, lens, tbl: (tbl[bi, ik], hi, 0, 0)),
+            pl.BlockSpec((1, 1, block_size, d),
+                         lambda bi, hi, ik, lens, tbl: (tbl[bi, ik], hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bi, hi, ik, lens, tbl: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), tables.astype(jnp.int32),
+      q, k_new, v_new, k_pages, v_pages)
+
+
+# ---------------------------------------------------------------------------
+# fused chunked prefill
+# ---------------------------------------------------------------------------
+def _paged_prefill_kernel(
+    ctx_ref,                      # scalar-prefetch: (1,) cached context length
+    tbl_ref,                      # scalar-prefetch: (NB,) block table
+    q_ref,                        # (1, CG, D) - chunk queries, token-major
+    ks_ref, vs_ref,               # (1, C, D)  - the chunk's own K/V
+    k_ref, v_ref,                 # (1, 1, bs, D) - one physical context page
+    o_ref,                        # (1, CG, D)
+    m_scr, l_scr, acc_scr,        # (CG, 1), (CG, 1), (CG, D)
+    *,
+    block_size: int,
+    sm_scale: float,
+    nb: int,
+    group: int,
+):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    ctx = ctx_ref[0]
+    # context pages: fully visible to every chunk row (they precede the
+    # chunk), ragged tail masked
+    @pl.when((ik < nb) & (ik * block_size < ctx))
+    def compute_ctx():
+        q = q_ref[0].astype(jnp.float32)               # (CG, D)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bs, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale                                    # (CG, bs)
+        kpos = ik * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < ctx, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ik == nb)
+    def finalize():
+        # intra-chunk causal self-attention: row r is token r // group,
+        # column c is chunk token c; visible iff c <= r // group
+        q = q_ref[0].astype(jnp.float32)               # (CG, D)
+        ks = ks_ref[0].astype(jnp.float32)             # (C, D)
+        vs = vs_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, ks, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale                                    # (CG, C)
+        row_tok = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+        col = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(col <= row_tok, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, vs, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        o_ref[0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "interpret"))
+def paged_prefill_attention_fused(
+    q: jax.Array,        # (KV, C*G, D) - token-major grouped queries
+    k_pages: jax.Array,  # (NBp, KV, bs, D) - ONE layer of the pool storage
+    v_pages: jax.Array,
+    table: jax.Array,    # (NB,) int32 physical page ids (dump-padded, NB >= 1)
+    ctx: jax.Array,      # () or (1,) int32 cached context tokens
+    k_self: jax.Array,   # (KV, C, D) - the chunk's own K/V (post-RoPE)
+    v_self: jax.Array,
+    group: int = 1,
+    interpret: bool = False,
+) -> jax.Array:
+    kvh, cg, d = q.shape
+    c = k_self.shape[1]
+    assert cg == c * group, (cg, c, group)
+    block_size = k_pages.shape[2]
+    nb = table.shape[0]
+    assert nb >= 1, "pass a dump-padded single-page table when ctx == 0"
+
+    kernel = functools.partial(
+        _paged_prefill_kernel, block_size=block_size, sm_scale=d ** -0.5,
+        nb=nb, group=group,
+    )
+    # page fetch on the final (self) step replays the last table entry;
+    # the body never reads it
+    page_ix = lambda hi, ik, ctx_r, tbl: (tbl[jnp.minimum(ik, nb - 1)], hi, 0, 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(kvh, nb + 1),
+        in_specs=[
+            pl.BlockSpec((1, cg, d), lambda hi, ik, ctx_r, tbl: (hi, 0, 0)),
+            pl.BlockSpec((1, c, d), lambda hi, ik, ctx_r, tbl: (hi, 0, 0)),
+            pl.BlockSpec((1, c, d), lambda hi, ik, ctx_r, tbl: (hi, 0, 0)),
+            pl.BlockSpec((1, 1, block_size, d), page_ix),
+            pl.BlockSpec((1, 1, block_size, d), page_ix),
+        ],
+        out_specs=pl.BlockSpec((1, cg, d), lambda hi, ik, ctx_r, tbl: (hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((cg, 1), jnp.float32),
+            pltpu.VMEM((cg, 1), jnp.float32),
+            pltpu.VMEM((cg, d), jnp.float32),
+        ],
+    )
+    ctx_arr = jnp.reshape(ctx, (1,)).astype(jnp.int32)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((kvh, cg, d), q.dtype),
+        interpret=interpret,
+    )(ctx_arr, table.astype(jnp.int32), q, k_self, v_self, k_pages, v_pages)

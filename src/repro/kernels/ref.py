@@ -44,6 +44,68 @@ def decode_attention_ref(q, k_cache, v_cache, pos):
     return o.astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, tables, lengths,
+                               k_new, v_new):
+    """q: (B, KV, G, D), pages: (NBp, KV, bs, D), tables: (B, NB) int32,
+    lengths: (B,) int32, k_new/v_new: (B, KV, 1, D) -> (B, KV, G, D).
+
+    Densify-then-softmax oracle for the paged decode kernel: gather every
+    table page contiguous, write the new token at its `lengths` slot, and
+    run one full masked softmax (self token included: kpos <= lengths).
+    Requires NB * bs > max(lengths) so the new token has a slot."""
+    b, kvh, g, d = q.shape
+    nb, bs = tables.shape[1], k_pages.shape[2]
+
+    def densify(pages):
+        got = pages[tables]                            # (B, NB, KV, bs, D)
+        return jnp.moveaxis(got, 2, 1).reshape(b, kvh, nb * bs, d)
+
+    def write(cache, new, p):
+        return jax.lax.dynamic_update_slice(cache, new, (0, p, 0))
+
+    kc = jax.vmap(write)(densify(k_pages), k_new, lengths)
+    vc = jax.vmap(write)(densify(v_pages), v_new, lengths)
+    scores = jnp.einsum(
+        "bqgd,bqtd->bqgt", q.astype(jnp.float32), kc.astype(jnp.float32)
+    ) * (d ** -0.5)
+    mask = jnp.arange(nb * bs)[None, :] <= lengths[:, None]
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bqgt,bqtd->bqgd", p, vc.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def paged_prefill_attention_ref(q, k_pages, v_pages, table, ctx,
+                                k_self, v_self, group: int = 1):
+    """q: (KV, C*G, D) token-major (row r is token r // G), pages:
+    (NBp, KV, bs, D), table: (NB,) int32, ctx: scalar cached tokens,
+    k_self/v_self: (KV, C, D) -> (KV, C*G, D).
+
+    One chunk of a single sequence attends over its cached paged context
+    (first `ctx` of the table's NB * bs slots) plus itself causally."""
+    kvh, cg, d = q.shape
+    c = k_self.shape[1]
+    nb, bs = table.shape[0], k_pages.shape[2]
+
+    def densify(pages):
+        got = pages[table]                             # (NB, KV, bs, D)
+        return jnp.moveaxis(got, 1, 0).reshape(kvh, nb * bs, d)
+
+    kc = jnp.concatenate([densify(k_pages), k_self], axis=1)
+    vc = jnp.concatenate([densify(v_pages), v_self], axis=1)
+    scores = jnp.einsum(
+        "qrd,qtd->qrt", q.astype(jnp.float32), kc.astype(jnp.float32)
+    ) * (d ** -0.5)
+    col = jnp.arange(nb * bs + c)[None, :]
+    row_tok = jnp.arange(cg)[:, None] // group
+    visible = jnp.where(col < nb * bs, col < ctx,       # context: ragged tail
+                        col - nb * bs <= row_tok)       # chunk: causal
+    scores = jnp.where(visible[None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("qrt,qtd->qrd", p, vc.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
 def rwkv6_wkv_ref(r, k, v, logw, u, state0):
     """Per-token WKV6 recurrence. All (B, H, T, N); u (H, N); s0 (B,H,N,N)."""
     rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))

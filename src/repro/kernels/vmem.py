@@ -57,6 +57,33 @@ def decode_attention_vmem(group: int, block_k: int, head_dim: int,
     return VmemEstimate(q + kv + out + scores, scratch)
 
 
+def paged_decode_vmem(group: int, block_size: int, head_dim: int,
+                      dtype_bytes: int = 2) -> VmemEstimate:
+    """Paged decode: per-program working set is one (batch, kv-head) pair's
+    G query rows + one streamed physical page + the step's new K/V."""
+    q = group * head_dim * dtype_bytes
+    kv = 2 * STREAM_COPIES * block_size * head_dim * dtype_bytes
+    new = 2 * head_dim * dtype_bytes
+    out = group * head_dim * dtype_bytes
+    scratch = (2 * group + group * head_dim) * 4              # m, l, acc fp32
+    scores = group * block_size * 4
+    return VmemEstimate(q + kv + new + out + scores, scratch)
+
+
+def paged_prefill_vmem(rows: int, chunk: int, block_size: int, head_dim: int,
+                       dtype_bytes: int = 2) -> VmemEstimate:
+    """Fused chunked prefill: `rows` = chunk_tokens * group query rows per
+    kv head stay resident; context pages stream; the chunk's own K/V
+    (`chunk` tokens) is held whole for the causal self step."""
+    q = rows * head_dim * dtype_bytes
+    kv = 2 * STREAM_COPIES * block_size * head_dim * dtype_bytes
+    self_kv = 2 * chunk * head_dim * dtype_bytes
+    out = rows * head_dim * dtype_bytes
+    scratch = (2 * rows + rows * head_dim) * 4
+    scores = rows * max(block_size, chunk) * 4
+    return VmemEstimate(q + kv + self_kv + out + scores, scratch)
+
+
 def rwkv6_vmem(chunk: int, n: int) -> VmemEstimate:
     tiles = 4 * STREAM_COPIES * chunk * n * 4 + chunk * n * 4  # r/k/v/w in, y out
     tiles += n * 4 + n * n * 4                                 # u, s0

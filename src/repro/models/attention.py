@@ -140,6 +140,13 @@ def decode_attention(
     g = h // kvh
     qh = q[:, 0].reshape(b, kvh, g, d)
     scores = jnp.einsum("bqgd,bqtd->bqgt", qh, k_cache).astype(jnp.float32) * (d ** -0.5)
+    # Ragged-length mask: the cache is padded to the batch max (S_max), so
+    # for every sequence shorter than S_max the tail slots hold arbitrary
+    # *finite* garbage (stale tokens, zeros, or - on the paged path - the
+    # pool's dump block). This mask is the ONLY thing excluding those slots:
+    # NEG_INF substitution before the softmax drives their probability to
+    # exactly 0.0 regardless of content. Garbage must stay finite (never
+    # NaN): 0.0 * NaN = NaN would still poison the value einsum below.
     mask = jnp.arange(smax)[None, :] <= pos[:, None]              # (B, S)
     scores = jnp.where(mask[:, None, None], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
@@ -242,3 +249,72 @@ def attention_decode_block(
     v_cache = jax.vmap(write)(v_cache, v.transpose(0, 2, 1, 3), pos)
     o = decode_attention(q, k_cache, v_cache, pos, exec_cfg)
     return o.reshape(b, 1, -1) @ p["wo"], k_cache, v_cache
+
+
+def attention_paged_decode_block(
+    p: dict,
+    x: jax.Array,             # (B, 1, D_model)
+    k_pages: jax.Array,       # (NBp, KV, bs, D) - one pool layer
+    v_pages: jax.Array,
+    tables: jax.Array,        # (B, NB) int32 dump-padded block tables
+    lengths: jax.Array,       # (B,) cached tokens (new token's position)
+    positions_rope: jax.Array,  # (B, 1)
+    cfg: ModelConfig,
+    exec_cfg: ExecConfig = DEFAULT_EXEC,
+    max_len: int = 0,
+    impl: str = "auto",
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Gather-free decode step against PagedKVPool storage.
+
+    The dense path (`attention_decode_block`) needs the engine to gather
+    each sequence's pages into a contiguous (B, KV, S_max, D) cache first;
+    this variant hands the pool's page array + block tables straight to
+    `kops.paged_decode_attention`, and returns the step's own (k, v) for
+    the caller to `scatter_append` into the pool. m-RoPE is unsupported
+    (the engine gates VLM families to the gather path)."""
+    a = cfg.attn
+    assert a.m_rope_sections is None, "paged decode does not support m-rope"
+    b = x.shape[0]
+    q = (x @ p["wq"]).reshape(b, 1, a.num_heads, a.head_dim)
+    k = (x @ p["wk"]).reshape(b, 1, a.num_kv_heads, a.head_dim)
+    v = (x @ p["wv"]).reshape(b, 1, a.num_kv_heads, a.head_dim)
+    sin, cos = rope_angles(positions_rope, a.head_dim, a.rope_theta, None)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    from repro.kernels import ops as kops
+
+    o = kops.paged_decode_attention(
+        q, k_pages, v_pages, tables, lengths, k, v, max_len=max_len, impl=impl)
+    return o.reshape(b, 1, -1) @ p["wo"], k, v
+
+
+def attention_paged_chunk_block(
+    p: dict,
+    x: jax.Array,             # (1, C, D_model) - one sequence's chunk
+    k_pages: jax.Array,       # (NBp, KV, bs, D) - one pool layer
+    v_pages: jax.Array,
+    table: jax.Array,         # (NB,) int32 block table covering ctx0 tokens
+    ctx0: int,                # static: cached tokens before this chunk
+    cfg: ModelConfig,
+    exec_cfg: ExecConfig = DEFAULT_EXEC,
+    impl: str = "auto",
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused chunked prefill: C new tokens of one sequence attend over the
+    sequence's paged cached context plus themselves (causal), without the
+    engine re-running the backbone over the whole prefix. Returns
+    (out, k, v) with k/v (1, C, KV, D) for `scatter_chunk`."""
+    a = cfg.attn
+    assert a.m_rope_sections is None, "paged prefill does not support m-rope"
+    _, c, _ = x.shape
+    q = (x @ p["wq"]).reshape(1, c, a.num_heads, a.head_dim)
+    k = (x @ p["wk"]).reshape(1, c, a.num_kv_heads, a.head_dim)
+    v = (x @ p["wv"]).reshape(1, c, a.num_kv_heads, a.head_dim)
+    positions = ctx0 + jnp.arange(c, dtype=jnp.int32)[None, :]    # (1, C)
+    sin, cos = rope_angles(positions, a.head_dim, a.rope_theta, None)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    from repro.kernels import ops as kops
+
+    o = kops.paged_prefill_attention(q, k_pages, v_pages, table, ctx0, k, v,
+                                     impl=impl)
+    return o.reshape(1, c, -1) @ p["wo"], k, v

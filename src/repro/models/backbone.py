@@ -29,6 +29,8 @@ from repro.models import mamba2, rwkv6
 from repro.models.attention import (
     attention_block,
     attention_decode_block,
+    attention_paged_chunk_block,
+    attention_paged_decode_block,
     init_attention,
 )
 from repro.models.config import ModelConfig
@@ -444,6 +446,85 @@ def serve_step(params: Params, cache: Cache, tokens: jax.Array, cfg: ModelConfig
     xn = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = lm_logits(params["tok"], xn, cfg)[:, 0]
     return logits, newc
+
+
+def serve_step_paged(params: Params, pages_k: jax.Array, pages_v: jax.Array,
+                     tables: jax.Array, lengths: jax.Array, tokens: jax.Array,
+                     cfg: ModelConfig, exec_cfg: ExecConfig = DEFAULT_EXEC,
+                     max_len: int = 0, impl: str = "auto",
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One gather-free decode step straight off PagedKVPool storage.
+
+    pages_k/pages_v: (L, NBp, KV, bs, D) - the pool's full page arrays;
+    tables: (B, NB) int32 dump-padded block tables; lengths: (B,) cached
+    tokens per sequence; tokens: (B,) int32; max_len: static batch-max
+    length including the new token. Returns (logits (B, V),
+    k_tok (L, B, KV, D), v_tok) - the step's own K/V for `scatter_append`.
+
+    The layer body is operation-for-operation `_attn_layer_step`, with the
+    gather-then-update cache replaced by the paged attention op; on CPU
+    (impl="jnp") the logits are bit-identical to `serve_step` over the
+    gathered cache. Dense + MoE families only (decode feeds all B tokens
+    through MoE as one group either way, so MoE capacity routing is
+    unaffected; recurrent/vlm families keep the gather path)."""
+    assert cfg.family in ("dense", "moe"), cfg.family
+    b = tokens.shape[0]
+    x = embed_tokens(params["tok"], tokens)[:, None, :]            # (B, 1, D)
+    prope = lengths[:, None].astype(jnp.int32)                     # (B, 1)
+
+    def body(xc, inp):
+        lp, kp, vp = inp
+        h, kt, vt = attention_paged_decode_block(
+            lp["attn"], rmsnorm(lp["norm1"], xc, cfg.norm_eps), kp, vp,
+            tables, lengths, prope, cfg, exec_cfg, max_len=max_len, impl=impl)
+        xc = xc + h
+        xn = rmsnorm(lp["norm2"], xc, cfg.norm_eps)
+        if cfg.family == "moe":
+            xc = xc + moe_ffn(lp["moe"], xn, cfg, exec_cfg)
+        else:
+            xc = xc + swiglu(lp["ffn"], xn)
+        return xc, (kt, vt)
+
+    x, (kt, vt) = jax.lax.scan(body, x, (params["layers"], pages_k, pages_v))
+    xn = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits(params["tok"], xn, cfg)[:, 0]
+    return logits, kt[:, :, 0], vt[:, :, 0]                        # (L, B, KV, D)
+
+
+def prefill_chunk_paged(params: Params, pages_k: jax.Array, pages_v: jax.Array,
+                        table: jax.Array, ctx0: int, tokens: jax.Array,
+                        cfg: ModelConfig, exec_cfg: ExecConfig = DEFAULT_EXEC,
+                        impl: str = "auto",
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Incremental chunked prefill of ONE sequence against its paged context.
+
+    Processes `tokens` (C,) at positions [ctx0, ctx0 + C) attending over the
+    sequence's ctx0 cached tokens (via `table` (NB,)) plus itself causally -
+    the whole-prefix recompute the engine's dense `_chunk_prefill` does is
+    skipped. Returns (last_logits (1, V), k_c (L, KV, C, D), v_c) for
+    `scatter_chunk`.
+
+    Dense family only: MoE capacity routing drops tokens per *group*, so an
+    MoE chunk processed alone routes differently than inside the full
+    prefix - incremental results would diverge from the recompute path."""
+    assert cfg.family == "dense", cfg.family
+    c = tokens.shape[0]
+    x = embed_tokens(params["tok"], tokens[None, :])               # (1, C, D)
+
+    def body(xc, inp):
+        lp, kp, vp = inp
+        h, kt, vt = attention_paged_chunk_block(
+            lp["attn"], rmsnorm(lp["norm1"], xc, cfg.norm_eps), kp, vp,
+            table, ctx0, cfg, exec_cfg, impl=impl)
+        xc = xc + h
+        xc = xc + swiglu(lp["ffn"], rmsnorm(lp["norm2"], xc, cfg.norm_eps))
+        return xc, (kt, vt)
+
+    x, (kt, vt) = jax.lax.scan(body, x, (params["layers"], pages_k, pages_v))
+    xn = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = lm_logits(params["tok"], xn, cfg)[:, 0]
+    # kt: (L, 1, C, KV, D) -> (L, KV, C, D) for scatter_chunk
+    return logits, kt[:, 0].transpose(0, 2, 1, 3), vt[:, 0].transpose(0, 2, 1, 3)
 
 
 def extend_step(params: Params, cache: Cache, tokens: jax.Array, cfg: ModelConfig,

@@ -115,6 +115,7 @@ class ServingEngine:
         exec_cfg: ExecConfig = DEFAULT_EXEC,
         batching: "BatchPolicy | str | None" = None,
         ci_trace=None,
+        paged: "bool | str" = "auto",
     ):
         if kind in ("spec", "dsd"):
             assert draft_cfg is not None and draft_params is not None
@@ -147,6 +148,25 @@ class ServingEngine:
         self.new_chip = CHIP_DB[new_chip]
         self.old_chip = CHIP_DB[old_chip] if old_chip else None
         self.interconnect = interconnect
+
+        # paged (gather-free) hot path: decode steps read the pool's page
+        # arrays through block tables (kernels/paged_attention.py) instead
+        # of gathering each sequence contiguous first, and chunked prefill
+        # runs incrementally against the paged context. Spec rounds keep
+        # the gather path (the extend/rollback contract needs a contiguous
+        # window); recurrent/vlm families have no paged attention.
+        # paged="auto" follows exec_cfg.use_kernels; True/False force it.
+        fam_ok = (target_cfg.family in ("dense", "moe")
+                  and target_cfg.attn is not None
+                  and target_cfg.attn.m_rope_sections is None)
+        if paged == "auto":
+            self.paged = bool(exec_cfg.use_kernels) and fam_ok
+        else:
+            self.paged = bool(paged)
+            if self.paged and not fam_ok:
+                raise ValueError(
+                    f"paged attention unsupported for family="
+                    f"{target_cfg.family!r} (needs dense/moe, no m-rope)")
 
         self.pool = PagedKVPool(target_cfg, pool_blocks, block_size,
                                 dtype=jnp.dtype(target_cfg.dtype))
@@ -318,13 +338,39 @@ class ServingEngine:
         for sid, ln in zip(sids, lengths):
             pool.seq(sid).length = int(ln)
 
+    def _decode_logits(self, pool: PagedKVPool, sids: list[int],
+                       tokens: jax.Array) -> jax.Array:
+        """One batched decode forward, advancing each sequence by 1.
+
+        Paged: hand the pool's page arrays + block tables straight to
+        `serve_step_paged` and `scatter_append` only the new token - no
+        gather, no full-cache scatter. Dense: gather each sequence
+        contiguous, run `serve_step`, scatter the whole cache back. On
+        CPU both produce bit-identical logits (the paged jnp twin mirrors
+        the dense math op-for-op - kernels/ops.py)."""
+        if self.paged:
+            old = [pool.seq(s).length for s in sids]
+            for s in sids:
+                pool.extend(s, 1)
+            max_len = max(old) + 1
+            tables = pool.device_tables(sids, pool.blocks_needed(max_len))
+            logits, kt, vt = backbone.serve_step_paged(
+                self.params, pool.k, pool.v, tables,
+                jnp.asarray(old, jnp.int32), tokens, self.cfg,
+                self.exec_cfg, max_len=max_len)
+            pool.scatter_append(sids, kt, vt, old)
+            return logits
+        cache = self._gather(pool, sids, 1)
+        logits, cache = backbone.serve_step(self.params, cache, tokens,
+                                            self.cfg, self.exec_cfg)
+        self._commit(pool, sids, cache, np.asarray(cache["pos"]))
+        return logits
+
     def _do_decode_step(self) -> None:
         sids = sorted(self.active)
-        cache = self._gather(self.pool, sids, 1)
         tokens = jnp.asarray([self.last_token[s] for s in sids], jnp.int32)
-        logits, cache = backbone.serve_step(self.params, cache, tokens, self.cfg, self.exec_cfg)
+        logits = self._decode_logits(self.pool, sids, tokens)
         new = np.asarray(self._sample(logits))
-        self._commit(self.pool, sids, cache, np.asarray(cache["pos"]))
         ctx = int(np.mean([self.pool.seq(s).length for s in sids]))
         chip = self.old_chip if self.kind == "dpd" else self.new_chip
         self.clock += self._charge(chip, decode_cost(self.cfg, chip, len(sids), ctx))
@@ -458,7 +504,20 @@ class ServingEngine:
         and the *priced* cost is the chunk's (costs.hybrid_step_charges) -
         with a prefix-cache match, the matched tokens never appear in any
         chunk, so they are priced as cached context (per-block KV
-        re-reads), not prefill."""
+        re-reads), not prefill.
+
+        Paged mode replaces the whole-prefix recompute with a true
+        incremental pass (`prefill_chunk_paged`): only the new chunk runs
+        through the backbone, attending over the sequence's paged cached
+        context - including ADOPTED prefix-cache blocks, which are read in
+        place instead of recomputed. Dense family only: MoE capacity
+        routing is per-group, so an incrementally processed chunk would
+        route differently than inside the full prefix."""
+        if self.paged and cfg.family == "dense":
+            ctx0 = pool.seq(sid).length if pool.has(sid) else 0
+            if 0 <= ctx0 < len(prefix):
+                return self._chunk_prefill_paged(params, cfg, pool, sid,
+                                                 prefix, fresh, ctx0)
         batch = {"tokens": jnp.asarray(prefix)[None, :]}
         logits, cache = backbone.prefill(params, batch, cfg, self.exec_cfg)
         if fresh:
@@ -469,6 +528,25 @@ class ServingEngine:
             pool.scatter_suffix(sid, cache["k"], cache["v"], shared_tok)
         else:
             pool.scatter([sid], cache["k"], cache["v"])
+        return logits
+
+    def _chunk_prefill_paged(self, params, cfg, pool: PagedKVPool, sid: int,
+                             prefix: np.ndarray, fresh: bool, ctx0: int):
+        """Incremental chunk prefill: run only prefix[ctx0:] through the
+        backbone against the sequence's paged context, `scatter_chunk` the
+        new KV at token granularity. ctx0 is the pool-resident token count
+        (= shared_tok on an adopted sequence's first chunk; adopted blocks
+        are full and block-aligned, so the first write never touches a
+        shared block)."""
+        chunk = jnp.asarray(np.asarray(prefix[ctx0:], np.int32))
+        if fresh:
+            pool.allocate(sid, len(prefix))
+        else:
+            pool.extend(sid, len(prefix) - ctx0)
+        table = pool.device_tables([sid], max(pool.blocks_needed(ctx0), 1))[0]
+        logits, kc, vc = backbone.prefill_chunk_paged(
+            params, pool.k, pool.v, table, ctx0, chunk, cfg, self.exec_cfg)
+        pool.scatter_chunk(sid, kc, vc, ctx0)
         return logits
 
     def _retire_continuous(self, seq: SchedSeq, pool_b: bool = False) -> None:
@@ -560,12 +638,9 @@ class ServingEngine:
                            t_end: float) -> None:
         sched = self._sched
         sids = [s.sid for s in decodes]
-        cache = self._gather(self.pool, sids, 1)
         tokens = jnp.asarray([self.last_token[s] for s in sids], jnp.int32)
-        logits, cache = backbone.serve_step(self.params, cache, tokens,
-                                            self.cfg, self.exec_cfg)
+        logits = self._decode_logits(self.pool, sids, tokens)
         new = np.asarray(self._sample(logits))
-        self._commit(self.pool, sids, cache, np.asarray(cache["pos"]))
         for seq, tok in zip(decodes, new):
             r: EngineRequest = seq.payload
             r.out_tokens.append(int(tok))
@@ -734,12 +809,9 @@ class ServingEngine:
             return
         sids = [s.sid for s in stepping]
         ctxs = tuple(s.ctx for s in stepping)
-        cache = self._gather(self.pool, sids, 1)
         tokens = jnp.asarray([self.last_token[s] for s in sids], jnp.int32)
-        logits, cache = backbone.serve_step(self.params, cache, tokens,
-                                            self.cfg, self.exec_cfg)
+        logits = self._decode_logits(self.pool, sids, tokens)
         new = np.asarray(self._sample(logits))
-        self._commit(self.pool, sids, cache, np.asarray(cache["pos"]))
         hs = hybrid_step_charges(
             "dpd", self.cfg, None, self.new_chip, self.old_chip,
             (), ctxs, 0, self.interconnect)

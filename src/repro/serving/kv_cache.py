@@ -1,14 +1,28 @@
 """Paged KV-cache pool with block tables (vLLM-style, TPU-adapted).
 
-The pool owns (num_layers, num_blocks, kv_heads, block_size, head_dim)
-K and V arrays; sequences hold block tables (lists of block ids). The
-real-compute engine gathers a sequence batch's blocks into the contiguous
-(L, B, KV, S, D) layout the model's serve_step / the Pallas decode kernel
-expect, and scatters updated blocks back after each iteration.
+The pool owns (num_layers, num_blocks + 1, kv_heads, block_size, head_dim)
+K and V arrays; sequences hold block tables (lists of block ids). Two
+execution paths consume it:
 
-On TPU the gather/scatter is the block-table indirection a paged-attention
-kernel would do inline; here it doubles as the allocator realism for the
-serving layer (admission control, fragmentation-free alloc/free).
+  dense (legacy): the engine gathers a sequence batch's blocks into the
+  contiguous (L, B, KV, S, D) layout the model's serve_step expects and
+  scatters updated blocks back after each iteration - an O(B*S*L) HBM
+  round-trip per decode token.
+
+  paged (kernels/paged_attention.py): the engine hands the kernel the
+  storage + `device_tables` + per-seq lengths directly; only the new
+  token's K/V comes back, written block-granularly via `scatter_append`
+  (decode) / `scatter_chunk` (chunked prefill). No densification.
+
+Padding semantics: block tables of a ragged batch are padded to the
+widest row with the DUMP block (physical index `num_blocks`, the +1 slot
+above) - a write-off page no sequence ever owns. Gathers of padded rows
+therefore return arbitrary-but-finite dump contents past a sequence's
+blocks, and the ragged-length mask in models/attention.py (scores ->
+NEG_INF where kpos > pos) is what makes them unobservable; scatters of
+padded rows land harmlessly in the dump block. (Zero-padding tables,
+the previous scheme, aliased physical block 0: a batched scatter would
+issue duplicate-index writes against a block a live sequence owned.)
 """
 from __future__ import annotations
 
@@ -42,11 +56,17 @@ class PagedKVPool:
         self.cfg = cfg
         self.block_size = block_size
         self.num_blocks = num_blocks
-        shape = (cfg.num_attn_layers, num_blocks, a.num_kv_heads, block_size, a.head_dim)
+        # +1: the DUMP block (index num_blocks) that padded table rows
+        # point at - see the module docstring's padding semantics
+        shape = (cfg.num_attn_layers, num_blocks + 1, a.num_kv_heads, block_size, a.head_dim)
         self.k = jnp.zeros(shape, dtype)
         self.v = jnp.zeros(shape, dtype)
         self._free: list[int] = list(range(num_blocks))
         self._seqs: dict[int, SeqAlloc] = {}
+        # instrumentation: how many times the dense densification path ran
+        # (the paged-kernel engine path must keep this at zero - the
+        # gather-free acceptance check in tests/test_paged_engine.py)
+        self.gather_calls = 0
         # per-block reference counts (prefix sharing): a block popped off
         # the free list starts at 1; `free`/`deref_block` decrement and
         # only a 0 count returns the block to the free list, so a prompt
@@ -136,15 +156,29 @@ class PagedKVPool:
         return self._refs.get(block_id, 0)
 
     # ---------------- gather / scatter ----------------
+    @property
+    def dump_block(self) -> int:
+        """Physical index of the write-off page padded table rows use."""
+        return self.num_blocks
+
     def _tables(self, seq_ids: list[int], pad_blocks: int) -> np.ndarray:
-        tables = np.zeros((len(seq_ids), pad_blocks), np.int32)
+        tables = np.full((len(seq_ids), pad_blocks), self.dump_block, np.int32)
         for i, sid in enumerate(seq_ids):
             bt = self._seqs[sid].block_table
-            tables[i, : len(bt)] = bt
+            tables[i, : min(len(bt), pad_blocks)] = bt[:pad_blocks]
         return tables
+
+    def host_tables(self, seq_ids: list[int], pad_blocks: int) -> np.ndarray:
+        """(B, pad_blocks) int32 block tables, dump-padded past each row."""
+        return self._tables(seq_ids, pad_blocks)
+
+    def device_tables(self, seq_ids: list[int], pad_blocks: int) -> jax.Array:
+        """Device-resident block tables for the paged attention kernels."""
+        return jnp.asarray(self._tables(seq_ids, pad_blocks))
 
     def gather(self, seq_ids: list[int], max_len: int):
         """Materialize (L, B, KV, max_len, D) contiguous caches for a batch."""
+        self.gather_calls += 1
         nb = self.blocks_needed(max_len)
         tables = jnp.asarray(self._tables(seq_ids, nb))            # (B, nb)
         def g(store):
@@ -198,3 +232,60 @@ class PagedKVPool:
             return jnp.moveaxis(x, 2, 3)                        # (L,1,nb',KV,bs,D)
         self.k = self.k.at[:, tables].set(form(k))
         self.v = self.v.at[:, tables].set(form(v))
+
+    # ---------------- paged (gather-free) write paths ----------------
+    def _slots(self, seq_id: int, start_tok: int, n: int):
+        """Physical (block, offset) pairs for tokens [start, start+n)."""
+        bt = np.asarray(self._seqs[seq_id].block_table, np.int32)
+        toks = np.arange(start_tok, start_tok + n)
+        return bt[toks // self.block_size], (toks % self.block_size).astype(np.int32)
+
+    def scatter_append(self, seq_ids: list[int], k_tok: jax.Array,
+                       v_tok: jax.Array, positions: np.ndarray) -> None:
+        """Write ONE new token per sequence at its `positions[i]` slot.
+
+        k_tok/v_tok: (L, B, KV, D) - the decode step's per-layer K/V for
+        the batch. This is the paged decode write-back: O(B*L) slots
+        touched instead of the dense path's full (L, B, KV, S, D)
+        re-scatter. Each target slot lives in the sequence's exclusively
+        owned tail block (shared/adopted prefix blocks are full and
+        block-aligned, and `positions` >= the shared token count), so no
+        two rows ever alias a slot."""
+        bids = np.empty(len(seq_ids), np.int32)
+        offs = np.empty(len(seq_ids), np.int32)
+        for i, (sid, p) in enumerate(zip(seq_ids, positions)):
+            p = int(p)
+            bids[i] = self._seqs[sid].block_table[p // self.block_size]
+            offs[i] = p % self.block_size
+        self.k, self.v = _append_slots(self.k, self.v, k_tok, v_tok,
+                                       jnp.asarray(bids), jnp.asarray(offs))
+
+    def scatter_chunk(self, seq_id: int, k_c: jax.Array, v_c: jax.Array,
+                      start_tok: int) -> None:
+        """Write one prefill chunk's K/V (L, KV, C, D) at token-granular
+        slots [start_tok, start_tok + C) of one sequence.
+
+        Unlike `scatter_suffix` this needs NO block alignment: the chunk
+        may begin mid-block of a partially filled tail block. All target
+        slots are strictly past any adopted (shared) prefix - chunks only
+        ever cover unmatched tokens - so the write never touches a block
+        another holder references."""
+        c = k_c.shape[2]
+        bids, offs = self._slots(seq_id, start_tok, c)
+        self.k, self.v = _append_slots(
+            self.k, self.v,
+            k_c.transpose(0, 2, 1, 3), v_c.transpose(0, 2, 1, 3),  # (L,C,KV,D)
+            jnp.asarray(bids), jnp.asarray(offs))
+
+
+def _append_slots_impl(k, v, k_new, v_new, bids, offs):
+    """Scatter (L, N, KV, D) values into N (block, offset) slots of the
+    (L, NB+1, KV, bs, D) stores. jit'd with donated stores so XLA updates
+    the pool buffers in place instead of copying them per decode step."""
+    vals_k = k_new.transpose(1, 0, 2, 3)      # advanced axes lead: (N, L, KV, D)
+    vals_v = v_new.transpose(1, 0, 2, 3)
+    return (k.at[:, bids, :, offs].set(vals_k.astype(k.dtype)),
+            v.at[:, bids, :, offs].set(vals_v.astype(v.dtype)))
+
+
+_append_slots = jax.jit(_append_slots_impl, donate_argnums=(0, 1))

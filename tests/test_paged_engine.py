@@ -1,0 +1,175 @@
+"""Engine-level paged fast path: greedy token streams must be IDENTICAL
+dense-vs-paged on every serving kind, the paged decode hot path must be
+gather-free, and garbage in unwritten pool slots must be unobservable.
+
+Kinds are split across test functions and jit caches cleared between
+them: a single process compiling every engine variant at once exhausts
+the CI runner's memory.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.models import backbone
+from repro.models.layers import ExecConfig
+from repro.serving.batching import BatchPolicy
+from repro.serving.engine import ServingEngine
+
+pytestmark = pytest.mark.slow  # long engine-equivalence runs (CI tier1)
+
+CFG = get_reduced_config("yi-6b", num_layers=2)
+DCFG = get_reduced_config("llama-300m", num_layers=2)
+CONTINUOUS = BatchPolicy(kind="continuous", chunk_tokens=16, block_size=8)
+
+
+@pytest.fixture(autouse=True)
+def _clear_jit_caches():
+    yield
+    jax.clear_caches()
+
+
+@pytest.fixture(scope="module")
+def params():
+    return {
+        "target": backbone.init_params(jax.random.PRNGKey(0), CFG),
+        "draft": backbone.init_params(jax.random.PRNGKey(1), DCFG),
+    }
+
+
+def _prompts():
+    rng = np.random.default_rng(3)
+    # ragged on purpose: mid-block, multi-block, block-aligned+1 lengths
+    return [list(rng.integers(1, 400, size=n)) for n in (5, 19, 33, 12)]
+
+
+def _run(params, kind, paged, policy, poison=False, **extra):
+    kw = {}
+    if kind in ("spec", "dsd"):
+        kw = dict(draft_cfg=DCFG, draft_params=params["draft"],
+                  old_chip="t4")
+    if kind == "dpd":
+        kw = dict(old_chip="t4")
+    kw.update(extra)
+    eng = ServingEngine(CFG, params["target"], kind=kind, temperature=0.0,
+                        seed=0, block_size=8, pool_blocks=128,
+                        batching=policy, paged=paged, **kw)
+    if poison:
+        # large-but-finite garbage in EVERY pool slot (incl. the dump
+        # block); prefill overwrites owned slots, masks must hide the rest
+        for pool in filter(None, [getattr(eng, "pool", None),
+                                  getattr(eng, "draft_pool", None)]):
+            pool.k = jnp.full_like(pool.k, 1e4)
+            pool.v = jnp.full_like(pool.v, -1e4)
+    for i, p in enumerate(_prompts()):
+        eng.submit(p, 6, arrival_s=0.05 * i)
+    done = eng.run_until_idle()
+    return {r.req_id: list(r.out_tokens) for r in done}, eng
+
+
+@pytest.mark.parametrize("policy", ["serialized", CONTINUOUS],
+                         ids=["serialized", "continuous"])
+def test_standalone_paged_token_identical(params, policy):
+    dense, _ = _run(params, "standalone", False, policy)
+    paged, eng = _run(params, "standalone", True, policy)
+    assert dense == paged
+    assert eng.pool.gather_calls == 0, "paged decode must be gather-free"
+
+
+def test_spec_paged_token_identical(params):
+    dense, _ = _run(params, "spec", False, "serialized")
+    paged, _ = _run(params, "spec", True, "serialized")
+    assert dense == paged
+
+
+def test_dsd_paged_token_identical(params):
+    dense, _ = _run(params, "dsd", False, "serialized")
+    paged, _ = _run(params, "dsd", True, "serialized")
+    assert dense == paged
+
+
+def test_dpd_paged_token_identical_and_gather_free(params):
+    dense, _ = _run(params, "dpd", False, CONTINUOUS)
+    paged, eng = _run(params, "dpd", True, CONTINUOUS)
+    assert dense == paged
+    assert eng.pool.gather_calls == 0
+
+
+def test_use_kernels_auto_enables_paged(params):
+    """paged='auto' + ExecConfig(use_kernels=True) must take the paged
+    path (gather-free) and still match the dense engine token-for-token
+    (impl resolution picks the jnp twins off-TPU)."""
+    dense, _ = _run(params, "standalone", False, CONTINUOUS)
+    auto, eng = _run(params, "standalone", "auto", CONTINUOUS,
+                     exec_cfg=ExecConfig(use_kernels=True))
+    assert eng.paged is True
+    assert dense == auto
+    assert eng.pool.gather_calls == 0
+
+
+def test_pool_garbage_unobservable(params):
+    """Mixed-length batches read dump-padded tables and gather-padded
+    caches; pre-filling the whole pool with finite garbage must not
+    change a single emitted token (the ragged-length mask - not zeroed
+    storage - is what excludes unwritten slots)."""
+    # dense+serialized exercises gather padding; paged+continuous the
+    # dump-padded tables and chunked-prefill scatter
+    for policy, paged in (("serialized", False), (CONTINUOUS, True)):
+        clean, _ = _run(params, "standalone", paged, policy)
+        dirty, _ = _run(params, "standalone", paged, policy, poison=True)
+        assert clean == dirty, (policy, paged)
+
+
+def test_engine_sim_parity_with_use_kernels(params):
+    """The engine<->simulator cost parity (PR 2/4 harness) must survive
+    the paged execution path: use_kernels=True changes HOW the engine
+    computes, never WHAT it charges."""
+    from repro.serving.simulator import ServingMode, simulate
+    from repro.serving.workload import Request
+
+    pl, out, n, pool_blocks = 12, 6, 3, 512
+    eng = ServingEngine(CFG, params["target"], kind="standalone",
+                        temperature=0.0, seed=1, max_batch=8,
+                        pool_blocks=pool_blocks, batching="continuous",
+                        exec_cfg=ExecConfig(use_kernels=True))
+    assert eng.paged is True
+    for i in range(n):
+        eng.submit((np.arange(pl) + i) % CFG.vocab_size,
+                   max_new_tokens=out, arrival_s=0.0)
+    eng.run_until_idle()
+    assert eng.pool.gather_calls == 0
+
+    reqs = [Request(i, 0.0, pl, out) for i in range(n)]
+    mode = ServingMode("standalone", "standalone", "a100", None, max_batch=8)
+    res = simulate(mode, CFG, reqs, seed=1,
+                   batching=BatchPolicy(num_blocks=pool_blocks))
+    assert eng.clock == pytest.approx(res.duration_s, rel=0.02)
+    for name in res.use:
+        assert eng.use[name].energy_j == pytest.approx(
+            res.use[name].energy_j, rel=0.05)
+
+
+def test_prefix_cache_with_paged_path(params):
+    """Cross-request prefix sharing (adopted blocks, refcount > 1) under
+    the paged fast path: same tokens as the dense engine, zero gathers."""
+    policy = BatchPolicy(kind="continuous", chunk_tokens=16, block_size=8,
+                         prefix_cache=True)
+    rng = np.random.default_rng(7)
+    shared = list(rng.integers(1, 400, size=16))  # two full shared blocks
+    prompts = [shared + list(rng.integers(1, 400, size=n))
+               for n in (4, 9, 21)]
+
+    def go(paged):
+        eng = ServingEngine(CFG, params["target"], kind="standalone",
+                            temperature=0.0, seed=0, block_size=8,
+                            pool_blocks=128, batching=policy, paged=paged)
+        for i, p in enumerate(prompts):
+            eng.submit(p, 6, arrival_s=0.2 * i)  # staggered: later ones hit
+        done = eng.run_until_idle()
+        return {r.req_id: list(r.out_tokens) for r in done}, eng
+
+    dense, _ = go(False)
+    paged, eng = go(True)
+    assert dense == paged
+    assert eng.pool.gather_calls == 0
