@@ -67,9 +67,15 @@ def best_config(catalog, ds, reqs, slo_target=0.9, ci=None):
 def csv(rows: list[dict], header: bool = True) -> None:
     if not rows:
         return
-    keys = list(rows[0])
+    # union of keys in first-seen order: rows may be ragged (e.g. the
+    # largest fleet sizes skip the per-replica baseline columns)
+    keys = list(dict.fromkeys(k for r in rows for k in r))
     if header:
         print(",".join(keys))
+
+    def cell(r, k):
+        v = r.get(k, "")
+        return f"{v:.6g}" if isinstance(v, float) else str(v)
+
     for r in rows:
-        print(",".join(f"{r[k]:.6g}" if isinstance(r[k], float) else str(r[k])
-                       for k in keys))
+        print(",".join(cell(r, k) for k in keys))

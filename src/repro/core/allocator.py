@@ -526,6 +526,9 @@ class Allocation:
     unplaced_rate: float = 0.0
     # one-time boot carbon (g) of instances newly started vs `prev_counts`
     boot_g: float = 0.0
+    # which backend produced this allocation: "greedy", "lp", or
+    # "lp-fallback-greedy" (lp requested but scipy missing / solve failed)
+    solver: str = "greedy"
 
     def total_instances(self) -> int:
         return sum(self.counts.values())
@@ -573,6 +576,189 @@ def _dynamic_g_per_hour(info: InstanceProfile, bucket: tuple[int, int],
     return rate * 3600.0 * info.carbon_per_request_g[bucket[0]][bucket[1]]
 
 
+def _allocate_lp(
+    workload_distribution: Matrix,
+    total_request_rate: float,
+    gpu_info: dict[str, InstanceProfile],
+    inventory: Optional[dict[str, int]] = None,
+    prev_counts: Optional[dict[str, int]] = None,
+    boot_carbon_g: float = 0.0,
+    window_s: float = 3600.0,
+    time_limit_s: float = 60.0,
+) -> Optional[Allocation]:
+    """Exact MILP formulation of the allocation problem (scipy `milp`).
+
+    Variables: x_n (integer instance counts per type), r_{n,b} (req/s of
+    bucket b routed to type n, only where tput_{n,b} > 0), y_n >= x_n -
+    prev_n (booted instances, when boot carbon applies), u_b (unplaced
+    slack, big-M penalized so the solver serves everything it can).
+    Constraints: per-bucket rate conservation sum_n r_{n,b} + u_b =
+    rate_b; per-type capacity sum_b r_{n,b}/tput_{n,b} <= x_n; physical
+    chip inventory caps. Objective: fixed + dynamic + amortized boot
+    carbon per hour - the same g/hour `allocate` reports, so greedy and
+    LP solutions compare directly.
+
+    Returns None when scipy's solver is unavailable or the solve fails /
+    times out without an incumbent - the caller falls back to greedy.
+    """
+    try:
+        import numpy as np
+        from scipy.optimize import LinearConstraint, milp
+        from scipy.optimize import Bounds
+    except ImportError:
+        return None
+    mass = sum(c for row in workload_distribution for c in row)
+    if mass <= 0:
+        return Allocation({}, {}, 0.0, True, {}, solver="lp")
+    names = sorted(gpu_info)
+    prev = dict(prev_counts) if prev_counts else {}
+    boot_g_per_hour = boot_carbon_g * 3600.0 / window_s
+
+    rates: dict[tuple[int, int], float] = {}
+    for i, row in enumerate(workload_distribution):
+        for j, frac in enumerate(row):
+            if frac > 0:
+                rates[(i, j)] = frac / mass * total_request_rate
+    bkts = sorted(rates)
+    pairs = [(ni, bi) for ni, n in enumerate(names) for bi, b in enumerate(bkts)
+             if gpu_info[n].tputs[b[0]][b[1]] > 0]
+
+    N, B, P = len(names), len(bkts), len(pairs)
+    use_boot = boot_g_per_hour > 0
+    # layout: x (N ints) | r (P) | u (B) | y (N, only with boot carbon)
+    nvar = N + P + B + (N if use_boot else 0)
+    ix = lambda n: n                      # noqa: E731
+    ir = lambda p: N + p                  # noqa: E731
+    iu = lambda b: N + P + b              # noqa: E731
+    iy = lambda n: N + P + B + n          # noqa: E731
+
+    # big-M on unplaced load: dominate the cost of serving one req/s on
+    # the most expensive type by a wide margin
+    worst = max((info.carbon_fixed_g_per_hour
+                 + 3600.0 * max((g for row in info.carbon_per_request_g
+                                 for g in row), default=0.0)
+                 for info in gpu_info.values()), default=1.0)
+    big_m = 1e4 * (worst + boot_g_per_hour + 1.0)
+
+    c = np.zeros(nvar)
+    for ni, n in enumerate(names):
+        c[ix(ni)] = gpu_info[n].carbon_fixed_g_per_hour
+        if use_boot:
+            c[iy(ni)] = boot_g_per_hour
+    for p, (ni, bi) in enumerate(pairs):
+        b = bkts[bi]
+        c[ir(p)] = 3600.0 * gpu_info[names[ni]].carbon_per_request_g[b[0]][b[1]]
+    for bi in range(B):
+        c[iu(bi)] = big_m
+
+    cons = []
+    # rate conservation: sum_n r_{n,b} + u_b = rate_b
+    a = np.zeros((B, nvar))
+    for p, (ni, bi) in enumerate(pairs):
+        a[bi, ir(p)] = 1.0
+    for bi in range(B):
+        a[bi, iu(bi)] = 1.0
+    rhs = np.array([rates[b] for b in bkts])
+    cons.append(LinearConstraint(a, rhs, rhs))
+    # capacity: sum_b r_{n,b} / tput_{n,b} - x_n <= 0
+    a = np.zeros((N, nvar))
+    for p, (ni, bi) in enumerate(pairs):
+        b = bkts[bi]
+        a[ni, ir(p)] = 1.0 / gpu_info[names[ni]].tputs[b[0]][b[1]]
+    for ni in range(N):
+        a[ni, ix(ni)] = -1.0
+    cons.append(LinearConstraint(a, -np.inf, np.zeros(N)))
+    # boots: y_n >= x_n - prev_n  <=>  x_n - y_n <= prev_n
+    if use_boot:
+        a = np.zeros((N, nvar))
+        for ni in range(N):
+            a[ni, ix(ni)] = 1.0
+            a[ni, iy(ni)] = -1.0
+        cons.append(LinearConstraint(
+            a, -np.inf, np.array([float(prev.get(n, 0)) for n in names])))
+    # inventory: per chip, sum_n (chips of n that are c) * x_n <= cap
+    if inventory is not None:
+        chips = sorted(inventory)
+        a = np.zeros((len(chips), nvar))
+        for ci, chip in enumerate(chips):
+            for ni, n in enumerate(names):
+                k = sum(1 for cn in gpu_info[n].chips if cn == chip)
+                if k:
+                    a[ci, ix(ni)] = float(k)
+        cons.append(LinearConstraint(
+            a, -np.inf, np.array([float(inventory[ch]) for ch in chips])))
+
+    integrality = np.zeros(nvar)
+    integrality[:N] = 1
+    try:
+        res = milp(c, constraints=cons, integrality=integrality,
+                   bounds=Bounds(0, np.inf),
+                   options={"time_limit": time_limit_s})
+    except Exception:
+        return None
+    if res.x is None:
+        return None
+
+    counts = {names[ni]: int(round(res.x[ix(ni)])) for ni in range(N)
+              if int(round(res.x[ix(ni)])) > 0}
+    assignment: dict[tuple[int, int], dict[str, float]] = {}
+    cap_used: dict[str, float] = {}
+    for p, (ni, bi) in enumerate(pairs):
+        r = float(res.x[ir(p)])
+        if r <= 1e-9:
+            continue
+        n, b = names[ni], bkts[bi]
+        assignment.setdefault(b, {})
+        assignment[b][n] = assignment[b].get(n, 0.0) + r
+        cap_used[n] = cap_used.get(n, 0.0) + r / gpu_info[n].tputs[b[0]][b[1]]
+    unplaced = float(sum(res.x[iu(bi)] for bi in range(B)))
+    feasible = unplaced <= 1e-9
+
+    # best-effort dump of residual load, mirroring the greedy fallback:
+    # inventory stays hard, SLOs do not
+    if not feasible:
+        def can_open_lp(n: str) -> bool:
+            if inventory is None:
+                return True
+            used: dict[str, int] = {}
+            for m, k in counts.items():
+                for cn in gpu_info[m].chips:
+                    used[cn] = used.get(cn, 0) + k
+            return all(used.get(cn, 0) + sum(1 for c2 in gpu_info[n].chips
+                                             if c2 == cn) <= inventory[cn]
+                       for cn in gpu_info[n].chips if cn in inventory)
+
+        for bi in range(B):
+            r = float(res.x[iu(bi)])
+            if r <= 1e-9:
+                continue
+            openable = [n for n in names if can_open_lp(n)]
+            if not openable:
+                continue
+            fb = max(openable, key=lambda n: max(
+                t for row in gpu_info[n].tputs for t in row))
+            b = bkts[bi]
+            counts[fb] = counts.get(fb, 0) + 1
+            assignment.setdefault(b, {})
+            assignment[b][fb] = assignment[b].get(fb, 0.0) + r
+            unplaced -= r
+    unplaced = max(unplaced, 0.0)
+
+    carbon = 0.0
+    for n, k in counts.items():
+        carbon += k * gpu_info[n].carbon_fixed_g_per_hour
+    for b, shares in assignment.items():
+        for n, r in shares.items():
+            carbon += _dynamic_g_per_hour(gpu_info[n], b, r)
+    boot_g = boot_carbon_g * sum(
+        max(counts.get(n, 0) - prev.get(n, 0), 0)
+        for n in set(counts) | set(prev))
+    carbon += boot_g * 3600.0 / window_s
+    utilization = {n: cap_used.get(n, 0.0) / counts[n] for n in counts}
+    return Allocation(counts, assignment, carbon, feasible, utilization,
+                      unplaced_rate=unplaced, boot_g=boot_g, solver="lp")
+
+
 def allocate(
     workload_distribution: Matrix,
     total_request_rate: float,
@@ -583,6 +769,8 @@ def allocate(
     prev_counts: Optional[dict[str, int]] = None,
     boot_carbon_g: float = 0.0,
     window_s: float = 3600.0,
+    solver: str = "greedy",
+    lp_time_limit_s: float = 60.0,
 ) -> Allocation:
     """Choose instance counts + routing minimizing provisioned carbon/hour.
 
@@ -590,6 +778,14 @@ def allocate(
     a local search that (a) tries to close each instance by repacking its
     load elsewhere and (b) tries to retype each instance. Deterministic:
     ties break on (carbon, name).
+
+    `solver="lp"` solves the same problem as a mixed-integer program
+    (scipy `milp`; see `_allocate_lp`) - a global optimum instead of the
+    greedy's local one, worth it on 100+-chip inventories where FFD +
+    local search leaves instances stranded (docs/scaling.md has the
+    when-to-use guidance and measured frontier). Falls back to greedy
+    cleanly when scipy's solver is unavailable or fails inside
+    `lp_time_limit_s`; `Allocation.solver` records which backend answered.
 
     `inventory` caps physical chip counts ({"a100": K, "t4": M}, Mélange
     availability constraints): an instance type consumes one of each chip
@@ -613,6 +809,23 @@ def allocate(
         raise ValueError(f"negative boot_carbon_g: {boot_carbon_g}")
     if window_s <= 0:
         raise ValueError(f"window_s must be positive: {window_s}")
+    if solver not in ("greedy", "lp"):
+        raise ValueError(f"unknown solver: {solver!r} "
+                         f"(expected 'greedy' or 'lp')")
+    if solver == "lp":
+        lp = _allocate_lp(workload_distribution, total_request_rate, gpu_info,
+                          inventory=inventory, prev_counts=prev_counts,
+                          boot_carbon_g=boot_carbon_g, window_s=window_s,
+                          time_limit_s=lp_time_limit_s)
+        if lp is not None:
+            return lp
+        out = allocate(workload_distribution, total_request_rate, gpu_info,
+                       slice_factor=slice_factor,
+                       local_search_rounds=local_search_rounds,
+                       inventory=inventory, prev_counts=prev_counts,
+                       boot_carbon_g=boot_carbon_g, window_s=window_s)
+        out.solver = "lp-fallback-greedy"
+        return out
     prev = dict(prev_counts) if prev_counts else {}
     boot_g_per_hour = boot_carbon_g * 3600.0 / window_s
     unplaced_rate = 0.0

@@ -32,6 +32,7 @@ allocation on the same stream (the PR's acceptance headline).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import Optional, Sequence
 
@@ -51,6 +52,7 @@ from repro.serving.fleet import (
     FLEET_BATCHING_DEFAULT,
     OnlineDispatcher,
     SizeBuckets,
+    make_dispatcher,
 )
 from repro.serving.simulator import ReplicaSim, SimResult
 from repro.serving.workload import SLO_CLASSES, Dataset, Request
@@ -94,6 +96,26 @@ class AutoscalePolicy:
     # present class is the conservative single-knob option; the class-
     # split allocation lives in benchmarks/priority_sweep.py
     slo_class: Optional[str] = None
+    # drain-aware scale-up: when a window both drains replicas AND boots
+    # replacements (a type switch - e.g. a CI swing flips the optimal
+    # config), reclaim the backlog the victims have done no work for
+    # (ReplicaSim.reclaim_pending) and re-route it onto the new capacity
+    # instead of stalling it behind the drain. Gated on same-window boots:
+    # on a pure scale-down the victims drain their own backlog in
+    # parallel, which both finishes sooner and frees no extra hardware by
+    # rerouting. Handed-off requests re-enter at the window boundary
+    # (their latency clock restarts there: each replica's arrival stream
+    # must stay time-sorted), so the window log's `handoffs` count is the
+    # honest record of the displaced queue
+    drain_handoff: bool = True
+    # extra re-solve boundaries on load change: probe the arrival stream
+    # at `load_probe_s` granularity inside each grid window and insert a
+    # boundary whenever a probe slice's rate leaves the band
+    # (1 +/- threshold) x the rate observed since the last boundary.
+    # Causal (a boundary at t uses only arrivals before t); None = grid
+    # boundaries only (the pre-existing behavior)
+    load_resolve_threshold: Optional[float] = None
+    load_probe_s: float = 60.0
 
     def __post_init__(self):
         if self.boot_s < 0:
@@ -103,6 +125,12 @@ class AutoscalePolicy:
         if self.slo_class is not None and self.slo_class not in SLO_CLASSES:
             raise ValueError(f"unknown slo_class: {self.slo_class!r} "
                              f"(one of {sorted(SLO_CLASSES)})")
+        if self.load_resolve_threshold is not None \
+                and self.load_resolve_threshold <= 0:
+            raise ValueError("load_resolve_threshold must be > 0: "
+                             f"{self.load_resolve_threshold}")
+        if self.load_probe_s <= 0:
+            raise ValueError(f"load_probe_s must be > 0: {self.load_probe_s}")
 
 
 # ---------------------------------------------------------------------------
@@ -242,6 +270,36 @@ def _window_bounds(trace: CarbonTrace, t_end: float,
     return bounds
 
 
+def _load_change_bounds(arrivals_s: "list[float]", bounds: "list[float]",
+                        threshold: float, probe_s: float,
+                        min_window_s: float) -> "list[float]":
+    """Insert re-solve boundaries inside grid windows where the observed
+    load shifts: walk each window in `probe_s` ticks and split when the
+    newest probe slice's arrival rate leaves (1 +/- threshold) x the rate
+    seen since the last boundary. Causal - the decision at tick t reads
+    only arrivals in [t - probe_s, t), all observed by t."""
+    out = [bounds[0]]
+    for w0, w1 in zip(bounds, bounds[1:]):
+        last = w0
+        t = w0 + probe_s
+        while t + 1e-9 < w1:
+            n_seg = bisect.bisect_left(arrivals_s, t) \
+                - bisect.bisect_left(arrivals_s, last)
+            n_probe = bisect.bisect_left(arrivals_s, t) \
+                - bisect.bisect_left(arrivals_s, t - probe_s)
+            r_seg = n_seg / (t - last)
+            r_probe = n_probe / probe_s
+            shifted = abs(r_probe - r_seg) > threshold * r_seg \
+                if r_seg > 0 else r_probe > 0
+            if shifted and t - last >= min_window_s \
+                    and w1 - t >= min_window_s:
+                out.append(t)
+                last = t
+            t += probe_s
+        out.append(w1)
+    return out
+
+
 def drain_victims(disp: OnlineDispatcher, candidates: "list[_Replica]",
                   count: int) -> "list[_Replica]":
     """Pick `count` replicas to drain, emptiest first.
@@ -312,8 +370,13 @@ def simulate_autoscaled(
 
     t_end = reqs[-1].arrival_s + 1e-9
     bounds = _window_bounds(trace, t_end, policy.min_window_s)
+    if policy.load_resolve_threshold is not None:
+        bounds = _load_change_bounds(
+            [r.arrival_s for r in reqs], bounds,
+            policy.load_resolve_threshold, policy.load_probe_s,
+            policy.min_window_s)
 
-    disp = OnlineDispatcher(batching=batching)
+    disp = make_dispatcher(batching=batching)
     replicas: dict[int, _Replica] = {}
     next_rid = 0
     windows: list[dict] = []
@@ -380,6 +443,7 @@ def simulate_autoscaled(
             alloc = Allocation({}, {}, 0.0, True, {})
         # --- reconcile: boot up / drain down ---------------------------
         boots = drains = 0
+        victims_w: list[_Replica] = []
         for name in sorted(set(alloc.counts) | set(prev_counts)):
             target = alloc.counts.get(name, 0)
             have = prev_counts.get(name, 0)
@@ -408,6 +472,15 @@ def simulate_autoscaled(
                     r.drain_mark_s = w0
                     disp.remove(r.rid)
                     drains += 1
+                victims_w.extend(victims)
+        # hand the victims' untouched backlog to the capacity that booted
+        # this same window (a type switch); on a pure scale-down the
+        # victims drain their own backlog in parallel instead - rerouting
+        # it onto fewer survivors only serializes the tail
+        handoff: list[Request] = []
+        if policy.drain_handoff and boots:
+            for r in victims_w:
+                handoff.extend(r.sim.reclaim_pending())
         # --- route this window's arrivals online -----------------------
         pools: dict[tuple[int, int], list[int]] = {}
         for bucket, shares in alloc.assignment.items():
@@ -417,11 +490,23 @@ def simulate_autoscaled(
             if pool:
                 pools[bucket] = sorted(pool)
         everyone = sorted(r.rid for r in replicas.values() if r.active)
-        if arrivals and not everyone:
+        if (arrivals or handoff) and not everyone:
             raise ValueError(
                 f"window [{w0}, {w1}): arrivals but no active replica - "
                 f"inventory limits too tight? (alloc={alloc.counts}, "
                 f"unplaced={alloc.unplaced_rate:.3g} req/s)")
+        # drain handoff first: reclaimed backlog re-enters at the drain
+        # boundary (w0 >= every prior submission, so each survivor's
+        # arrival stream stays sorted) and lands on whatever the
+        # dispatcher now deems least loaded - typically the replacement
+        # that just booted for this window
+        handoff.sort(key=lambda r: (r.arrival_s, r.req_id))
+        for req in handoff:
+            req = dataclasses.replace(req, arrival_s=w0)
+            pool = pools.get(buckets.index(req.prompt_len, req.output_len),
+                             everyone)
+            rid = disp.pick(req, pool or everyone)
+            replicas[rid].sim.submit(req)
         for req in arrivals:
             pool = pools.get(buckets.index(req.prompt_len, req.output_len),
                              everyone)
@@ -441,6 +526,7 @@ def simulate_autoscaled(
             "t0": w0, "t1": w1, "ci": ci_w, "rate": rate,
             "rate_est": rate_est,
             "counts": dict(alloc.counts), "boots": boots, "drains": drains,
+            "handoffs": len(handoff),
             "instances": sum(alloc.counts.values()),
             "alloc_feasible": alloc.feasible,
             "unplaced_rate": alloc.unplaced_rate,

@@ -99,6 +99,15 @@ class BatchPolicy:
                   `num_blocks`, reached when grid carbon intensity is at
                   its greenest; the effective cap ramps down to 0 as the
                   trace approaches `PrefixCache.ci_high`
+    tpot_guard_frac  per-class TPOT guard inside a hybrid step: when a
+                  step's decode participants include a class strictly
+                  WORSE than a prefill chunk's class, cumulative chunk
+                  tokens from those better classes are capped at this
+                  fraction of `token_budget` - a tight prefill stream can
+                  then stretch a relaxed decode's step time by at most
+                  that share instead of unboundedly. 1.0 (default)
+                  disables the guard (bit-exact with prior schedules);
+                  single-class workloads are unaffected at any value.
     """
 
     kind: str = "continuous"
@@ -109,6 +118,7 @@ class BatchPolicy:
     age_steps: int = 512
     prefix_cache: bool = False
     retain_frac: float = 0.5
+    tpot_guard_frac: float = 1.0
 
     def __post_init__(self):
         if self.kind not in ("serialized", "continuous"):
@@ -125,6 +135,9 @@ class BatchPolicy:
             if not 0.0 <= self.retain_frac <= 1.0:
                 raise ValueError(
                     f"retain_frac must be in [0, 1]: {self.retain_frac}")
+            if not 0.0 < self.tpot_guard_frac <= 1.0:
+                raise ValueError(
+                    f"tpot_guard_frac must be in (0, 1]: {self.tpot_guard_frac}")
 
     @staticmethod
     def from_dataset(ds, block_size: int = 16,
@@ -323,6 +336,73 @@ def plan_dpd_decode_step(active: "list[SchedSeq]", ledger: "BlockLedger",
         return stepping, None
     return [], max(enumerate(active),
                    key=lambda t: (t[1].priority, t[0]))[1]
+
+
+class DpdReadyQueue:
+    """Class-aware dpd pool-B admission queue, shared by BOTH executors.
+
+    Replaces the plain FIFO across the KV link: admission picks the best
+    (effective-class, ready-time, push-order) among the entries whose KV
+    has ARRIVED (`ready_s <= now`), so a tight sequence waiting on the
+    link-side queue is admitted ahead of relaxed ones that shipped
+    earlier. Within a class, KV-arrival time then push order tie-break -
+    a single-class stream therefore reduces exactly to the old FIFO.
+
+    Aging mirrors the waiting-queue rule of `ContinuousScheduler`
+    (`age_steps` pool-B ROUNDS per one-level promotion, floor 0), with a
+    window-invariant stamp: an entry's credit counts only the decode
+    rounds that ran while its KV was already arrived (`note_round` checks
+    `ready_s <= round start`). Push order, round times, and arrival times
+    are all independent of where `advance_to` windows split - pool A's
+    schedule never depends on pool-B state - so windowed `advance_to ==
+    drain` is preserved by construction (tests/test_dpd_ready_queue.py).
+
+    Head-of-line semantics are preserved: when the best eligible entry
+    does not fit the block watermark the caller STALLS admission rather
+    than skipping down-queue - overtaking would re-introduce the
+    class-inversion this queue exists to remove.
+    """
+
+    def __init__(self, age_steps: int):
+        if age_steps < 1:
+            raise ValueError(f"age_steps must be >= 1: {age_steps}")
+        self.age_steps = age_steps
+        # [ready_s, priority, push idx, rounds waited while ready, item]
+        self._entries: list[list] = []
+        self._idx = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def push(self, ready_s: float, priority: int, item) -> None:
+        self._entries.append([ready_s, priority, self._idx, 0, item])
+        self._idx += 1
+
+    def note_round(self, round_start_s: float) -> None:
+        """One pool-B decode round ran; credit the entries it kept waiting."""
+        for e in self._entries:
+            if e[0] <= round_start_s:
+                e[3] += 1
+
+    def _key(self, e: list) -> tuple[int, float, int]:
+        return (max(e[1] - e[3] // self.age_steps, 0), e[0], e[2])
+
+    def peek_eligible(self, now_s: float) -> "Optional[list]":
+        """Best arrived entry (admission order), or None; does not pop."""
+        best = None
+        for e in self._entries:
+            if e[0] <= now_s and (best is None
+                                  or self._key(e) < self._key(best)):
+                best = e
+        return best
+
+    def pop(self, entry: list):
+        self._entries.remove(entry)
+        return entry[4]
+
+    def next_ready_s(self) -> Optional[float]:
+        """Earliest KV arrival over ALL entries (the idle-jump target)."""
+        return min((e[0] for e in self._entries), default=None)
 
 
 # ---------------------------------------------------------------------------
@@ -715,6 +795,7 @@ class ContinuousScheduler:
 
     def _build_chunks(self, budget: int, reserve: int,
                       skip: "frozenset[int] | set[int]" = frozenset(),
+                      decodes: "list[SchedSeq] | tuple" = (),
                       ) -> list[PrefillChunk]:
         """Admit/continue prefill chunks into `budget` tokens, leaving
         `reserve` blocks untouched for the running decodes' growth.
@@ -725,15 +806,40 @@ class ContinuousScheduler:
         repeats every step and never converges). A skipped victim still
         blocks the line behind it - letting later (worse-class) arrivals
         overtake it would admit a relaxed seq in the very step a better
-        one was evicted."""
+        one was evicted.
+
+        `decodes` are this step's decode participants (mix_decode steps):
+        when the policy's `tpot_guard_frac` < 1 and the step carries a
+        decode of some class, chunk tokens from STRICTLY BETTER classes
+        are capped at that fraction of the token budget - chunked prefill
+        makes the step longer, and the step time IS the TPOT of every
+        decode riding it, so an unbounded tight chunk stream would
+        stretch a relaxed decode's TPOT without limit. A guarded seq
+        stalls (no overtaking by worse classes - that would not shorten
+        the step) until the decode mix drains."""
         chunks: list[PrefillChunk] = []
+        guard_cap = None
+        worst_decode = -1
+        if decodes and self.policy.tpot_guard_frac < 1.0:
+            worst_decode = max(s.priority for s in decodes)
+            guard_cap = int(self.policy.tpot_guard_frac
+                            * self.policy.token_budget)
+        guarded_used = 0
+
+        def guard_room(seq: SchedSeq) -> int:
+            """Chunk tokens the TPOT guard still allows this seq."""
+            if guard_cap is None or seq.priority >= worst_decode:
+                return self.policy.token_budget     # unguarded
+            return guard_cap - guarded_used
+
         # in-flight prefills continue first (admission order), one chunk
         # per seq/step
         for seq in self.prefilling:
             if budget <= 0:
                 break
             take = min(self.policy.chunk_tokens,
-                       seq.prefill_target - seq.prefilled, budget)
+                       seq.prefill_target - seq.prefilled, budget,
+                       guard_room(seq))
             if take <= 0:
                 continue
             need = (self.ledger.blocks_needed(seq.prefilled + take)
@@ -744,6 +850,8 @@ class ContinuousScheduler:
             chunks.append(PrefillChunk(seq, take, seq.prefilled,
                                        seq.prefilled + take >= seq.prefill_target))
             budget -= take
+            if guard_cap is not None and seq.priority < worst_decode:
+                guarded_used += take
         # then admit fresh sequences in effective-priority order (aged
         # classes promote; within a class, submission order) while budget
         # and blocks allow
@@ -758,6 +866,8 @@ class ContinuousScheduler:
             # be computed (its logits sample the first output token).
             # Matched tokens never enter a chunk - they are priced as
             # cached context, not prefill (perfmodel.hybrid_step_cost)
+            if guard_room(seq) <= 0:
+                break                     # guard-capped head stalls the line
             hit = fresh = 0
             if self.cache is not None and seq.prefix_keys:
                 hit = self.cache.match_blocks(
@@ -767,7 +877,7 @@ class ContinuousScheduler:
                 fresh = self.cache.fresh_cost(seq.prefix_keys, hit)
             start = hit * self.policy.block_size
             take = min(self.policy.chunk_tokens,
-                       seq.prefill_target - start, budget)
+                       seq.prefill_target - start, budget, guard_room(seq))
             need = self.ledger.blocks_needed(take)
             if need + fresh > self.ledger.free_blocks - reserve:
                 break                              # priority order: no overtaking
@@ -781,6 +891,8 @@ class ContinuousScheduler:
             chunks.append(PrefillChunk(seq, take, seq.prefilled,
                                        seq.prefilled + take >= seq.prefill_target))
             budget -= take
+            if guard_cap is not None and seq.priority < worst_decode:
+                guarded_used += take
         return chunks
 
     def _admission_preempt(self, decodes: list[SchedSeq],
@@ -835,7 +947,8 @@ class ContinuousScheduler:
             preempted.append(victim)
             chunks = self._build_chunks(budget_of(decodes),
                                         self._growth_reserve(decodes),
-                                        skip={v.sid for v in preempted})
+                                        skip={v.sid for v in preempted},
+                                        decodes=decodes)
         return chunks
 
     def next_plan(self) -> Optional[StepPlan]:
@@ -877,7 +990,7 @@ class ContinuousScheduler:
                 f"+{self.decode_tokens} tokens)")
         chunks = [] if not self.mix_decode else self._build_chunks(
             self.policy.token_budget - len(decodes), reserve,
-            skip={v.sid for v in preempted})
+            skip={v.sid for v in preempted}, decodes=decodes)
         if self.mix_decode and not chunks and decodes:
             chunks = self._admission_preempt(
                 decodes, preempted,

@@ -48,6 +48,7 @@ from repro.models.layers import DEFAULT_EXEC, ExecConfig
 from repro.serving.batching import (
     BatchPolicy,
     ContinuousScheduler,
+    DpdReadyQueue,
     OutOfBlocks,
     SchedSeq,
     build_dpd_decode_ledger,
@@ -197,8 +198,10 @@ class ServingEngine:
         self._sched_a: Optional[ContinuousScheduler] = None  # dpd pool A
         self._ledger_b = None                                # dpd pool B
         self._decoding_b: list[SchedSeq] = []                # dpd decode set
-        # dpd: (EngineRequest, resume_emitted, stashed (k, v) or None)
-        self._ready_b: deque = deque()
+        # dpd pool-B admission line across the KV link: class-aware
+        # (tight > standard > relaxed) with aging, shared with the
+        # simulator's continuous path (batching.DpdReadyQueue)
+        self._ready_b = DpdReadyQueue(self.policy.age_steps)
         # tokens of ADOPTED (cache-shared) prefix per sid: KV the sequence
         # aliases but must never rewrite (prefix_cache sharing)
         self._shared_tok: dict[int, int] = {}
@@ -759,13 +762,19 @@ class ServingEngine:
                 self._finish(r)
             else:
                 self.last_token[seq.sid] = tok
-                self._ready_b.append(r)
+                # KV transfers serialize on the link after t_end in chunk
+                # order: this prompt's KV lands at t_end + tx so far
+                self._ready_b.push(t_end + tx_total,
+                                   class_priority(r.slo_class), r)
         self.clock = t_end + tx_total
 
     def _dpd_admit(self) -> None:
         ledger = self._ledger_b
-        while self._ready_b and len(self._decoding_b) < self.max_batch:
-            r: EngineRequest = self._ready_b[0]
+        while len(self._ready_b) and len(self._decoding_b) < self.max_batch:
+            entry = self._ready_b.peek_eligible(self.clock)
+            if entry is None:
+                break
+            r: EngineRequest = entry[4]
             emitted = len(r.out_tokens)
             kv0 = len(r.prompt) + emitted - 1
             # watermark: keep one growth block per active sequence
@@ -784,7 +793,7 @@ class ServingEngine:
             seq.emitted = emitted
             ledger.allocate(seq.sid, kv0)
             self._decoding_b.append(seq)
-            self._ready_b.popleft()
+            self._ready_b.pop(entry)
 
     def _dpd_decode_step(self) -> None:
         ledger = self._ledger_b
@@ -805,7 +814,7 @@ class ServingEngine:
             nbytes = dpd_kv_bytes(self.cfg, victim.kv)
             self.link_bytes += nbytes
             self.clock += self.interconnect.transfer_time(nbytes)
-            self._ready_b.append(victim.payload)
+            self._ready_b.push(self.clock, victim.priority, victim.payload)
             return
         sids = [s.sid for s in stepping]
         ctxs = tuple(s.ctx for s in stepping)
@@ -817,6 +826,9 @@ class ServingEngine:
             (), ctxs, 0, self.interconnect)
         for chip_name, cost, rel_s in hs.charges:
             self._charge(CHIP_DB[chip_name], cost, at_s=self.clock + rel_s)
+        # queued pool-B entries age one level per age_steps decode rounds
+        # they sit out (rounds starting at/after their link arrival)
+        self._ready_b.note_round(self.clock)
         self.clock += hs.duration_s
         for seq, tok in zip(stepping, new):
             r: EngineRequest = seq.payload

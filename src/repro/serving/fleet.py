@@ -29,6 +29,7 @@ min-carbon allocation); `FleetSpec.from_allocation` bridges the two.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Optional, Sequence
 
 from repro.core.carbon import CarbonBreakdown, CarbonTrace, DEFAULT_CI
@@ -386,9 +387,242 @@ class OnlineDispatcher:
         return best
 
 
+class _HeapGroup:
+    """All replicas sharing one config object: they share `_est`, so the
+    within-group earliest-finish winner is the earliest-BUSY member."""
+
+    __slots__ = ("cfg", "members", "busy_h", "idle_h")
+
+    def __init__(self, cfg: DisaggConfig):
+        self.cfg = cfg
+        self.members: set[int] = set()
+        # per priority level: lazy min-heaps of (busy, rid, ver) for members
+        # still busy past the probe arrival, and (rid, ver) for idle ones
+        self.busy_h: list[list] = [[] for _ in range(NUM_PRIORITIES)]
+        self.idle_h: list[list] = [[] for _ in range(NUM_PRIORITIES)]
+
+
+class HeapDispatcher(OnlineDispatcher):
+    """O(log n)-per-arrival earliest-finish dispatcher (drop-in for the
+    linear scan).
+
+    The linear `pick` costs O(n) per arrival, so routing a 10k-replica
+    fleet dominates simulation wall-clock. This subclass keeps
+    `_busy_class` authoritative (every parent invariant and the session /
+    priority semantics are inherited) but answers `pick` from per-
+    (config-group, priority-level) heaps instead of scanning:
+
+      * replicas sharing one config object form a group; within a group
+        every member has the same service estimate, so the earliest-finish
+        member is the min-rid IDLE member (busy <= arrival: finish is
+        arrival + est for all of them) or else the min-(busy, rid) member.
+      * each group keeps, per priority level, a busy-heap keyed (busy,
+        rid) and an idle-heap keyed rid. Entries are version-stamped;
+        state changes bump `_ver[rid][p]` and push a fresh entry, stale
+        entries are discarded lazily on pop (classic lazy-deletion heap).
+      * entries migrate busy->idle when the probe arrival passes their
+        busy time, and idle->busy when a later probe's arrival is EARLIER
+        (arrivals need not be monotone across autoscale windows), so the
+        structure is correct for any arrival order.
+      * across groups there are at most #configs candidates; the winner
+        is chosen by replicating the linear scan's epsilon rule over the
+        group winners in rid order.
+
+    Decisions equal the linear scan's except when two finish estimates
+    differ by a sub-epsilon (0, 1e-12] float-noise margin - strictly
+    inside the tolerance band where the linear rule itself is an
+    arbitrary path-dependent tie-break (tests/test_heap_dispatch.py pins
+    empirical equality on seeded mixed-class + session workloads).
+    """
+
+    def __init__(self, batching: "BatchPolicy | str | None" = None):
+        super().__init__(batching=batching)
+        self._groups: dict[int, _HeapGroup] = {}
+        self._group_of: dict[int, int] = {}
+        self._ver: dict[int, list[int]] = {}
+        # membership epoch: any add/remove invalidates pool decompositions
+        self._epoch = 0
+        # id(candidates) -> (epoch, candidates, full-group keys, partial
+        # rids, member frozenset); holding `candidates` pins its id()
+        self._pool_cache: dict[int, tuple] = {}
+
+    # -- membership ---------------------------------------------------------
+    def add(self, rid: int, cfg: DisaggConfig, ready_s: float = 0.0) -> None:
+        super().add(rid, cfg, ready_s)
+        gk = id(cfg)
+        g = self._groups.get(gk)
+        if g is None:
+            g = self._groups[gk] = _HeapGroup(cfg)
+        g.members.add(rid)
+        self._group_of[rid] = gk
+        self._ver[rid] = [0] * NUM_PRIORITIES
+        for p in range(NUM_PRIORITIES):
+            heapq.heappush(g.busy_h[p], (ready_s, rid, 0))
+        self._epoch += 1
+        self._pool_cache.clear()
+
+    def remove(self, rid: int) -> None:
+        gk = self._group_of.pop(rid)
+        g = self._groups[gk]
+        g.members.discard(rid)
+        del self._ver[rid]  # orphans this rid's heap entries (lazily popped)
+        if not g.members:
+            del self._groups[gk]
+        super().remove(rid)
+        self._epoch += 1
+        self._pool_cache.clear()
+
+    # -- state updates ------------------------------------------------------
+    def _bump(self, rid: int, p: int, busy_val: float) -> None:
+        g = self._groups[self._group_of[rid]]
+        v = self._ver[rid]
+        v[p] += 1
+        heapq.heappush(g.busy_h[p], (busy_val, rid, v[p]))
+
+    def sync(self, rid: int, clock_s: float) -> None:
+        busy = self._busy_class[rid]
+        for p in range(NUM_PRIORITIES):
+            if clock_s > busy[p]:
+                busy[p] = clock_s
+                self._bump(rid, p, clock_s)
+
+    # -- candidate extraction -----------------------------------------------
+    def _live(self, rid: int, p: int, ver: int) -> bool:
+        v = self._ver.get(rid)
+        return v is not None and v[p] == ver
+
+    def _group_candidate(self, g: _HeapGroup, p: int,
+                         arr: float) -> "tuple[int, float] | None":
+        """(rid, start time) of the group's earliest-finish member."""
+        bh, ih = g.busy_h[p], g.idle_h[p]
+        # migrate members whose backlog clears before this arrival
+        while bh:
+            busy, rid, v = bh[0]
+            if not self._live(rid, p, v):
+                heapq.heappop(bh)
+            elif busy <= arr:
+                heapq.heappop(bh)
+                heapq.heappush(ih, (rid, v))
+            else:
+                break
+        # min-rid idle member, re-validated against THIS arrival (an
+        # earlier-arriving probe may find a previously-idle member busy)
+        while ih:
+            rid, v = ih[0]
+            if not self._live(rid, p, v):
+                heapq.heappop(ih)
+                continue
+            busy = self._busy_class[rid][p]
+            if busy > arr:
+                heapq.heappop(ih)
+                heapq.heappush(bh, (busy, rid, v))
+                continue
+            return rid, arr
+        # no idle member: after migration every live busy entry has
+        # busy > arr, so the heap top (min busy, then min rid) wins
+        while bh:
+            busy, rid, v = bh[0]
+            if not self._live(rid, p, v):
+                heapq.heappop(bh)
+                continue
+            return rid, busy
+        return None
+
+    def _resolve_pool(self, candidates: Sequence[int]):
+        """Split a candidate pool into fully-covered groups + leftovers.
+
+        Cached by pool object identity (offline routers and the autoscaler
+        reuse one pool object across many arrivals) and invalidated on any
+        membership change. Pools are treated as rid-ascending - every
+        in-repo pool is - so the merged scan order matches the linear one.
+        """
+        key = id(candidates)
+        hit = self._pool_cache.get(key)
+        if hit is not None and hit[0] == self._epoch and hit[1] is candidates:
+            return hit[2], hit[3], hit[4]
+        rids = list(candidates)
+        counts: dict[int, int] = {}
+        for rid in rids:
+            gk = self._group_of[rid]
+            counts[gk] = counts.get(gk, 0) + 1
+        full = tuple(gk for gk, c in counts.items()
+                     if c == len(self._groups[gk].members))
+        fullset = set(full)
+        partial = tuple(r for r in rids if self._group_of[r] not in fullset)
+        memb = frozenset(rids)
+        self._pool_cache[key] = (self._epoch, candidates, full, partial, memb)
+        return full, partial, memb
+
+    # -- routing ------------------------------------------------------------
+    def pick(self, req: Request,
+             candidates: Optional[Sequence[int]] = None) -> int:
+        p = class_priority(req.slo_class)
+        arr = req.arrival_s
+        if candidates is None:
+            gks, partial, memb = tuple(self._groups), (), None
+        else:
+            gks, partial, memb = self._resolve_pool(candidates)
+        cands: list[tuple[int, float]] = []
+        for gk in gks:
+            got = self._group_candidate(self._groups[gk], p, arr)
+            if got is not None:
+                rid, start0 = got
+                cands.append((rid, max(start0, arr) + self._est(rid, req)))
+        for rid in partial:
+            cands.append((rid, max(self._busy_class[rid][p], arr)
+                          + self._est(rid, req)))
+        cands.sort()
+        best, best_finish = None, None
+        for rid, fin in cands:  # the linear scan's epsilon rule, rid order
+            if best_finish is None or fin < best_finish - 1e-12:
+                best, best_finish = rid, fin
+        if best is None:
+            raise ValueError("cannot route onto an empty replica set")
+        sid = getattr(req, "session_id", None)
+        if sid is not None:
+            home = self._session_home.get(sid)
+            in_pool = home is not None and (
+                home in self.configs if memb is None else home in memb)
+            if in_pool and home != best:
+                home_fin = max(self._busy_class[home][p], arr) \
+                    + self._est(home, req)
+                if home_fin - best_finish <= self._est(home, req):
+                    best, best_finish = home, home_fin
+            self._session_home[sid] = best
+        busy = self._busy_class[best]
+        start = max(busy[p], arr)
+        est = best_finish - start
+        for q in range(p, NUM_PRIORITIES):
+            busy[q] = max(busy[q], start) + est
+            self._bump(best, q, busy[q])
+        return best
+
+
+DISPATCHERS = {"linear": OnlineDispatcher, "heap": HeapDispatcher}
+# fleet entry points route via the heap core by default; it makes the same
+# decisions as the linear scan (see HeapDispatcher) at O(log n) per arrival
+FLEET_DISPATCHER_DEFAULT = "heap"
+
+
+def make_dispatcher(dispatcher: "str | OnlineDispatcher | None" = None,
+                    batching: "BatchPolicy | str | None" = None,
+                    ) -> OnlineDispatcher:
+    """Resolve a dispatcher selector: name, instance, or None (default)."""
+    if isinstance(dispatcher, OnlineDispatcher):
+        return dispatcher
+    if dispatcher is None:
+        dispatcher = FLEET_DISPATCHER_DEFAULT
+    try:
+        cls = DISPATCHERS[dispatcher]
+    except KeyError:
+        raise ValueError(f"unknown dispatcher: {dispatcher!r} "
+                         f"(expected one of {sorted(DISPATCHERS)})") from None
+    return cls(batching=batching)
+
+
 def _fleet_dispatcher(fleet: FleetSpec, start_s: float,
-                      batching=None) -> OnlineDispatcher:
-    disp = OnlineDispatcher(batching=batching)
+                      batching=None, dispatcher=None) -> OnlineDispatcher:
+    disp = make_dispatcher(dispatcher, batching=batching)
     for idx, cfg in enumerate(fleet.replicas()):
         disp.add(idx, cfg, ready_s=start_s)
     if not disp.configs:
@@ -398,9 +632,9 @@ def _fleet_dispatcher(fleet: FleetSpec, start_s: float,
 
 def route_least_loaded(requests: Sequence[Request], fleet: FleetSpec,
                        start_s: float = 0.0,
-                       batching=None) -> list[list[Request]]:
+                       batching=None, dispatcher=None) -> list[list[Request]]:
     """Partition one arrival stream across all replicas, earliest-finish."""
-    disp = _fleet_dispatcher(fleet, start_s, batching)
+    disp = _fleet_dispatcher(fleet, start_s, batching, dispatcher)
     parts: list[list[Request]] = [[] for _ in disp.configs]
     everyone = range(len(parts))
     for req in sorted(requests, key=lambda r: (r.arrival_s, r.req_id)):
@@ -412,13 +646,13 @@ def route_bucketed(requests: Sequence[Request], fleet: FleetSpec,
                    buckets: SizeBuckets,
                    assignment: dict[tuple[int, int], Sequence[int]],
                    start_s: float = 0.0,
-                   batching=None) -> list[list[Request]]:
+                   batching=None, dispatcher=None) -> list[list[Request]]:
     """Pin each size bucket to a replica subset; least-loaded within it.
 
     `assignment` maps bucket index (i, j) -> replica indices into
     `fleet.replicas()`. Buckets without an entry fall back to the whole
     fleet (so a coarse allocator assignment still routes everything)."""
-    disp = _fleet_dispatcher(fleet, start_s, batching)
+    disp = _fleet_dispatcher(fleet, start_s, batching, dispatcher)
     n = len(disp.configs)
     for b, idxs in assignment.items():
         bad = [i for i in idxs if not 0 <= i < n]
@@ -472,6 +706,9 @@ def simulate_fleet(
     seed: int = 0,
     start_s: float = 0.0,
     batching: "BatchPolicy | str | None" = None,
+    core: str = "replica",
+    dispatcher=None,
+    rng_mode: str = "sequential",
 ) -> FleetResult:
     """Route `requests` across the fleet, simulate each replica, merge.
 
@@ -480,19 +717,48 @@ def simulate_fleet(
 
     `batching` is the per-replica scheduler policy; the fleet default is
     iteration-level continuous batching (serving/batching.py) - pass
-    "serialized" for the legacy stop-the-world-prefill executors."""
+    "serialized" for the legacy stop-the-world-prefill executors.
+
+    `core` selects the simulation backend: "replica" runs the per-replica
+    Python event loop, "vector" runs `serving/vector_core.VectorFleetSim`
+    (one lockstep numpy core per config group - bit-exact with "replica"
+    under rng_mode="sequential", orders of magnitude faster at fleet
+    scale). The vectorized core implements the serialized policy;
+    continuous-batching fleets fall back to the per-replica loop (see
+    docs/scaling.md). `dispatcher` picks the routing core ("heap" default,
+    "linear", or a pre-built OnlineDispatcher)."""
     batching = resolve_batch_policy(batching, default=FLEET_BATCHING_DEFAULT)
+    if core not in ("replica", "vector"):
+        raise ValueError(f"unknown simulation core: {core!r}")
     if policy == "least_loaded":
-        parts = route_least_loaded(requests, fleet, start_s, batching)
+        parts = route_least_loaded(requests, fleet, start_s, batching,
+                                   dispatcher)
     elif policy == "bucketed":
         if buckets is None or assignment is None:
             raise ValueError("bucketed routing needs buckets and assignment")
         parts = route_bucketed(requests, fleet, buckets, assignment, start_s,
-                               batching)
+                               batching, dispatcher)
     else:
         raise ValueError(f"unknown routing policy: {policy!r}")
+    replicas = fleet.replicas()
+    if core == "vector" and batching.kind == "serialized":
+        from repro.serving.vector_core import VectorFleetSim
+        by_cfg: dict[int, list[int]] = {}
+        for i, cfg in enumerate(replicas):
+            by_cfg.setdefault(id(cfg), []).append(i)
+        results: list[Optional[SimResult]] = [None] * len(replicas)
+        for idxs in by_cfg.values():
+            cfg = replicas[idxs[0]]
+            vf = VectorFleetSim(cfg.mode, cfg.target,
+                                [parts[i] for i in idxs],
+                                draft_cfg=cfg.draft,
+                                seeds=[seed + i for i in idxs],
+                                start_s=start_s, rng_mode=rng_mode)
+            for lane, res in zip(idxs, vf.drain().results()):
+                results[lane] = res
+        return FleetResult(fleet, results, parts, SimResult.merge(results))
     results = []
-    for i, (cfg, part) in enumerate(zip(fleet.replicas(), parts)):
+    for i, (cfg, part) in enumerate(zip(replicas, parts)):
         results.append(simulate(cfg.mode, cfg.target, part, draft_cfg=cfg.draft,
                                 seed=seed + i, start_s=start_s,
                                 batching=batching))

@@ -49,7 +49,6 @@ carbon intensity and lifetime (Figs. 14-15) reuse one simulation.
 """
 from __future__ import annotations
 
-import bisect
 import dataclasses
 import math
 from collections import deque
@@ -70,6 +69,7 @@ from repro.serving.batching import (
     BatchPolicy,
     BlockLedger,
     ContinuousScheduler,
+    DpdReadyQueue,
     OutOfBlocks,
     SchedSeq,
     build_dpd_decode_ledger,
@@ -268,11 +268,23 @@ class SimResult:
         still charges each reserved instance's idle window."""
         if not results:
             raise ValueError("merge() needs at least one SimResult")
+        # accumulate in place and sort each chip's segments once at the
+        # end: pairwise merged_with() re-sorts the growing list per fold,
+        # which is quadratic in fleet size and dominates large merges
         use: dict[str, ChipUse] = {}
         for r in results:
             for name, u in r.use.items():
-                use[name] = use[name].merged_with(u) if name in use else \
-                    ChipUse(u.busy_s, u.energy_j, list(u.segments), u.instances)
+                if name in use:
+                    agg = use[name]
+                    agg.busy_s += u.busy_s
+                    agg.energy_j += u.energy_j
+                    agg.instances += u.instances
+                    agg.segments.extend(u.segments)
+                else:
+                    use[name] = ChipUse(u.busy_s, u.energy_j,
+                                        list(u.segments), u.instances)
+        for agg in use.values():
+            agg.segments.sort()
         traces = [t for r in results for t in r.traces]
         traces.sort(key=lambda t: t.req.arrival_s)
         return SimResult(
@@ -363,20 +375,25 @@ class ReplicaSim:
         self._ctx_estimate = ctx_estimate
         self._cap: Optional[int] = None
         self._i_arrival = 0                       # next trace to admit
+        # traces removed by reclaim_pending(): keeps continuous-path sids
+        # (_i_arrival + _num_reclaimed) unique across removals
+        self._num_reclaimed = 0
         # single-loop (standalone/spec/dsd) state
         self._t = start_s
         self._prefq: deque[ReqTrace] = deque()
         self._active: list[_Active] = []
         # dpd state: prefill pool clock, FIFO link, decode pool clock
+        # (the serialized path keeps the FIFO `_ready` list; the
+        # continuous path admits through the class-aware `_ready_q`)
         self._t_a = start_s
         self._t_b = start_s
         self._link_free = start_s
         self._ready: list[tuple[float, ReqTrace]] = []
         self._i_ready = 0
-        # dpd continuous: reshipped (swap-preempted) sequences re-enter
-        # through their own queue, merged with `_ready` by ready time
-        self._requeue: list = []
-        self._i_requeue = 0
+        # dpd continuous: class-aware pool-B admission across the KV link
+        # (ships and reships enter ONE queue; tight > standard > relaxed,
+        # aging per pool-B round - batching.DpdReadyQueue)
+        self._ready_q = DpdReadyQueue(self.policy.age_steps)
         # continuous-policy state (built lazily, like `cap`)
         self._sched: Optional[ContinuousScheduler] = None   # single-pool
         self._sched_a: Optional[ContinuousScheduler] = None  # dpd prefill pool
@@ -393,6 +410,57 @@ class ReplicaSim:
         tr = ReqTrace(req)
         self.traces.append(tr)
         return tr
+
+    def reclaim_pending(self) -> list[Request]:
+        """Remove and return every submitted request this engine has done
+        NO work for yet: nothing charged, no KV, no tokens, no scheduler
+        blocks. The drain-handoff hook - the autoscaler reclaims a
+        draining replica's untouched backlog and re-routes it onto the
+        survivors/replacements instead of stalling it behind the drain.
+
+        Reclaimable requests are (a) arrivals not yet pulled into the
+        engine (`_i_arrival` tail), (b) serialized-path prompts queued in
+        `_prefq` whose prefill has not begun, and (c) continuous-path
+        sequences still in the scheduler's waiting line with zero prefill
+        progress. Requests with any work done (in-flight chunks, shipped
+        dpd KV, emitted tokens) stay and drain here. Afterwards this
+        sim's traces, charges, and queues are exactly as if the reclaimed
+        requests had never been submitted. Returned sorted by
+        (arrival_s, req_id)."""
+        traces = self.traces
+        drop: set[int] = set(range(self._i_arrival, len(traces)))
+        if self.policy.kind == "continuous":
+            sched = self._sched_a if self.mode.kind == "dpd" else self._sched
+            if sched is not None:
+                pos = {id(tr): i for i, tr in enumerate(traces)}
+                keep = []
+                for seq in sched.waiting:
+                    # waiting seqs hold no ledger blocks; zero prefill
+                    # progress + zero tokens means untouched (a preempted
+                    # seq resets prefilled but re-prefills from scratch,
+                    # so it is equally untouched when tokenless)
+                    if seq.prefilled == 0 and seq.payload.tokens_out == 0:
+                        drop.add(pos[id(seq.payload)])
+                    else:
+                        keep.append(seq)
+                sched.waiting[:] = keep
+        elif self.mode.kind != "dpd":
+            pos = {id(tr): i for i, tr in enumerate(traces)}
+            keep_q: deque[ReqTrace] = deque()
+            for tr in self._prefq:
+                drop.add(pos[id(tr)])
+            self._prefq = keep_q
+        # serialized dpd prefills straight off the trace list (no queue
+        # between admission and work), so only the un-admitted tail above
+        # is reclaimable there
+        if not drop:
+            return []
+        reclaimed = [traces[i].req for i in sorted(drop)]
+        self._num_reclaimed += len(drop)
+        self._i_arrival -= sum(1 for i in drop if i < self._i_arrival)
+        self.traces = [tr for i, tr in enumerate(traces) if i not in drop]
+        reclaimed.sort(key=lambda r: (r.arrival_s, r.req_id))
+        return reclaimed
 
     # ------------------------------------------------------------- state
     @property
@@ -675,7 +743,8 @@ class ReplicaSim:
                 tr = traces[self._i_arrival]
                 keys = request_block_keys(tr.req, self.policy.block_size) \
                     if sched.cache is not None else ()
-                sched.submit(SchedSeq(self._i_arrival, tr.req.prompt_len,
+                sched.submit(SchedSeq(self._i_arrival + self._num_reclaimed,
+                                      tr.req.prompt_len,
                                       tr.req.output_len, payload=tr,
                                       priority=class_priority(tr.req.slo_class),
                                       prefix_keys=keys))
@@ -771,7 +840,8 @@ class ReplicaSim:
                 # where the next turn's prefill will match)
                 keys = request_block_keys(tr.req, self.policy.block_size) \
                     if sched.cache is not None else ()
-                sched.submit(SchedSeq(self._i_arrival, tr.req.prompt_len, 1,
+                sched.submit(SchedSeq(self._i_arrival + self._num_reclaimed,
+                                      tr.req.prompt_len, 1,
                                       payload=tr,
                                       priority=class_priority(tr.req.slo_class),
                                       prefix_keys=keys))
@@ -807,12 +877,17 @@ class ReplicaSim:
                 self.link_bytes += nbytes
                 self.link_busy_s += tx
                 if tr.req.output_len > 1:
-                    self._ready.append((self._link_free, tr, 1))
+                    self._ready_q.push(self._link_free,
+                                       class_priority(tr.req.slo_class),
+                                       (tr, 1))
                 else:
                     tr.finish_s = self._t_a
 
-        # pool B: block-granular continuous decode over KV-arrived requests
+        # pool B: block-granular continuous decode over KV-arrived
+        # requests, admitted class-first (DpdReadyQueue: tight > standard
+        # > relaxed, aging per pool-B round, KV-arrival order within)
         ledger = self._ledger_b_pool()
+        q = self._ready_q
 
         def reship(seq: SchedSeq) -> None:
             """Swap-style preemption: free the blocks now, pay the link to
@@ -830,34 +905,16 @@ class ReplicaSim:
             tx = mode.interconnect.transfer_time(nbytes)
             self.link_bytes += nbytes
             self.link_busy_s += tx
-            # keep the requeue time-ordered (tx scales with kv, so a later
-            # short-kv reship can be ready before an earlier long-kv one);
-            # ready > _t_b >= every already-admitted entry, so the insert
-            # never lands before _i_requeue
-            bisect.insort(self._requeue, (self._t_b + tx, seq.payload,
-                                          seq.emitted),
-                          lo=self._i_requeue, key=lambda e: e[0])
+            q.push(self._t_b + tx, seq.priority, (seq.payload, seq.emitted))
 
-        def head() -> "tuple[Optional[tuple], bool]":
-            """Earliest-ready of the pool-A ship stream and the reship
-            requeue (each internally time-ordered); ties go to pool A."""
-            a = self._ready[self._i_ready] \
-                if self._i_ready < len(self._ready) else None
-            b = self._requeue[self._i_requeue] \
-                if self._i_requeue < len(self._requeue) else None
-            if a is not None and (b is None or a[0] <= b[0]):
-                return a, True
-            return b, False
-
-        while (self._i_ready < len(self._ready)
-               or self._i_requeue < len(self._requeue) or self._active_b):
+        while len(q) or self._active_b:
             if self._t_b >= t_stop:
                 return
             while len(self._active_b) < mode.max_batch:
-                entry, from_ships = head()
-                if entry is None or entry[0] > self._t_b:
+                entry = q.peek_eligible(self._t_b)
+                if entry is None:
                     break
-                _, tr, resume_emitted = entry
+                tr, resume_emitted = entry[4]
                 sid = tr.req.req_id
                 kv0 = tr.req.prompt_len + resume_emitted - 1
                 # watermark: keep one growth block per active sequence
@@ -872,20 +929,18 @@ class ReplicaSim:
                 seq.emitted = resume_emitted
                 ledger.allocate(sid, kv0)
                 self._active_b.append(seq)
-                if from_ships:
-                    self._i_ready += 1
-                else:
-                    self._i_requeue += 1
+                q.pop(entry)
             if not self._active_b:
-                entry, _ = head()
-                if entry is None:
+                if not len(q):
                     return                        # waiting on pool A / link
-                nxt, tr, resume_emitted = entry
-                if nxt <= self._t_b:
+                blocked = q.peek_eligible(self._t_b)
+                if blocked is not None:
+                    tr, resume_emitted = blocked[4]
                     raise OutOfBlocks(
                         "dpd decode pool cannot fit one sequence (need "
                         f"{ledger.blocks_needed(tr.req.prompt_len + resume_emitted - 1)}"
                         f" blocks of {ledger.num_blocks})")
+                nxt = q.next_ready_s()
                 if nxt >= t_stop:
                     return
                 self._t_b = nxt
@@ -906,6 +961,9 @@ class ReplicaSim:
             ctxs = tuple(s.ctx for s in stepping)
             c = hybrid_step_cost(cfg, self.old_chip, (), ctxs)
             self._charge(self.old_chip.name, c, self._t_b)
+            # aging credit for arrived entries this round kept waiting
+            # (round START time: window-invariant - see DpdReadyQueue)
+            q.note_round(self._t_b)
             self._t_b += c.time_s
             done = []
             for seq in stepping:

@@ -1,0 +1,670 @@
+"""Vectorized fleet simulation core: lockstep array stepping across replicas.
+
+`ReplicaSim` (serving/simulator.py) advances one replica with a Python
+event loop over per-request objects; at fleet scale (1k-10k replicas,
+100k-1M requests) the interpreter overhead dominates wall clock. This
+module re-executes the SAME serialized schedules as `ReplicaSim` - one
+"event" (prefill admission, decode round, or idle jump) per replica per
+lockstep iteration - but keeps all per-request state in flat numpy arrays
+(phase via pointer/slot membership, context length, remaining tokens,
+SLO-class priority) and all per-replica state in [R]-shaped arrays
+(clocks, queue pointers, active-set sizes, chip busy/energy accumulators).
+
+Bit-exactness strategy: every latency/energy number is produced by the
+*existing scalar cost functions* (`prefill_charges`, `decode_cost`,
+`spec_round_charges`, `spec_round_time`, `dpd_kv_bytes`) through a memo
+keyed on the integer inputs that determine them (prompt length; (batch,
+mean-context)). The vector core never re-derives a roofline formula, so
+its floats are the scalar path's floats by construction; per-replica
+accumulation (clock adds, busy/energy sums, link chains) happens in the
+same operation order as the per-replica loop. `tests/test_vector_core.py`
+pins `VectorFleetSim == ReplicaSim` with `==` (not approx) on all four
+serving kinds, and `advance_to == drain` windowed parity.
+
+Speculative RNG: `ReplicaSim` draws a *variable* number of uniforms per
+request per round (`_emit_round_tokens`), which cannot be batched without
+changing the draw sequence. Two modes:
+
+  rng_mode="sequential"  per-replica `default_rng(seed_r)` drawn in active
+                         order - bit-exact vs `ReplicaSim` (the default,
+                         and what the parity tests run);
+  rng_mode="batched"     one fleet-level generator draws a dense (n, k)
+                         uniform block per round and takes the leading
+                         accept run - statistically identical (same
+                         truncated-geometric law per request), documented
+                         non-bit-exact, and O(1) Python calls per step.
+                         Use for 10k-replica-scale sweeps.
+
+standalone/dpd serialized schedules have no RNG at all, so both modes are
+bit-exact there - the fleet_scale_sweep headline numbers are measured on
+that path. The continuous policy keeps its per-replica
+`ContinuousScheduler` executor (its decisions are irreducibly sequential);
+`simulate_fleet(core="vector")` falls back per replica for it. See
+docs/scaling.md.
+
+All replicas in one `VectorFleetSim` share a (mode, target, draft) config;
+heterogeneous fleets run one instance per config group
+(`fleet.simulate_fleet(core="vector")` does the grouping).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.carbon import CHIP_DB
+from repro.models.config import ModelConfig
+from repro.serving.costs import (
+    dpd_kv_bytes,
+    dsd_link_bytes,
+    prefill_charges,
+    spec_round_charges,
+    spec_round_time,
+)
+from repro.serving.perfmodel import decode_cost, max_concurrency
+from repro.serving.simulator import (
+    ChipUse,
+    ReqTrace,
+    ServingMode,
+    SimResult,
+    _emit_round_tokens,
+)
+from repro.serving.workload import Request, class_priority
+
+_CTX_BITS = 32
+_CTX_MASK = (1 << _CTX_BITS) - 1
+
+
+def _gather(keys: np.ndarray, cache: dict, compute, width: int) -> np.ndarray:
+    """Map an int64 key array through a scalar-compute memo, vectorized.
+
+    One `compute` call per key never seen before; everything else is a
+    unique+take. Returns float64 [len(keys), width]."""
+    if len(keys) and keys[0] == keys[-1] and (keys == keys[0]).all():
+        # constant-key round (fixed-size sweeps): skip the unique sort
+        kv = int(keys[0])
+        v = cache.get(kv)
+        if v is None:
+            v = compute(kv)
+            cache[kv] = v
+        return np.broadcast_to(np.asarray(v, dtype=np.float64),
+                               (len(keys), width))
+    uniq, inv = np.unique(keys, return_inverse=True)
+    table = np.empty((len(uniq), width), dtype=np.float64)
+    for i, kv in enumerate(uniq.tolist()):
+        v = cache.get(kv)
+        if v is None:
+            v = compute(kv)
+            cache[kv] = v
+        table[i] = v
+    return table[inv]
+
+
+class VectorFleetSim:
+    """Lockstep simulator for R replicas of ONE serving configuration.
+
+    Construction takes the full per-replica request partitions up front
+    (the `simulate()` contract: everything submitted, then advanced);
+    `advance_to(t)` runs every step beginning before `t` on every lane,
+    `drain()` runs to completion. `results()` materializes per-lane
+    `SimResult`s (ReqTrace/ChipUse objects) for parity tests and merging;
+    `stats()` summarizes straight from the arrays for benchmark-scale runs
+    where materializing millions of objects would dominate.
+    """
+
+    def __init__(
+        self,
+        mode: ServingMode,
+        target_cfg: ModelConfig,
+        partitions: Sequence[Sequence[Request]],
+        draft_cfg: Optional[ModelConfig] = None,
+        seeds: Optional[Sequence[int]] = None,
+        start_s: float = 0.0,
+        rng_mode: str = "sequential",
+        record_segments: bool = True,
+        ctx_estimate: Optional[int] = None,
+    ):
+        if mode.kind in ("spec", "dsd") and draft_cfg is None:
+            raise ValueError(f"{mode.kind} needs a draft model")
+        if start_s < 0:
+            raise ValueError(f"negative start_s: {start_s}")
+        if rng_mode not in ("sequential", "batched"):
+            raise ValueError(f"unknown rng_mode: {rng_mode!r}")
+        self.mode = mode
+        self.target_cfg = target_cfg
+        self.draft_cfg = draft_cfg
+        self.start_s = start_s
+        self.rng_mode = rng_mode
+        self.new_chip = CHIP_DB[mode.new_chip]
+        self.old_chip = CHIP_DB[mode.old_chip] if mode.old_chip else None
+        # chip accumulator columns (ReplicaSim.use key set, insertion order)
+        names = [mode.new_chip]
+        if mode.old_chip and mode.old_chip != mode.new_chip:
+            names.append(mode.old_chip)
+        self.chip_names = names
+        self._old_ci = names.index(mode.old_chip) if mode.old_chip else 0
+
+        R = len(partitions)
+        self.R = R
+        seeds = list(seeds) if seeds is not None else [0] * R
+        if len(seeds) != R:
+            raise ValueError("seeds must match the number of partitions")
+        self._seeds = seeds
+
+        counts = np.array([len(p) for p in partitions], dtype=np.int64)
+        self.lane_start = np.zeros(R + 1, dtype=np.int64)
+        np.cumsum(counts, out=self.lane_start[1:])
+        self.lane_end = self.lane_start[1:]
+        self.nflat = int(self.lane_start[-1])
+        self.reqs: list[Request] = [r for p in partitions for r in p]
+        n = self.nflat
+        self.arr_s = np.array([r.arrival_s for r in self.reqs], dtype=np.float64) \
+            if n else np.zeros(0, dtype=np.float64)
+        self.plen = np.array([r.prompt_len for r in self.reqs], dtype=np.int64) \
+            if n else np.zeros(0, dtype=np.int64)
+        self.olen = np.array([r.output_len for r in self.reqs], dtype=np.int64) \
+            if n else np.zeros(0, dtype=np.int64)
+        self.prio = np.array([class_priority(r.slo_class) for r in self.reqs],
+                             dtype=np.int64) if n else np.zeros(0, dtype=np.int64)
+        for r in range(R):
+            s, e = self.lane_start[r], self.lane_end[r]
+            if e - s > 1 and (np.diff(self.arr_s[s:e]) < 0).any():
+                raise ValueError("arrivals must be non-decreasing per lane")
+
+        # per-request outputs (phase is implicit: queued = index >= i_pref,
+        # active = present in a lane's slot set, finished = finish not NaN)
+        self.ttft = np.full(n, np.nan)
+        self.first = np.full(n, np.nan)
+        self.last = np.full(n, np.nan)
+        self.finish = np.full(n, np.nan)
+        self.tok = np.zeros(n, dtype=np.int64)
+
+        # per-lane clocks and pointers
+        self.t = np.full(R, start_s)          # single-pool clock / dpd pool A
+        self.t_b = np.full(R, start_s)        # dpd pool B clock
+        self.link_free = np.full(R, start_s)  # dpd FIFO link chain
+        self.i_pref = self.lane_start[:-1].copy()   # next request to prefill
+        self.done = np.zeros(R, dtype=bool)
+        self.link_bytes = np.zeros(R)
+        self.link_busy = np.zeros(R)
+
+        # admission caps (ReplicaSim.cap, derived per lane from its own
+        # partition exactly as the lazy property does)
+        self.cap = self._compute_caps(partitions, ctx_estimate)
+        C = int(self.cap.max()) if R else 1
+        self.C = C
+        # active decode sets: [R, C] slot arrays, slots >= act_n zeroed
+        self.act_f = np.zeros((R, C), dtype=np.int64)
+        self.act_ctx = np.zeros((R, C), dtype=np.int64)
+        self.act_rem = np.zeros((R, C), dtype=np.int64)
+        self.act_n = np.zeros(R, dtype=np.int64)
+        self._slots = np.arange(C, dtype=np.int64)
+
+        # dpd ready stream: at most one entry per request with output_len>1,
+        # laid out per lane like the request arrays
+        if mode.kind == "dpd":
+            rcounts = np.zeros(R, dtype=np.int64)
+            for r in range(R):
+                s, e = self.lane_start[r], self.lane_end[r]
+                rcounts[r] = int((self.olen[s:e] > 1).sum())
+            self.r_start = np.zeros(R + 1, dtype=np.int64)
+            np.cumsum(rcounts, out=self.r_start[1:])
+            m = int(self.r_start[-1])
+            self.ready_t = np.zeros(m)
+            self.ready_f = np.zeros(m, dtype=np.int64)
+            self.r_wp = self.r_start[:-1].copy()   # write pointer (pool A)
+            self.r_rp = self.r_start[:-1].copy()   # read pointer (pool B)
+
+        # chip accumulators + optional segment log (columns appended per
+        # charge batch; per-lane order == charge order == ReplicaSim order)
+        self.busy = np.zeros((R, len(names)))
+        self.energy = np.zeros((R, len(names)))
+        self._segs = [([], [], [], []) for _ in names] if record_segments else None
+
+        # cost memos (scalar-function results keyed on integer inputs)
+        self._pref_cache: dict = {}
+        self._dec_cache: dict = {}
+
+        self._rngs = None
+        self._fleet_rng = None
+        if mode.kind in ("spec", "dsd"):
+            if rng_mode == "sequential":
+                self._rngs = [np.random.default_rng(s) for s in seeds]
+            else:
+                self._fleet_rng = np.random.default_rng(list(seeds) or 0)
+
+    # ------------------------------------------------------------ setup
+    def _compute_caps(self, partitions, ctx_estimate) -> np.ndarray:
+        mode = self.mode
+        decode_chip = self.old_chip if mode.kind == "dpd" else self.new_chip
+        memo: dict[int, int] = {}
+
+        def cap_for(ctx: int) -> int:
+            c = memo.get(ctx)
+            if c is None:
+                c = min(mode.max_batch,
+                        max_concurrency(self.target_cfg, decode_chip, ctx))
+                if self.draft_cfg is not None and mode.kind == "spec":
+                    c = min(c, max_concurrency(self.draft_cfg, self.new_chip, ctx))
+                memo[ctx] = max(c, 1)
+            return memo[ctx]
+
+        caps = np.empty(self.R, dtype=np.int64)
+        for r in range(self.R):
+            if ctx_estimate is not None:
+                ctx = ctx_estimate
+            else:
+                s, e = self.lane_start[r], self.lane_end[r]
+                ctx = int(np.mean(self.plen[s:e] + self.olen[s:e])) \
+                    if e > s else 512
+            caps[r] = cap_for(int(ctx))
+        return caps
+
+    # ------------------------------------------------------------ charging
+    def _charge(self, ci: int, lanes: np.ndarray, t0: np.ndarray,
+                dt: np.ndarray, de: np.ndarray) -> None:
+        """One charge batch on chip column `ci` (ChipUse.add, vectorized)."""
+        self.busy[lanes, ci] += dt
+        self.energy[lanes, ci] += de
+        if self._segs is not None:
+            sl, s0, s1, se = self._segs[ci]
+            sl.append(lanes.copy())
+            s0.append(np.array(t0))
+            s1.append(t0 + dt)
+            se.append(np.array(de))
+
+    # ------------------------------------------------------------ cost memos
+    def _pref_compute(self, pl: int):
+        m = self.mode
+        sched = prefill_charges(m.kind, self.target_cfg, self.draft_cfg,
+                                self.new_chip, self.old_chip, int(pl))
+        ch = sched.charges
+        if m.kind in ("standalone", "dpd"):
+            c = ch[0][1]
+            row = [c.time_s, c.energy_j, sched.duration_s]
+            if m.kind == "dpd":
+                nbytes = dpd_kv_bytes(self.target_cfg, int(pl))
+                row += [nbytes, m.interconnect.transfer_time(nbytes)]
+            return row
+        # spec: target then draft serialized; dsd: target/new + draft/old parallel
+        c_t, c_d = ch[0][1], ch[1][1]
+        return [c_t.time_s, c_t.energy_j, c_d.time_s, c_d.energy_j,
+                sched.duration_s]
+
+    def _dec_compute(self, key: int):
+        b, ctx = int(key) >> _CTX_BITS, int(key) & _CTX_MASK
+        m = self.mode
+        if m.kind == "standalone":
+            c = decode_cost(self.target_cfg, self.new_chip, b, ctx)
+            return [c.time_s, c.energy_j]
+        if m.kind == "dpd":
+            c = decode_cost(self.target_cfg, self.old_chip, b, ctx)
+            return [c.time_s, c.energy_j]
+        _, c_d, c_t = spec_round_charges(
+            m.kind, self.target_cfg, self.draft_cfg,
+            self.new_chip, self.old_chip, b, ctx, m.spec_k)
+        if m.kind == "spec":
+            rt = spec_round_time("spec", c_d, c_t, m.interconnect, 0, 0)
+            return [c_d.time_s, c_d.energy_j, c_t.time_s, c_t.energy_j, rt]
+        ids_b, probs_b = dsd_link_bytes(self.draft_cfg, b, m.spec_k)
+        rt = spec_round_time("dsd", c_d, c_t, m.interconnect, ids_b, probs_b,
+                             overlap=m.overlap_comm)
+        lbusy = (m.interconnect.transfer_time(ids_b)
+                 + m.interconnect.transfer_time(probs_b))
+        return [c_d.time_s, c_d.energy_j, c_t.time_s, c_t.energy_j, rt,
+                ids_b + probs_b, lbusy]
+
+    # ------------------------------------------------------------ driving
+    def advance_to(self, t_stop: float) -> "VectorFleetSim":
+        if self.mode.kind == "dpd":
+            self._advance_dpd(t_stop)
+        else:
+            self._advance_single(t_stop)
+        return self
+
+    def drain(self) -> "VectorFleetSim":
+        return self.advance_to(math.inf)
+
+    # ----------------------------------------- standalone / spec / dsd
+    def _advance_single(self, t_stop: float) -> None:
+        while True:
+            runnable = ~self.done & (self.t < t_stop)
+            if not runnable.any():
+                return
+            has_next = self.i_pref < self.lane_end
+            safe = np.minimum(self.i_pref, max(self.nflat - 1, 0))
+            nxt_arr = np.where(has_next, self.arr_s[safe] if self.nflat
+                               else np.inf, np.inf)
+            has_pref = runnable & has_next & (nxt_arr <= self.t)
+            has_act = self.act_n > 0
+            idle = runnable & ~has_pref & ~has_act
+            done_now = idle & ~has_next
+            jump = idle & has_next & (nxt_arr < t_stop)
+            pref = has_pref & (self.act_n < self.cap)
+            dec = runnable & (has_pref | has_act) & ~pref
+            if not (pref.any() or dec.any() or jump.any() or done_now.any()):
+                return                      # everything left blocks on t_stop
+            if done_now.any():
+                self.done |= done_now
+            if jump.any():
+                self.t[jump] = np.maximum(self.t[jump], nxt_arr[jump])
+            if pref.any():
+                self._do_prefill(np.nonzero(pref)[0])
+            if dec.any():
+                self._do_decode(np.nonzero(dec)[0])
+
+    def _do_prefill(self, lanes: np.ndarray) -> None:
+        kind = self.mode.kind
+        f = self.i_pref[lanes]
+        vals = _gather(self.plen[f], self._pref_cache, self._pref_compute,
+                       3 if kind == "standalone" else 5)
+        t0 = self.t[lanes]
+        if kind == "standalone":
+            self._charge(0, lanes, t0, vals[:, 0], vals[:, 1])
+            dur = vals[:, 2]
+        elif kind == "spec":
+            self._charge(0, lanes, t0, vals[:, 0], vals[:, 1])
+            self._charge(0, lanes, t0 + vals[:, 0], vals[:, 2], vals[:, 3])
+            dur = vals[:, 4]
+        else:  # dsd: target on new, draft on old, parallel pools
+            self._charge(0, lanes, t0, vals[:, 0], vals[:, 1])
+            self._charge(self._old_ci, lanes, t0, vals[:, 2], vals[:, 3])
+            dur = vals[:, 4]
+        tnew = t0 + dur
+        self.t[lanes] = tnew
+        self._finish_prefill(lanes, f, tnew, self.plen[f] + 1)
+        self.i_pref[lanes] += 1
+
+    def _finish_prefill(self, lanes: np.ndarray, f: np.ndarray,
+                        tnew: np.ndarray, ctx0: np.ndarray) -> None:
+        """First-token bookkeeping + activation (ReplicaSim._step_prefill)."""
+        self.ttft[f] = tnew - self.arr_s[f]
+        self.first[f] = tnew
+        self.last[f] = tnew
+        self.tok[f] = 1
+        multi = self.olen[f] > 1
+        ml, mf = lanes[multi], f[multi]
+        slot = self.act_n[ml]
+        self.act_f[ml, slot] = mf
+        self.act_ctx[ml, slot] = ctx0[multi]
+        self.act_rem[ml, slot] = self.olen[mf] - 1
+        self.act_n[ml] += 1
+        self.finish[f[~multi]] = tnew[~multi]
+
+    def _round_emitted(self, lanes: np.ndarray, sub_rem: np.ndarray,
+                       m: np.ndarray) -> np.ndarray:
+        """Tokens emitted per active slot for one decode round ([L, cmax])."""
+        kind = self.mode.kind
+        if kind in ("standalone", "dpd"):
+            return m.astype(np.int64)
+        acc, k = self.mode.acceptance, self.mode.spec_k
+        e = np.zeros_like(sub_rem)
+        if self.rng_mode == "sequential":
+            for i, li in enumerate(lanes.tolist()):
+                g = self._rngs[li]
+                for j in range(int(self.act_n[li])):
+                    e[i, j] = min(_emit_round_tokens(g, acc, k),
+                                  int(sub_rem[i, j]))
+        else:
+            total = int(m.sum())
+            u = self._fleet_rng.random((total, k))
+            run = (u < acc).cumprod(axis=1).sum(axis=1) + 1
+            e[m] = np.minimum(run, sub_rem[m])
+        return e
+
+    def _do_decode(self, lanes: np.ndarray) -> None:
+        kind = self.mode.kind
+        b = self.act_n[lanes]
+        cmax = int(b.max())
+        cols = self._slots[:cmax]
+        # fancy row index + basic column slice: one advanced-indexing pass,
+        # measurably cheaper than broadcasting [L,1]x[1,cmax] index arrays
+        sub_f = self.act_f[lanes, :cmax]
+        sub_ctx = self.act_ctx[lanes, :cmax]
+        sub_rem = self.act_rem[lanes, :cmax]
+        ctx = (sub_ctx.sum(axis=1).astype(np.float64)
+               / b).astype(np.int64)          # == int(np.mean([a.ctx ...]))
+        keys = (b << _CTX_BITS) | ctx
+        width = {"standalone": 2, "dpd": 2, "spec": 5, "dsd": 7}[kind]
+        vals = _gather(keys, self._dec_cache, self._dec_compute, width)
+        t0 = self.t[lanes] if kind != "dpd" else self.t_b[lanes]
+        if kind in ("standalone", "dpd"):
+            ci = 0 if kind == "standalone" else self._old_ci
+            self._charge(ci, lanes, t0, vals[:, 0], vals[:, 1])
+            tnew = t0 + vals[:, 0]
+        else:
+            draft_ci = 0 if kind == "spec" else self._old_ci
+            self._charge(draft_ci, lanes, t0, vals[:, 0], vals[:, 1])
+            self._charge(0, lanes, t0 + vals[:, 0], vals[:, 2], vals[:, 3])
+            if kind == "dsd":
+                self.link_bytes[lanes] += vals[:, 5]
+                self.link_busy[lanes] += vals[:, 6]
+            tnew = t0 + vals[:, 4]
+        if kind == "dpd":
+            self.t_b[lanes] = tnew
+        else:
+            self.t[lanes] = tnew
+
+        m = cols[None, :] < b[:, None]
+        e = self._round_emitted(lanes, sub_rem, m)
+        rows = sub_f[m]
+        self.tok[rows] += e[m]
+        tmat = np.broadcast_to(tnew[:, None], m.shape)
+        self.last[rows] = tmat[m]
+        sub_ctx += e
+        sub_rem -= e
+        fin = m & (sub_rem <= 0)
+        nfin = fin.sum(axis=1)
+        if nfin.any():
+            self.finish[sub_f[fin]] = tmat[fin]
+            # stable left-compaction of the surviving slots (list.remove
+            # order), restricted to the lanes that retired something
+            sel = nfin > 0
+            keep = m[sel] & ~fin[sel]
+            pos = np.cumsum(keep, axis=1) - 1
+            r_i, c_i = np.nonzero(keep)
+            srows = lanes[sel]
+            for arr, valsrc in ((self.act_f, sub_f[sel]),
+                                (self.act_ctx, sub_ctx[sel]),
+                                (self.act_rem, sub_rem[sel])):
+                newsub = np.zeros_like(valsrc)
+                newsub[r_i, pos[r_i, c_i]] = valsrc[r_i, c_i]
+                arr[srows, :cmax] = newsub
+            self.act_n[srows] = keep.sum(axis=1)
+            ok = ~sel
+            if ok.any():
+                orows = lanes[ok]
+                self.act_ctx[orows, :cmax] = sub_ctx[ok]
+                self.act_rem[orows, :cmax] = sub_rem[ok]
+        else:
+            self.act_ctx[lanes, :cmax] = sub_ctx
+            self.act_rem[lanes, :cmax] = sub_rem
+
+    # ------------------------------------------------------------ dpd
+    def _advance_dpd(self, t_stop: float) -> None:
+        # pool A: one prefill per lane per iteration, pipelined FIFO link
+        while True:
+            live = self.i_pref < self.lane_end
+            if not live.any():
+                break
+            f = np.minimum(self.i_pref, max(self.nflat - 1, 0))
+            start = np.maximum(self.t, self.arr_s[f])
+            lanes = np.nonzero(live & (start < t_stop))[0]
+            if not len(lanes):
+                break
+            f = self.i_pref[lanes]
+            self.t[lanes] = start[lanes]
+            vals = _gather(self.plen[f], self._pref_cache,
+                           self._pref_compute, 5)
+            t0 = self.t[lanes]
+            self._charge(0, lanes, t0, vals[:, 0], vals[:, 1])
+            tnew = t0 + vals[:, 2]
+            self.t[lanes] = tnew
+            self.ttft[f] = tnew - self.arr_s[f]
+            self.first[f] = tnew
+            self.last[f] = tnew
+            self.tok[f] = 1
+            nbytes, tx = vals[:, 3], vals[:, 4]
+            lstart = np.maximum(tnew, self.link_free[lanes])
+            lfree = lstart + tx
+            self.link_free[lanes] = lfree
+            self.link_bytes[lanes] += nbytes
+            self.link_busy[lanes] += tx
+            multi = self.olen[f] > 1
+            ml = lanes[multi]
+            wp = self.r_wp[ml]
+            self.ready_t[wp] = lfree[multi]
+            self.ready_f[wp] = f[multi]
+            self.r_wp[ml] += 1
+            self.finish[f[~multi]] = tnew[~multi]
+            self.i_pref[lanes] += 1
+
+        # pool B: admission from the ready stream + decode rounds
+        while True:
+            has_ready = self.r_rp < self.r_wp
+            live = (has_ready | (self.act_n > 0)) & (self.t_b < t_stop)
+            if not live.any():
+                return
+            # admission: one ready entry per lane per sub-iteration
+            while True:
+                safe = np.minimum(self.r_rp, max(len(self.ready_t) - 1, 0))
+                rt = self.ready_t[safe] if len(self.ready_t) else \
+                    np.zeros(self.R)
+                can = live & (self.r_rp < self.r_wp) & (rt <= self.t_b) \
+                    & (self.act_n < self.cap)
+                if not can.any():
+                    break
+                ml = np.nonzero(can)[0]
+                mf = self.ready_f[self.r_rp[ml]]
+                slot = self.act_n[ml]
+                self.act_f[ml, slot] = mf
+                self.act_ctx[ml, slot] = self.plen[mf] + 1
+                self.act_rem[ml, slot] = self.olen[mf] - 1
+                self.act_n[ml] += 1
+                self.r_rp[ml] += 1
+            has_ready = self.r_rp < self.r_wp
+            idle = live & (self.act_n == 0)
+            # idle lanes with a pending ready entry jump to it (the serial
+            # loop assigns t_b = nxt; nxt > t_b holds or it would have been
+            # admitted above); idle lanes without one wait on pool A
+            jump = idle & has_ready
+            if jump.any():
+                safe = np.minimum(self.r_rp, len(self.ready_t) - 1)
+                nxt = self.ready_t[safe]
+                jmp = jump & (nxt < t_stop)
+                self.t_b[jmp] = nxt[jmp]
+            dec = live & (self.act_n > 0)
+            if dec.any():
+                self._do_decode(np.nonzero(dec)[0])
+            elif not jump.any():
+                return                       # all blocked on horizon / pool A
+
+    # ------------------------------------------------------------ output
+    def _segments_by_lane(self, ci: int):
+        sl, s0, s1, se = self._segs[ci]
+        if not sl:
+            return None
+        lane = np.concatenate(sl)
+        t0 = np.concatenate(s0)
+        t1 = np.concatenate(s1)
+        e = np.concatenate(se)
+        order = np.argsort(lane, kind="stable")   # append order within lane
+        lane, t0, t1, e = lane[order], t0[order], t1[order], e[order]
+        starts = np.searchsorted(lane, np.arange(self.R))
+        ends = np.searchsorted(lane, np.arange(self.R), side="right")
+        return lane, t0, t1, e, starts, ends
+
+    @property
+    def pending(self) -> int:
+        """Requests submitted but not yet finished (all lanes)."""
+        return int(np.isnan(self.finish).sum())
+
+    @property
+    def idle(self) -> bool:
+        return self.pending == 0
+
+    def results(self) -> list[SimResult]:
+        """Materialize one `SimResult` per lane (ReplicaSim-compatible)."""
+        segs = [self._segments_by_lane(ci) for ci in range(len(self.chip_names))] \
+            if self._segs is not None else [None] * len(self.chip_names)
+        # bulk ndarray->python conversion up front: per-element float()/int()
+        # casts inside the listcomps dominate materialization at fleet scale
+        ttft_l, fin_l = self.ttft.tolist(), self.finish.tolist()
+        tok_l, first_l, last_l = (self.tok.tolist(), self.first.tolist(),
+                                  self.last.tolist())
+        seg_tuples = []
+        for sg in segs:
+            if sg is None:
+                seg_tuples.append(None)
+            else:
+                _, t0, t1, en, st, en_idx = sg
+                seg_tuples.append((list(zip(t0.tolist(), t1.tolist(),
+                                            en.tolist())), st, en_idx))
+        out = []
+        for r in range(self.R):
+            s, e = int(self.lane_start[r]), int(self.lane_end[r])
+            traces = [
+                ReqTrace(self.reqs[i], ttft_s=ttft_l[i], finish_s=fin_l[i],
+                         tokens_out=tok_l[i], first_token_s=first_l[i],
+                         last_token_s=last_l[i])
+                for i in range(s, e)
+            ]
+            use = {}
+            for ci, name in enumerate(self.chip_names):
+                cu = ChipUse(float(self.busy[r, ci]),
+                             float(self.energy[r, ci]))
+                sg = seg_tuples[ci]
+                if sg is not None:
+                    tuples, st, en_idx = sg
+                    cu.segments = tuples[int(st[r]):int(en_idx[r])]
+                use[name] = cu
+            if self.mode.kind == "dpd":
+                duration = float(max(self.t[r], self.t_b[r], self.link_free[r]))
+            else:
+                duration = float(self.t[r])
+            out.append(SimResult(
+                self.mode, traces, use, duration,
+                link_bytes=float(self.link_bytes[r]),
+                link_busy_s=float(self.link_busy[r]),
+                start_s=self.start_s))
+        return out
+
+    def merged(self) -> SimResult:
+        return SimResult.merge(self.results())
+
+    def stats(self) -> dict:
+        """Array-level summary + conservation invariants (no materialization).
+
+        Invariants asserted by tests/test_scale_smoke.py: every request
+        finished after a drain, emitted exactly its output_len tokens, and
+        per-chip busy seconds are non-negative and finite."""
+        finished = ~np.isnan(self.finish)
+        ttft = self.ttft[~np.isnan(self.ttft)]
+        out = {
+            "n_replicas": self.R,
+            "n_requests": self.nflat,
+            "finished": int(finished.sum()),
+            "total_tokens": int(self.tok.sum()),
+            "expected_tokens": int(self.olen.sum()),
+            "mean_ttft_s": float(ttft.mean()) if len(ttft) else math.nan,
+            "max_finish_s": float(np.nanmax(self.finish)) if finished.any()
+            else math.nan,
+            "busy_s": {n: float(self.busy[:, i].sum())
+                       for i, n in enumerate(self.chip_names)},
+            "energy_j": {n: float(self.energy[:, i].sum())
+                         for i, n in enumerate(self.chip_names)},
+            "link_bytes": float(self.link_bytes.sum()),
+        }
+        per_class = {}
+        for p in np.unique(self.prio).tolist():
+            sel = self.prio == p
+            done = finished & sel
+            per_class[int(p)] = {
+                "n": int(sel.sum()),
+                "finished": int(done.sum()),
+                "mean_ttft_s": float(self.ttft[done].mean())
+                if done.any() else math.nan,
+            }
+        out["per_class"] = per_class
+        return out

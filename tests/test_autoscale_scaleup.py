@@ -1,0 +1,190 @@
+"""Drain-aware scale-up: backlog handoff + load-change re-solve boundary.
+
+When a grid-window reconcile both drains replicas and boots replacements
+(a type switch - e.g. a CI swing flips the optimal config mix), the
+victims' untouched backlog (`ReplicaSim.reclaim_pending`) is re-routed
+onto the new capacity instead of stalling behind the drain. The handoff
+is gated on same-window boots: on a pure scale-down the victims drain
+their own backlog in parallel, which finishes sooner than serializing it
+onto fewer survivors.
+
+`AutoscalePolicy.load_resolve_threshold` adds re-solve boundaries inside
+grid windows when the observed arrival rate shifts by more than the
+threshold (causal probe-slice splitting), so a mid-window load spike gets
+fresh capacity instead of waiting out the window.
+"""
+import math
+
+import pytest
+
+from repro.core.carbon import CarbonTrace
+from repro.core.disagg import standard_catalog
+from repro.serving.autoscale import AutoscalePolicy, simulate_autoscaled
+from repro.serving.batching import BatchPolicy
+from repro.serving.simulator import ReplicaSim
+from repro.serving.workload import (
+    DATASETS,
+    sample_piecewise_requests,
+    sample_requests,
+)
+
+DS = DATASETS["sharegpt"]
+CATALOG = standard_catalog()
+
+
+# ------------------------------------------------------- CAISO handoff
+def _caiso_run(drain_handoff):
+    # CAISO's daily CI swing (106-331 g/kWh) crosses the spec-llama-1b vs
+    # spec-llama-300m crossover for this (num_blocks, utilization) point,
+    # so windows re-solve into different mixes: same-window boots+drains
+    trace = CarbonTrace.from_csv(
+        "benchmarks/data/caiso_daily_ci.csv").scaled(600 / 86400.0)
+    reqs = sample_piecewise_requests(DS, [(0, 8.0)], duration_s=320, seed=3)
+    pol = AutoscalePolicy(boot_s=10.0, min_window_s=60.0, boot_carbon_g=0.0,
+                          batching=BatchPolicy(num_blocks=64),
+                          utilization=0.75, drain_handoff=drain_handoff)
+    return reqs, simulate_autoscaled(CATALOG, DS, reqs, trace, pol, seed=1)
+
+
+@pytest.mark.slow
+def test_caiso_type_switch_hands_off_backlog():
+    reqs, res = _caiso_run(True)
+    total = sum(w["handoffs"] for w in res.windows)
+    assert total > 0, "type-switch windows produced no handoffs"
+    for w in res.windows:
+        # handoff only fires when replacements booted in the same window
+        if w["handoffs"]:
+            assert w["boots"] > 0 and w["drains"] > 0
+    # every submitted request still completes, none double-served
+    assert len(res.merged.traces) == len(reqs)
+    assert all(t.tokens_out >= t.req.output_len for t in res.merged.traces)
+
+
+@pytest.mark.slow
+def test_caiso_handoff_off_serves_identical_request_set():
+    reqs, res = _caiso_run(False)
+    assert sum(w["handoffs"] for w in res.windows) == 0
+    assert len(res.merged.traces) == len(reqs)
+    assert all(t.tokens_out >= t.req.output_len for t in res.merged.traces)
+
+
+def test_pure_scale_down_never_hands_off():
+    # rate collapse with flat CI: drains without boots - the victims keep
+    # their backlog and drain it in parallel even with drain_handoff on
+    trace = CarbonTrace((0.0, 150.0), (200.0, 200.0))
+    reqs = sample_piecewise_requests(DS, [(0, 8.0), (150, 0.5)],
+                                     duration_s=300, seed=3)
+    pol = AutoscalePolicy(boot_s=10.0, min_window_s=60.0, boot_carbon_g=0.0,
+                          batching=BatchPolicy(num_blocks=64),
+                          utilization=0.75, drain_handoff=True)
+    res = simulate_autoscaled(CATALOG, DS, reqs, trace, pol, seed=1)
+    assert any(w["drains"] > 0 for w in res.windows)
+    drain_windows = [w for w in res.windows if w["drains"] > 0]
+    assert all(w["boots"] == 0 for w in drain_windows)
+    assert sum(w["handoffs"] for w in res.windows) == 0
+    assert all(t.tokens_out >= t.req.output_len for t in res.merged.traces)
+
+
+# ------------------------------------------------- reclaim_pending unit
+KINDS = ["standalone", "dpd-t4"]
+POLICIES = ["serialized", "continuous"]
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("policy", POLICIES)
+def test_reclaim_pending_partitions_and_drains_clean(kind, policy):
+    cfg = next(c for c in CATALOG if c.mode.name == kind)
+    reqs = sample_requests(DS, qps=6.0, duration_s=120.0, seed=11,
+                           fixed_size=(256, 64))
+    sim = ReplicaSim(cfg.mode, cfg.target, draft_cfg=cfg.draft,
+                     batching=policy, seed=2)
+    for r in reqs:
+        sim.submit(r)
+    sim.advance_to(20.0)
+    reclaimed = sim.reclaim_pending()
+    assert reclaimed, f"{kind}/{policy}: nothing reclaimed at t=20"
+    # reclaimed + remaining traces partition the submitted set exactly
+    kept = {t.req.req_id for t in sim.traces}
+    gone = {r.req_id for r in reclaimed}
+    assert kept.isdisjoint(gone)
+    assert kept | gone == {r.req_id for r in reqs}
+    # reclaimed requests were never worked on by this replica
+    assert all(t.req.req_id in kept for t in sim.traces)
+    # the survivor drains clean: every kept request finishes
+    sim.drain()
+    assert all(not math.isnan(t.finish_s) for t in sim.traces)
+    assert all(t.tokens_out >= t.req.output_len for t in sim.traces)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_reclaimed_requests_resubmit_cleanly(policy):
+    cfg = next(c for c in CATALOG if c.mode.name == "standalone")
+    reqs = sample_requests(DS, qps=6.0, duration_s=120.0, seed=11,
+                           fixed_size=(256, 64))
+    sim = ReplicaSim(cfg.mode, cfg.target, batching=policy, seed=2)
+    for r in reqs:
+        sim.submit(r)
+    sim.advance_to(20.0)
+    reclaimed = sim.reclaim_pending()
+    # handed to a replacement replica: submit order is (arrival, req_id)
+    fresh = ReplicaSim(cfg.mode, cfg.target, batching=policy, seed=3,
+                       start_s=20.0)
+    for r in reclaimed:
+        fresh.submit(r)
+    fresh.drain()
+    sim.drain()
+    done = sim.result().traces + fresh.result().traces
+    assert len(done) == len(reqs)
+    assert all(t.tokens_out >= t.req.output_len for t in done)
+    # reclaiming again after a full drain finds nothing
+    assert sim.reclaim_pending() == []
+    assert fresh.reclaim_pending() == []
+
+
+def test_reclaim_pending_keeps_sids_unique_across_resubmit():
+    # continuous-path regression: scheduler sequence ids must stay unique
+    # when new arrivals are admitted after a reclaim removed earlier ones
+    cfg = next(c for c in CATALOG if c.mode.name == "standalone")
+    reqs = sample_requests(DS, qps=6.0, duration_s=120.0, seed=11,
+                           fixed_size=(256, 64))
+    sim = ReplicaSim(cfg.mode, cfg.target, batching="continuous", seed=2)
+    for r in reqs[: len(reqs) // 2]:
+        sim.submit(r)
+    sim.advance_to(15.0)
+    sim.reclaim_pending()
+    for r in reqs[len(reqs) // 2:]:
+        sim.submit(r)
+    sim.drain()
+    assert all(t.tokens_out >= t.req.output_len for t in sim.traces)
+
+
+# --------------------------------------------- load-change re-solve (S3)
+def _spike_run(threshold):
+    trace = CarbonTrace((0.0, 3600.0), (300.0, 100.0))
+    reqs = sample_piecewise_requests(
+        DS, [(0, 1.0), (1200, 10.0), (2400, 1.0)], duration_s=3600, seed=5)
+    pol = AutoscalePolicy(load_resolve_threshold=threshold,
+                          load_probe_s=120.0)
+    return simulate_autoscaled(CATALOG, DS, reqs, trace, pol, seed=0)
+
+
+@pytest.mark.slow
+def test_load_resolve_threshold_splits_spiked_window():
+    grid_only = _spike_run(None)
+    split = _spike_run(0.5)
+    # the 10x mid-window spike inserts re-solve boundaries near t=1200
+    # and t=2400, so the fleet re-sizes instead of waiting out the window
+    assert len(grid_only.windows) == 1
+    assert len(split.windows) > len(grid_only.windows)
+    assert split.merged.slo_attainment(DS) > grid_only.merged.slo_attainment(DS)
+    assert all(t.tokens_out >= t.req.output_len for t in split.merged.traces)
+
+
+def test_autoscale_policy_validates_load_resolve_knobs():
+    with pytest.raises(ValueError):
+        AutoscalePolicy(load_resolve_threshold=0.0)
+    with pytest.raises(ValueError):
+        AutoscalePolicy(load_resolve_threshold=-0.5)
+    with pytest.raises(ValueError):
+        AutoscalePolicy(load_probe_s=0.0)
+    AutoscalePolicy(load_resolve_threshold=0.5, load_probe_s=60.0)

@@ -1,0 +1,174 @@
+"""Class-aware dpd pool-B admission + per-class TPOT guard.
+
+`DpdReadyQueue` replaces the FIFO across the dpd KV link: eligible
+entries (KV already arrived) admit tight > standard > relaxed with aging
+per pool-B decode round, reducing exactly to the old arrival-order FIFO
+when every entry shares one class. Aging credits only rounds that START
+at/after an entry's link arrival, which is what keeps windowed
+`advance_to` == `drain` (a drain runs all of pool A before any pool-B
+round; those early rounds must not age entries that had not shipped yet).
+
+`BatchPolicy.tpot_guard_frac` caps the share of a hybrid step's token
+budget that prefill chunks from better classes may take when a worse
+class is decoding in the same step - bounding how much a tight prefill
+stream can stretch a relaxed decode's TPOT.
+"""
+import math
+import statistics
+
+import pytest
+
+from repro.core.disagg import standard_catalog
+from repro.serving.batching import BatchPolicy, DpdReadyQueue
+from repro.serving.simulator import ReplicaSim
+from repro.serving.workload import DATASETS, class_priority, sample_requests
+
+DS = DATASETS["sharegpt"]
+CATALOG = standard_catalog()
+DPD = next(c for c in CATALOG if c.mode.name == "dpd-t4")
+STANDALONE = next(c for c in CATALOG if c.mode.name == "standalone")
+
+
+# ------------------------------------------------------------- queue unit
+def test_eligibility_gates_on_ready_time():
+    q = DpdReadyQueue(age_steps=4)
+    q.push(10.0, class_priority("tight"), "a")
+    q.push(5.0, class_priority("relaxed"), "b")
+    # at t=7 only the relaxed entry's KV has arrived
+    assert q.pop(q.peek_eligible(7.0)) == "b"
+    assert q.peek_eligible(7.0) is None
+    assert q.next_ready_s() == 10.0
+    assert q.pop(q.peek_eligible(10.0)) == "a"
+    assert len(q) == 0
+
+
+def test_class_order_beats_arrival_order_among_eligible():
+    q = DpdReadyQueue(age_steps=512)
+    q.push(1.0, class_priority("relaxed"), "r")
+    q.push(2.0, class_priority("standard"), "s")
+    q.push(3.0, class_priority("tight"), "t")
+    got = [q.pop(q.peek_eligible(5.0)) for _ in range(3)]
+    assert got == ["t", "s", "r"]
+
+
+def test_single_class_reduces_to_fifo():
+    q = DpdReadyQueue(age_steps=4)
+    order = [(3.0, "c"), (1.0, "a"), (2.0, "b"), (2.0, "b2")]
+    for t, item in order:
+        q.push(t, class_priority("standard"), item)
+    # several rounds pass: aging must not reorder a single class
+    for t in (1.5, 2.5, 3.5):
+        q.note_round(t)
+    got = [q.pop(q.peek_eligible(10.0)) for _ in range(4)]
+    # KV-arrival order, push order within ties - the old FIFO
+    assert got == ["a", "b", "b2", "c"]
+
+
+def test_aging_promotes_waiting_relaxed_past_fresh_tight():
+    q = DpdReadyQueue(age_steps=2)
+    q.push(0.0, class_priority("relaxed"), "old-relaxed")
+    # two full pool-B rounds starting after its arrival age it two steps:
+    # relaxed (2) - 2//2 = 1 ... keep going to level 0
+    for t in (1.0, 2.0, 3.0, 4.0):
+        q.note_round(t)
+    q.push(4.5, class_priority("tight"), "fresh-tight")
+    assert q.pop(q.peek_eligible(5.0)) == "old-relaxed"
+
+
+def test_rounds_before_arrival_do_not_age():
+    q = DpdReadyQueue(age_steps=1)
+    q.push(10.0, class_priority("relaxed"), "late")
+    # rounds that started before the KV arrived (a drain's pool-A-first
+    # schedule) must not credit the entry
+    for t in (1.0, 2.0, 3.0):
+        q.note_round(t)
+    q.push(10.0, class_priority("standard"), "peer")
+    assert q.pop(q.peek_eligible(11.0)) == "peer"
+
+
+def test_age_steps_validated():
+    with pytest.raises(ValueError):
+        DpdReadyQueue(age_steps=0)
+
+
+# ------------------------------------------------- simulator: both windows
+def _run(policy, *, windowed, qps=4.0, dur=150.0, cfg=DPD,
+         class_mix={"tight": 0.3, "standard": 0.4, "relaxed": 0.3}):
+    reqs = sample_requests(DS, qps=qps, duration_s=dur, seed=7,
+                           fixed_size=(256, 64), class_mix=class_mix)
+    sim = ReplicaSim(cfg.mode, cfg.target, draft_cfg=cfg.draft,
+                     batching=policy)
+    for r in reqs:
+        sim.submit(r)
+    if windowed:
+        t = 0.0
+        while not sim.idle:
+            t += 13.7
+            sim.advance_to(t)
+    else:
+        sim.drain()
+    return sim.result()
+
+
+def _same(a, b):
+    assert len(a.traces) == len(b.traces)
+    for ta, tb in zip(a.traces, b.traces):
+        assert ta.tokens_out == tb.tokens_out and ta.ttft_s == tb.ttft_s
+        assert ta.finish_s == tb.finish_s or (
+            math.isnan(ta.finish_s) and math.isnan(tb.finish_s))
+    for n in a.use:
+        assert a.use[n].busy_s == b.use[n].busy_s
+        assert a.use[n].energy_j == b.use[n].energy_j
+        assert a.use[n].segments == b.use[n].segments
+
+
+def test_dpd_continuous_windowed_equals_drain_mixed_classes():
+    _same(_run("continuous", windowed=True), _run("continuous", windowed=False))
+
+
+def test_dpd_serialized_windowed_equals_drain_unchanged():
+    _same(_run("serialized", windowed=True), _run("serialized", windowed=False))
+
+
+def test_dpd_single_class_stream_unaffected_by_class_queue():
+    # single-class continuous stream: the class-aware queue reduces to
+    # KV-arrival FIFO, so aging knobs must not perturb the schedule
+    a = _run(BatchPolicy(age_steps=512), windowed=False,
+             class_mix=None)
+    b = _run(BatchPolicy(age_steps=2), windowed=False,
+             class_mix=None)
+    _same(a, b)
+
+
+# ------------------------------------------------------- TPOT guard (S2)
+def _class_tpot(frac):
+    # the guard acts inside single-pool HYBRID steps (prefill chunks and
+    # decodes sharing one token budget), so it is pinned on standalone;
+    # dpd's split pools never mix a prefill chunk into a decode step
+    pol = BatchPolicy(tpot_guard_frac=frac)
+    res = _run(pol, windowed=False, qps=6.0, cfg=STANDALONE,
+               class_mix={"tight": 0.8, "relaxed": 0.2})
+    by = {}
+    for tr in res.traces:
+        if tr.tokens_out > 1:
+            by.setdefault(tr.req.slo_class, []).append(
+                (tr.last_token_s - tr.first_token_s) / (tr.tokens_out - 1))
+    return {k: statistics.mean(v) for k, v in by.items()}
+
+
+def test_tpot_guard_bounds_relaxed_decode_stretch():
+    # without the guard a heavy tight prefill stream stretches relaxed
+    # decodes' step times; capping tight chunk share must shrink relaxed
+    # TPOT relative to the unguarded schedule
+    off = _class_tpot(1.0)
+    on = _class_tpot(0.25)
+    assert on["relaxed"] < off["relaxed"], \
+        f"guard did not improve relaxed TPOT: {on} vs {off}"
+
+
+def test_tpot_guard_frac_validated():
+    with pytest.raises(ValueError):
+        BatchPolicy(tpot_guard_frac=0.0)
+    with pytest.raises(ValueError):
+        BatchPolicy(tpot_guard_frac=1.5)
+    BatchPolicy(tpot_guard_frac=1.0)     # off - always valid
