@@ -20,15 +20,24 @@ This sweep pins the two scaling upgrades:
              (per-lane cost is uniform under least-loaded routing);
              `replica_lanes_timed` records it. Headline gate: scale-mode
              speedup >= 20x at 1024 replicas.
+             The sweep runs one lane per scheduler policy: "serialized"
+             (the legacy loop, gate >= 20x at 1024 replicas) and
+             "continuous" (the fleet default - lockstep hybrid stepping,
+             gate >= 10x at 1024 replicas in scale mode).
+  memo       the scalar continuous executor's `HybridPricer` step-cost
+             memo, measured against the same run with `pricer_bypass()`
+             re-pricing every step: `memo_speedup` is the factor the
+             keyed cache buys the per-replica loop.
   scale      large vector-core runs with rng_mode="batched": always a
-             CI-shaped 1024 x 100k row (regression-gated against the
-             committed artifact via --check-regression: fail on a >30%
-             drop in *calibration-normalized* simulated-req/s - each row
-             carries `calib_s`, the wall time of a fixed 64-replica
-             micro-run measured best-of-2 in the same process, so
-             machine speed and background load divide out of the gate),
-             plus the full 10k replica x 1M request row when not
-             --quick. Each must fit its stated budget (SCALE_BUDGET_S).
+             CI-shaped 1024 x 100k row per policy lane (regression-gated
+             against the committed artifact via --check-regression: fail
+             on a >30% drop in *calibration-normalized* simulated-req/s
+             - each row carries `calib_s`, the wall time of a fixed
+             64-replica micro-run measured best-of-2 in the same
+             process, so machine speed and background load divide out of
+             the gate), plus the full 10k replica x 1M request row when
+             not --quick. Each must fit its stated budget
+             (SCALE_BUDGET_S).
   alloc      greedy vs LP (`allocate(..., solver="lp")`, scipy milp)
              allocation quality on a 100+-chip inventory across a rate
              sweep: total gCO2/hour of the solved fleet + solve time.
@@ -45,6 +54,7 @@ from benchmarks.common import ARTIFACTS, csv
 from repro.core.allocator import allocate, bucket_workload, build_gpu_info
 from repro.core.disagg import standard_catalog
 from repro.serving.batching import resolve_batch_policy
+from repro.serving.costs import pricer_bypass
 from repro.serving.fleet import (
     FleetSpec,
     SizeBuckets,
@@ -59,13 +69,14 @@ DUR_S = 120.0                   # simulated horizon per core-sweep point
 PER_REPLICA_QPS = 2.5           # near-capacity load (batches fill the cap)
 REPLICA_CORE_CAP = 1024         # largest size the slow core is timed at
 REPLICA_LANE_CAP = 256          # lanes actually timed; rest extrapolated
-SCALE_BUDGET_S = {"ci": 120.0, "full": 600.0}
+SCALE_BUDGET_S = {"ci": 120.0, "ci_continuous": 300.0, "full": 600.0}
+CORE_GATES = {"serialized": 20.0, "continuous": 10.0}
 REGRESSION_DROP = 0.30          # CI gate: req/s must stay within 30%
 ARTIFACT = os.path.join(ARTIFACTS, "fleet_scale_sweep.json")
 INVENTORY = {"a100": 60, "t4": 120, "v100": 80}     # 260 chips
 
 
-def _route(catalog, ds, n, qps):
+def _route(catalog, ds, n, qps, batching="serialized"):
     """One shared routed workload per point: a single-config standalone
     fleet (the vector core batches same-config lanes, so one core group;
     the replica loop's partitions are identical either way)."""
@@ -73,7 +84,7 @@ def _route(catalog, ds, n, qps):
     reqs = sample_requests(ds, qps=qps, duration_s=DUR_S, seed=SEED,
                            fixed_size=ds.size_at("p50"))
     fleet = FleetSpec.of_counts(catalog, {"standalone": n})
-    bp = resolve_batch_policy("serialized")
+    bp = resolve_batch_policy(batching)
     parts = route_least_loaded(reqs, fleet, 0.0, bp, None)
     return cfg, bp, parts, reqs
 
@@ -89,24 +100,28 @@ def _time_replica_loop(cfg, bp, parts, lanes):
     return time.perf_counter() - t0, tokens
 
 
-def _core_rows(catalog, ds, sizes, quick):
+def _core_rows(catalog, ds, sizes, quick, batching="serialized"):
     rows = []
     for n in sizes:
-        cfg, bp, parts, reqs = _route(catalog, ds, n, PER_REPLICA_QPS * n)
+        cfg, bp, parts, reqs = _route(catalog, ds, n, PER_REPLICA_QPS * n,
+                                      batching=batching)
         seeds = [SEED + i for i in range(n)]
         t0 = time.perf_counter()
-        vf = VectorFleetSim(cfg.mode, cfg.target, parts, seeds=seeds)
+        vf = VectorFleetSim(cfg.mode, cfg.target, parts, seeds=seeds,
+                            batching=bp)
         res_v = vf.drain().results()
         t_par = time.perf_counter() - t0
         t0 = time.perf_counter()
         vs = VectorFleetSim(cfg.mode, cfg.target, parts, seeds=seeds,
-                            record_segments=False, rng_mode="batched")
+                            record_segments=False, rng_mode="batched",
+                            batching=bp)
         stats = vs.drain().stats()
         t_scale = time.perf_counter() - t0
         tok_v = sum(r.total_tokens for r in res_v)
         assert tok_v == stats["total_tokens"], \
             "scale mode diverged from parity mode"
         row = {
+            "policy": batching,
             "replicas": n, "requests": len(reqs),
             "parity_wall_s": round(t_par, 4),
             "scale_wall_s": round(t_scale, 4),
@@ -130,46 +145,73 @@ def _core_rows(catalog, ds, sizes, quick):
     return rows
 
 
-def _calib_s(catalog, ds):
+def _memo_row(catalog, ds):
+    """Scalar continuous executor with vs without the `HybridPricer`
+    memo: the same 64-lane run re-timed under `pricer_bypass()`, which
+    re-prices every hybrid step from the roofline instead of hitting the
+    keyed cache. Token totals must match exactly (the memo only skips
+    recomputation)."""
+    n = 64
+    cfg, bp, parts, reqs = _route(catalog, ds, n, PER_REPLICA_QPS * n,
+                                  batching="continuous")
+    t_memo, tok_memo = _time_replica_loop(cfg, bp, parts, n)
+    with pricer_bypass():
+        t_raw, tok_raw = _time_replica_loop(cfg, bp, parts, n)
+    assert tok_memo == tok_raw, "pricer memo changed the schedule"
+    return {
+        "replicas": n, "requests": len(reqs),
+        "memo_wall_s": round(t_memo, 4),
+        "bypass_wall_s": round(t_raw, 4),
+        "memo_speedup": round(t_raw / t_memo, 2),
+    }
+
+
+def _calib_s(catalog, ds, batching):
     """Machine-speed yardstick for the regression gate: a fixed
     64-replica micro-run timed best-of-2 in this same process. The gate
     compares req/s *per calibration unit*, so an absolute wall-clock
     shift shared by yardstick and measurement (slower CI runner, noisy
     neighbor) cancels instead of tripping the gate."""
-    cfg, bp, parts, _ = _route(catalog, ds, 64, PER_REPLICA_QPS * 64)
+    cfg, bp, parts, _ = _route(catalog, ds, 64, PER_REPLICA_QPS * 64,
+                               batching=batching)
     best = float("inf")
     for _ in range(2):
         t0 = time.perf_counter()
         VectorFleetSim(cfg.mode, cfg.target, parts,
                        seeds=[SEED + i for i in range(64)],
                        record_segments=False,
-                       rng_mode="batched").drain().stats()
+                       rng_mode="batched", batching=bp).drain().stats()
         best = min(best, time.perf_counter() - t0)
     return best
 
 
 def _scale_rows(catalog, ds, quick):
     out = {}
-    calib = _calib_s(catalog, ds)
-    shapes = [("ci", 1024, 100_000)]
+    calib = {pol: _calib_s(catalog, ds, pol)
+             for pol in ("serialized", "continuous")}
+    shapes = [("ci", 1024, 100_000, "serialized"),
+              ("ci_continuous", 1024, 100_000, "continuous")]
     if not quick:
-        shapes.append(("full", 10_000, 1_000_000))
-    for key, n, n_req in shapes:
-        cfg, bp, parts, reqs = _route(catalog, ds, n, n_req / DUR_S)
+        shapes.append(("full", 10_000, 1_000_000, "serialized"))
+    for key, n, n_req, pol in shapes:
+        cfg, bp, parts, reqs = _route(catalog, ds, n, n_req / DUR_S,
+                                      batching=pol)
         t0 = time.perf_counter()
         vf = VectorFleetSim(cfg.mode, cfg.target, parts,
                             seeds=[SEED + i for i in range(n)],
-                            record_segments=False, rng_mode="batched")
+                            record_segments=False, rng_mode="batched",
+                            batching=bp)
         stats = vf.drain().stats()
         wall = time.perf_counter() - t0
         assert stats["finished"] == len(reqs), "scale run lost requests"
         out[key] = {
+            "policy": pol,
             "replicas": n, "requests": len(reqs),
             "wall_s": round(wall, 2),
             "budget_s": SCALE_BUDGET_S[key],
             "req_per_s": round(len(reqs) / wall, 1),
-            "calib_s": round(calib, 4),
-            "req_per_calib": round(len(reqs) / wall * calib, 1),
+            "calib_s": round(calib[pol], 4),
+            "req_per_calib": round(len(reqs) / wall * calib[pol], 1),
             "tokens": stats["total_tokens"],
             "within_budget": bool(wall <= SCALE_BUDGET_S[key]),
         }
@@ -216,27 +258,37 @@ def _chip_counts(catalog, counts):
     return out
 
 
-def _check_regression(scale_ci):
-    """CI wall-clock gate: calibration-normalized simulated-req/s must
-    stay within REGRESSION_DROP of the committed artifact (same shape
-    only - a different size/request count is a new baseline, not a
-    regression). Normalizing by `calib_s` makes the gate portable: a
-    slower machine slows the yardstick by the same factor."""
+def _check_regression(scale):
+    """CI wall-clock gate over every CI-shaped lane (serialized AND
+    continuous): calibration-normalized simulated-req/s must stay within
+    REGRESSION_DROP of the committed artifact (same shape only - a
+    different size/request count is a new baseline, not a regression).
+    Normalizing by `calib_s` makes the gate portable: a slower machine
+    slows the yardstick by the same factor."""
     if not os.path.exists(ARTIFACT):
         print("# no committed artifact - skipping regression gate")
         return True
     with open(ARTIFACT) as f:
-        committed = json.load(f).get("scale", {}).get("ci", {})
-    if (committed.get("replicas") != scale_ci["replicas"]
-            or committed.get("requests") != scale_ci["requests"]
-            or "req_per_calib" not in committed):
-        print("# committed artifact shape differs - skipping regression gate")
-        return True
-    floor = committed["req_per_calib"] * (1.0 - REGRESSION_DROP)
-    ok = scale_ci["req_per_calib"] >= floor
-    print(f"# regression gate: {scale_ci['req_per_calib']:.0f} req/calib "
-          f"vs committed {committed['req_per_calib']:.0f} "
-          f"(floor {floor:.0f}): {'ok' if ok else 'FAIL'}")
+        committed_scale = json.load(f).get("scale", {})
+    ok = True
+    for key in ("ci", "ci_continuous"):
+        row = scale.get(key)
+        committed = committed_scale.get(key, {})
+        if row is None:
+            continue
+        if (committed.get("replicas") != row["replicas"]
+                or committed.get("requests") != row["requests"]
+                or "req_per_calib" not in committed):
+            print(f"# committed artifact shape differs for {key} - "
+                  f"skipping its regression gate")
+            continue
+        floor = committed["req_per_calib"] * (1.0 - REGRESSION_DROP)
+        lane_ok = row["req_per_calib"] >= floor
+        print(f"# regression gate [{key}]: "
+              f"{row['req_per_calib']:.0f} req/calib vs committed "
+              f"{committed['req_per_calib']:.0f} "
+              f"(floor {floor:.0f}): {'ok' if lane_ok else 'FAIL'}")
+        ok = ok and lane_ok
     return ok
 
 
@@ -248,27 +300,37 @@ def run(quick: bool = False, check_regression: bool = False,
     rates = [60.0, 200.0, 500.0, 900.0]
 
     core_rows = _core_rows(catalog, ds, sizes, quick)
+    cont_rows = _core_rows(catalog, ds, sizes, quick, batching="continuous")
+    memo = _memo_row(catalog, ds)
     scale = _scale_rows(catalog, ds, quick)
     alloc_rows = _alloc_rows(catalog, ds, rates, quick)
 
     csv(core_rows)
+    csv(cont_rows)
     csv(alloc_rows)
+    print(f"# scalar continuous pricer memo: {memo['memo_speedup']:.1f}x "
+          f"({memo['bypass_wall_s']:.1f}s bypassed vs "
+          f"{memo['memo_wall_s']:.1f}s memoized, {memo['replicas']} lanes)")
     for key, row in scale.items():
         print(f"# scale[{key}]: {row['replicas']} replicas x "
               f"{row['requests']} requests in {row['wall_s']:.1f}s "
               f"({row['req_per_s']:.0f} req/s, budget {row['budget_s']:.0f}s)")
 
-    at_1k = next(r for r in core_rows if r["replicas"] == 1024)
     lp_wins = sum(r["lp_wins"] for r in alloc_rows)
     ok = True
-    if at_1k.get("speedup_scale", 0.0) >= 20.0:
-        print(f"# vector core speedup at 1024 replicas: "
-              f"{at_1k['speedup_scale']:.1f}x scale mode / "
-              f"{at_1k['speedup_parity']:.1f}x parity mode (gate: >= 20x)")
-    else:
-        print(f"# WARNING: vector scale-mode speedup at 1024 replicas only "
-              f"{at_1k.get('speedup_scale')}x (gate: >= 20x)")
-        ok = False
+    for rows in (core_rows, cont_rows):
+        at_1k = next(r for r in rows if r["replicas"] == 1024)
+        gate = CORE_GATES[at_1k["policy"]]
+        if at_1k.get("speedup_scale", 0.0) >= gate:
+            print(f"# vector core [{at_1k['policy']}] speedup at 1024 "
+                  f"replicas: {at_1k['speedup_scale']:.1f}x scale mode / "
+                  f"{at_1k['speedup_parity']:.1f}x parity mode "
+                  f"(gate: >= {gate:.0f}x)")
+        else:
+            print(f"# WARNING: vector [{at_1k['policy']}] scale-mode "
+                  f"speedup at 1024 replicas only "
+                  f"{at_1k.get('speedup_scale')}x (gate: >= {gate:.0f}x)")
+            ok = False
     if lp_wins >= 3:
         print(f"# LP matches/beats greedy gCO2/hour on {lp_wins}/"
               f"{len(alloc_rows)} inventory points (gate: >= 3/4)")
@@ -280,14 +342,16 @@ def run(quick: bool = False, check_regression: bool = False,
             print(f"# WARNING: scale[{key}] blew its "
                   f"{row['budget_s']:.0f}s budget")
             ok = False
-    if check_regression and not _check_regression(scale["ci"]):
+    if check_regression and not _check_regression(scale):
         ok = False
 
     if write:
         os.makedirs(ARTIFACTS, exist_ok=True)
         payload = {"quick": quick, "duration_s": DUR_S, "seed": SEED,
                    "per_replica_qps": PER_REPLICA_QPS,
-                   "cores": core_rows, "scale": scale, "alloc": alloc_rows}
+                   "cores": core_rows, "cores_continuous": cont_rows,
+                   "scalar_memo": memo,
+                   "scale": scale, "alloc": alloc_rows}
         if quick and os.path.exists(ARTIFACT):
             # a quick run never erases the committed full-scale row
             with open(ARTIFACT) as f:

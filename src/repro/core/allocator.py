@@ -52,8 +52,8 @@ from repro.serving.batching import (
 from repro.serving.costs import (
     dpd_kv_bytes,
     dsd_link_bytes,
-    hybrid_step_charges,
     prefill_charges,
+    shared_pricer,
     spec_round_charges,
     spec_round_time,
 )
@@ -230,7 +230,8 @@ def _engine_profile_continuous(cfg: DisaggConfig, pl: int, ol: int,
     build via batching.py), prefill is chunked and batched - riding
     inside hybrid decode steps for standalone, dedicated budget-bounded
     steps for spec/dsd and the dpd prefill pool - and every step is
-    priced by `costs.hybrid_step_charges`. The serialized profile's
+    priced through `costs.shared_pricer`'s keyed memo (the entries the
+    executors populate). The serialized profile's
     `b * ttft` stop-the-world term disappears from the standalone
     denominator (prefill no longer steals whole iterations), which is
     exactly the capacity the continuous executor recovers; spec/dsd/dpd
@@ -256,11 +257,18 @@ def _engine_profile_continuous(cfg: DisaggConfig, pl: int, ol: int,
     if cap < 1:
         return 0.0, math.inf, {}
 
+    # the SAME memo entries the executors populate: profile grids for a
+    # configuration the fleet already simulated are pure cache hits
+    if mode.kind == "dpd":
+        pricer = shared_pricer("dpd", cfg.target, None, new_chip, old_chip,
+                               interconnect=mode.interconnect)
+    else:
+        pricer = shared_pricer(mode.kind, cfg.target, cfg.draft, new_chip,
+                               old_chip, k=k, interconnect=mode.interconnect,
+                               overlap=mode.overlap_comm)
+
     def hs_of(chunk_specs, b):
-        return hybrid_step_charges(
-            mode.kind, cfg.target, cfg.draft, new_chip, old_chip,
-            tuple(chunk_specs), (ctx,) * b, k, mode.interconnect,
-            overlap=mode.overlap_comm)
+        return pricer.charges(tuple(chunk_specs), (ctx,) * b)
 
     chunks = prompt_chunks(pl, policy.chunk_tokens)
     grid = sorted({1, 2, 4, 8, 16, 32, cap})

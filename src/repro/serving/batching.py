@@ -213,6 +213,64 @@ def prompt_chunks(prompt_len: int,
                  for s in range(0, prompt_len, chunk_tokens))
 
 
+# ---------------------------------------------------------------------------
+# Pure plan arithmetic (shared by both executors AND the lockstep fleet core)
+# ---------------------------------------------------------------------------
+# Every scheduling decision below is branch-free integer arithmetic over a
+# sequence's (priority, progress, kv) scalars. `ContinuousScheduler`,
+# `plan_dpd_decode_step`, and `DpdReadyQueue` call these per sequence; the
+# vectorized continuous executor (serving/vector_core.py) calls the SAME
+# functions from its per-lane planner and mirrors them as array expressions
+# on its fast paths - one definition, so the two executors cannot drift.
+
+def blocks_for(tokens: int, block_size: int) -> int:
+    """KV blocks covering `tokens` (ceil-div; `BlockLedger.blocks_needed`)."""
+    return -(-tokens // block_size)
+
+
+def aged_priority(priority: int, waited: int, age_steps: int) -> int:
+    """Effective class after anti-starvation aging: one level of promotion
+    per `age_steps` scheduler steps (pool-B rounds for dpd) spent waiting,
+    floored at the best class 0."""
+    return max(priority - waited // age_steps, 0)
+
+
+def decode_slot_count(token_budget: int, decode_tokens: int) -> int:
+    """Decode slots one step's token budget carries (>= 1)."""
+    return max(token_budget // decode_tokens, 1)
+
+
+def chunk_take(chunk_tokens: int, prefill_target: int, done: int,
+               budget: int, guard_room: int) -> int:
+    """Prefill tokens one sequence contributes this step: its per-step
+    chunk size, capped by remaining work, step budget, and TPOT guard."""
+    return min(chunk_tokens, prefill_target - done, budget, guard_room)
+
+
+def growth_blocks(kv: int, decode_tokens: int, held: int,
+                  block_size: int) -> int:
+    """Worst-case NEW blocks one decode participant may pull this step."""
+    return blocks_for(kv + decode_tokens, block_size) - held
+
+
+def guard_cap_tokens(tpot_guard_frac: float, token_budget: int) -> int:
+    """Cumulative chunk-token cap the TPOT guard imposes per step."""
+    return int(tpot_guard_frac * token_budget)
+
+
+def recompute_target(prompt_len: int, emitted: int) -> int:
+    """Tokens a preempted sequence must re-prefill (vLLM recompute
+    semantics: prompt + generated prefix, minus the token the resumed
+    decode re-emits)."""
+    return prompt_len + max(emitted - 1, 0)
+
+
+def dpd_resume_kv(prompt_len: int, resume_emitted: int) -> int:
+    """KV tokens a dpd pool-B (re)admission starts with: the shipped
+    prompt KV plus the already-emitted prefix, minus the re-decoded one."""
+    return prompt_len + resume_emitted - 1
+
+
 def _maybe_cache(policy: BatchPolicy, ledger: "BlockLedger",
                  ci_trace) -> "Optional[PrefixCache]":
     """The policy's prefix cache bound to `ledger`, or None when off."""
@@ -385,7 +443,7 @@ class DpdReadyQueue:
                 e[3] += 1
 
     def _key(self, e: list) -> tuple[int, float, int]:
-        return (max(e[1] - e[3] // self.age_steps, 0), e[0], e[2])
+        return (aged_priority(e[1], e[3], self.age_steps), e[0], e[2])
 
     def peek_eligible(self, now_s: float) -> "Optional[list]":
         """Best arrived entry (admission order), or None; does not pop."""
@@ -475,7 +533,7 @@ class BlockLedger:
         return self.num_blocks - self._used - self._shared_used - self._retained
 
     def blocks_needed(self, tokens: int) -> int:
-        return -(-tokens // self.block_size)
+        return blocks_for(tokens, self.block_size)
 
     def can_admit(self, tokens: int) -> bool:
         return self.blocks_needed(tokens) <= self.free_blocks
@@ -689,8 +747,8 @@ class ContinuousScheduler:
         """Waiting-queue priority with aging: one level of promotion per
         `age_steps` scheduler steps spent waiting (floor 0), so lower
         classes cannot starve behind an endless higher-class stream."""
-        waited = self._step - seq.enqueue_step
-        return max(seq.priority - waited // self.policy.age_steps, 0)
+        return aged_priority(seq.priority, self._step - seq.enqueue_step,
+                             self.policy.age_steps)
 
     def _wkey(self, seq: SchedSeq) -> tuple[int, int]:
         return (self._eff_priority(seq), seq.order)
@@ -707,8 +765,8 @@ class ContinuousScheduler:
     def _growth_reserve(self, decodes: list[SchedSeq]) -> int:
         """Worst-case blocks this step's decodes may pull from the pool."""
         return sum(
-            self.ledger.blocks_needed(s.kv + self.decode_tokens)
-            - self.ledger.held(s.sid)
+            growth_blocks(s.kv, self.decode_tokens,
+                          self.ledger.held(s.sid), self.ledger.block_size)
             for s in decodes)
 
     def _preempt(self, seq: SchedSeq) -> None:
@@ -720,7 +778,7 @@ class ContinuousScheduler:
         else:
             self.prefilling.remove(seq)
         seq.preemptions += 1
-        seq.prefill_target = seq.prompt_len + max(seq.emitted - 1, 0)
+        seq.prefill_target = recompute_target(seq.prompt_len, seq.emitted)
         seq.prefilled = 0
         seq.kv = 0
         # `order` keeps its original value (the seq still sorts ahead of
@@ -738,7 +796,7 @@ class ContinuousScheduler:
         highest classes first and shortest-remaining-first within a
         class. Plan order stays running-list (admission) order either
         way, so executor-side iteration (and rng draws) are stable."""
-        slots = max(self.policy.token_budget // self.decode_tokens, 1)
+        slots = decode_slot_count(self.policy.token_budget, self.decode_tokens)
         if len(self.running) <= slots:
             return list(self.running)
         chosen = {id(s) for s in sorted(
@@ -822,8 +880,8 @@ class ContinuousScheduler:
         worst_decode = -1
         if decodes and self.policy.tpot_guard_frac < 1.0:
             worst_decode = max(s.priority for s in decodes)
-            guard_cap = int(self.policy.tpot_guard_frac
-                            * self.policy.token_budget)
+            guard_cap = guard_cap_tokens(self.policy.tpot_guard_frac,
+                                         self.policy.token_budget)
         guarded_used = 0
 
         def guard_room(seq: SchedSeq) -> int:
@@ -837,9 +895,8 @@ class ContinuousScheduler:
         for seq in self.prefilling:
             if budget <= 0:
                 break
-            take = min(self.policy.chunk_tokens,
-                       seq.prefill_target - seq.prefilled, budget,
-                       guard_room(seq))
+            take = chunk_take(self.policy.chunk_tokens, seq.prefill_target,
+                              seq.prefilled, budget, guard_room(seq))
             if take <= 0:
                 continue
             need = (self.ledger.blocks_needed(seq.prefilled + take)
@@ -876,8 +933,8 @@ class ContinuousScheduler:
                 # pinning retained nodes consumes schedulable-free blocks
                 fresh = self.cache.fresh_cost(seq.prefix_keys, hit)
             start = hit * self.policy.block_size
-            take = min(self.policy.chunk_tokens,
-                       seq.prefill_target - start, budget, guard_room(seq))
+            take = chunk_take(self.policy.chunk_tokens, seq.prefill_target,
+                              start, budget, guard_room(seq))
             need = self.ledger.blocks_needed(take)
             if need + fresh > self.ledger.free_blocks - reserve:
                 break                              # priority order: no overtaking
@@ -923,8 +980,8 @@ class ContinuousScheduler:
             budget = budget_of(decodes)
             if budget <= 0:
                 return chunks
-            take = min(self.policy.chunk_tokens,
-                       head.prefill_target - head.prefilled, budget)
+            take = chunk_take(self.policy.chunk_tokens, head.prefill_target,
+                              head.prefilled, budget, self.policy.token_budget)
             need = (self.ledger.blocks_needed(head.prefilled + take)
                     - self.ledger.held(head.sid))
             reclaimable = sum(

@@ -31,11 +31,15 @@ from typing import Optional
 from repro.core.carbon import ChipSpec
 from repro.models.config import ModelConfig
 from repro.serving.perfmodel import (
+    HybridKey,
     Interconnect,
     StepCost,
+    calibration_state,
     decode_cost,
     dsd_round_time,
     hybrid_step_cost,
+    hybrid_step_cost_from_key,
+    hybrid_step_key,
     prefill_cost,
 )
 
@@ -180,19 +184,47 @@ def hybrid_step_charges(
                   only matches the engine on pipelined (batch-1) runs,
                   like the serialized policy.
     """
+    return hybrid_charges_from_key(kind, target_cfg, draft_cfg, new_chip,
+                                   old_chip, hybrid_step_key(chunks, decode_ctxs),
+                                   k, interconnect, overlap=overlap)
+
+
+def hybrid_charges_from_key(
+    kind: str,
+    target_cfg: ModelConfig,
+    draft_cfg: Optional[ModelConfig],
+    new_chip: ChipSpec,
+    old_chip: Optional[ChipSpec],
+    key: HybridKey,
+    k: int,
+    interconnect: Interconnect,
+    overlap: bool = True,
+) -> HybridSchedule:
+    """`hybrid_step_charges` from precomputed `hybrid_step_key` aggregates.
+
+    The key fully determines the schedule for a fixed serving
+    configuration (a step's chunk/decode composition is all the branches
+    below look at), which is what lets `HybridPricer` memoize whole
+    schedules and the lockstep fleet core price steps without ever
+    materializing per-chunk tuples. Schedulers never emit zero-token
+    chunks, so `chunk_tok > 0` is "the step has chunks"."""
+    chunk_tok, a1, s_sc, n_dec, a2 = key
+    chunk_key: HybridKey = (chunk_tok, a1, s_sc, 0, 0)
+    dec_key: HybridKey = (0, 0, 0, n_dec, a2)
+
     if kind == "standalone":
-        c = hybrid_step_cost(target_cfg, new_chip, chunks, decode_ctxs)
+        c = hybrid_step_cost_from_key(target_cfg, new_chip, key)
         return HybridSchedule(((new_chip.name, c, 0.0),), c.time_s)
 
     if kind == "dpd":
         charges: list[Charge] = []
         t = 0.0
-        if chunks:
-            cp = hybrid_step_cost(target_cfg, new_chip, chunks, ())
+        if chunk_tok:
+            cp = hybrid_step_cost_from_key(target_cfg, new_chip, chunk_key)
             charges.append((new_chip.name, cp, 0.0))
             t += cp.time_s
-        if decode_ctxs:
-            cd = hybrid_step_cost(target_cfg, old_chip, (), decode_ctxs)
+        if n_dec:
+            cd = hybrid_step_cost_from_key(target_cfg, old_chip, dec_key)
             charges.append((old_chip.name, cd, t))
             t += cd.time_s
         return HybridSchedule(tuple(charges), t)
@@ -200,51 +232,169 @@ def hybrid_step_charges(
     if kind == "spec":
         charges = []
         t = 0.0
-        if decode_ctxs:
-            d1 = hybrid_step_cost(draft_cfg, new_chip, (), decode_ctxs)
+        if n_dec:
+            d1 = hybrid_step_cost_from_key(draft_cfg, new_chip, dec_key)
             cd = _scaled(d1, k + 1)               # K+1 sequential draft steps
             charges.append((new_chip.name, cd, t))
             t += cd.time_s
-        ct = hybrid_step_cost(target_cfg, new_chip, chunks, decode_ctxs,
-                              new_tokens=k + 1)
+        ct = hybrid_step_cost_from_key(target_cfg, new_chip, key,
+                                       new_tokens=k + 1)
         charges.append((new_chip.name, ct, t))
         t += ct.time_s
-        if chunks:
-            cdc = hybrid_step_cost(draft_cfg, new_chip, chunks, ())
+        if chunk_tok:
+            cdc = hybrid_step_cost_from_key(draft_cfg, new_chip, chunk_key)
             charges.append((new_chip.name, cdc, t))
             t += cdc.time_s
         return HybridSchedule(tuple(charges), t)
 
     if kind == "dsd":
         charges = []
-        ct = hybrid_step_cost(target_cfg, new_chip, chunks, decode_ctxs,
-                              new_tokens=k + 1)
-        if not decode_ctxs:
+        ct = hybrid_step_cost_from_key(target_cfg, new_chip, key,
+                                       new_tokens=k + 1)
+        if not n_dec:
             # pure prefill: pools run in parallel (prefill_charges' dsd)
-            cdc = hybrid_step_cost(draft_cfg, old_chip, chunks, ())
+            cdc = hybrid_step_cost_from_key(draft_cfg, old_chip, chunk_key)
             charges.append((new_chip.name, ct, 0.0))
             charges.append((old_chip.name, cdc, 0.0))
             return HybridSchedule(tuple(charges), max(ct.time_s, cdc.time_s))
-        d1 = hybrid_step_cost(draft_cfg, old_chip, (), decode_ctxs)
+        d1 = hybrid_step_cost_from_key(draft_cfg, old_chip, dec_key)
         cd = _scaled(d1, k + 1)
-        ids_b, probs_b = dsd_link_bytes(draft_cfg, len(decode_ctxs), k)
+        ids_b, probs_b = dsd_link_bytes(draft_cfg, n_dec, k)
         round_t = dsd_round_time(cd.time_s, ct.time_s, interconnect,
                                  ids_b, probs_b, overlap=overlap)
         charges.append((old_chip.name, cd, 0.0))
         charges.append((new_chip.name, ct,
                         cd.time_s + interconnect.transfer_time(ids_b)))
         t_old = cd.time_s
-        if chunks:
+        if chunk_tok:
             # the draft's chunk prefill overlaps the target pass (parallel
             # pools); it extends the round only if the old pool is the
             # straggler
-            cdc = hybrid_step_cost(draft_cfg, old_chip, chunks, ())
+            cdc = hybrid_step_cost_from_key(draft_cfg, old_chip, chunk_key)
             charges.append((old_chip.name, cdc, t_old))
             t_old += cdc.time_s
         return HybridSchedule(tuple(charges), max(round_t, t_old),
                               link_ids_bytes=ids_b, link_probs_bytes=probs_b)
 
     raise ValueError(f"unknown serving kind: {kind!r}")
+
+
+# --------------------------------------------------------------------------
+# Keyed schedule memo
+# --------------------------------------------------------------------------
+
+# Benchmark hook: `pricer_bypass()` makes every `HybridPricer` call re-price
+# instead of hitting its cache, so the sweep can measure the scalar
+# executor's pre-memo cost without a second code path.
+_PRICER_BYPASS = False
+
+
+@dataclasses.dataclass
+class _BypassCtx:
+    def __enter__(self):
+        global _PRICER_BYPASS
+        self._saved = _PRICER_BYPASS
+        _PRICER_BYPASS = True
+        return self
+
+    def __exit__(self, *exc):
+        global _PRICER_BYPASS
+        _PRICER_BYPASS = self._saved
+        return False
+
+
+def pricer_bypass() -> _BypassCtx:
+    """Context manager: disable HybridPricer cache hits (benchmarking only)."""
+    return _BypassCtx()
+
+
+class HybridPricer:
+    """Keyed memo over `hybrid_step_charges` for one serving configuration.
+
+    Continuous executors re-price identical (chunk, decode-context)
+    compositions every step - a steady decode pool hits the same
+    `hybrid_step_key` for hundreds of iterations, and replicas of one
+    config group share compositions across lanes. The memo key is the
+    exact integer aggregate tuple (see `perfmodel.hybrid_step_key`), so a
+    cache hit returns the *same* `HybridSchedule` object the scalar
+    function would have built - bit-exactness is by construction, not by
+    tolerance.
+
+    `calibrated()` swaps perfmodel's module constants at call time;
+    entries are validated against `perfmodel.calibration_state()` and the
+    cache drops wholesale when the constants change, so a pricer never
+    serves a stale roofline across calibration scopes.
+    """
+
+    __slots__ = ("kind", "target_cfg", "draft_cfg", "new_chip", "old_chip",
+                 "k", "interconnect", "overlap", "_cache", "_calib",
+                 "hits", "misses")
+
+    def __init__(self, kind: str, target_cfg: ModelConfig,
+                 draft_cfg: Optional[ModelConfig], new_chip: ChipSpec,
+                 old_chip: Optional[ChipSpec], k: int = 0,
+                 interconnect: Optional[Interconnect] = None,
+                 overlap: bool = True):
+        self.kind = kind
+        self.target_cfg = target_cfg
+        self.draft_cfg = draft_cfg
+        self.new_chip = new_chip
+        self.old_chip = old_chip
+        self.k = k
+        self.interconnect = interconnect if interconnect is not None else Interconnect()
+        self.overlap = overlap
+        self._cache: dict[HybridKey, HybridSchedule] = {}
+        self._calib = calibration_state()
+        self.hits = 0
+        self.misses = 0
+
+    def charges_for_key(self, key: HybridKey) -> HybridSchedule:
+        calib = calibration_state()
+        if calib != self._calib:
+            self._cache.clear()
+            self._calib = calib
+        sched = self._cache.get(key)
+        if sched is None or _PRICER_BYPASS:
+            sched = hybrid_charges_from_key(
+                self.kind, self.target_cfg, self.draft_cfg, self.new_chip,
+                self.old_chip, key, self.k, self.interconnect,
+                overlap=self.overlap)
+            self._cache[key] = sched
+            self.misses += 1
+        else:
+            self.hits += 1
+        return sched
+
+    def charges(self, chunks: "tuple[ChunkSpec, ...]",
+                decode_ctxs: "tuple[int, ...]") -> HybridSchedule:
+        return self.charges_for_key(hybrid_step_key(chunks, decode_ctxs))
+
+
+_SHARED_PRICERS: dict = {}
+
+
+def shared_pricer(kind: str, target_cfg: ModelConfig,
+                  draft_cfg: Optional[ModelConfig], new_chip: ChipSpec,
+                  old_chip: Optional[ChipSpec], k: int = 0,
+                  interconnect: Optional[Interconnect] = None,
+                  overlap: bool = True) -> HybridPricer:
+    """Process-wide `HybridPricer` registry.
+
+    Every consumer of the continuous cost model - `ReplicaSim`'s scalar
+    executors, the lockstep fleet core, `estimate_service_s`, and the
+    allocator's `build_gpu_info` profile grids - prices through one shared
+    memo per serving configuration, so an autoscale re-solve stops
+    re-deriving rooflines the fleet simulation already priced. Keyed on
+    the (frozen, hashable) config/chip/link objects themselves, never on
+    `id()`, so a garbage-collected config can't alias a live entry."""
+    key = (kind, target_cfg, draft_cfg, new_chip, old_chip, k,
+           interconnect if interconnect is not None else Interconnect(), overlap)
+    p = _SHARED_PRICERS.get(key)
+    if p is None:
+        p = _SHARED_PRICERS[key] = HybridPricer(
+            kind, target_cfg, draft_cfg, new_chip, old_chip, k=k,
+            interconnect=interconnect, overlap=overlap)
+    return p
 
 
 def dsd_link_bytes(draft_cfg: ModelConfig, batch: int, k: int) -> tuple[int, int]:

@@ -43,11 +43,11 @@ from repro.serving.batching import (
 from repro.serving.costs import (
     dpd_kv_bytes,
     dsd_link_bytes,
-    hybrid_step_charges,
+    shared_pricer,
     spec_round_charges,
     spec_round_time,
 )
-from repro.serving.perfmodel import decode_cost, hybrid_step_cost, prefill_cost
+from repro.serving.perfmodel import decode_cost, prefill_cost
 from repro.serving.simulator import CHIP_DB, SimResult, simulate
 from repro.serving.workload import (
     NUM_PRIORITIES,
@@ -67,10 +67,18 @@ FLEET_BATCHING_DEFAULT = "continuous"
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class ReplicaGroup:
-    """`count` identical instances of one serving configuration."""
+    """`count` identical instances of one serving configuration.
+
+    `batching` overrides the fleet-level scheduler policy for this group
+    only (None = inherit the `simulate_fleet(batching=...)` argument), so
+    one fleet can mix serialized and continuous groups - e.g. legacy
+    replicas running the stop-the-world loop next to migrated continuous
+    ones. Routing weights stay on the fleet-level policy; the override
+    selects the group's EXECUTOR."""
 
     config: DisaggConfig
     count: int
+    batching: "BatchPolicy | str | None" = None
 
     def __post_init__(self):
         if self.count < 0:
@@ -97,6 +105,15 @@ class FleetSpec:
     def replicas(self) -> list[DisaggConfig]:
         """Expanded per-instance list (group order, then instance index)."""
         return [g.config for g in self.groups for _ in range(g.count)]
+
+    def replica_policies(self, default) -> "list[BatchPolicy]":
+        """Per-instance resolved scheduler policy, honoring group
+        overrides (parallel to `replicas()`)."""
+        fleet_pol = resolve_batch_policy(default,
+                                         default=FLEET_BATCHING_DEFAULT)
+        return [fleet_pol if g.batching is None
+                else resolve_batch_policy(g.batching)
+                for g in self.groups for _ in range(g.count)]
 
     @property
     def total_count(self) -> int:
@@ -140,34 +157,35 @@ def _estimate_continuous_s(cfg: DisaggConfig, prompt_len: int,
     ctxs = (ctx,) * b
     chunks = prompt_chunks(prompt_len, policy.chunk_tokens)
     k = mode.spec_k
-    if mode.kind == "standalone":
-        base = hybrid_step_cost(cfg.target, new_chip, (), ctxs).time_s
-        pre = sum(hybrid_step_cost(cfg.target, new_chip, (c,), ctxs).time_s
-                  - base for c in chunks)
-        dec = base / b
-        return pre + max(output_len - 1, 0) * dec
     if mode.kind == "dpd":
+        # same pricer entries the executors populate: a profile grid or a
+        # re-route prices off the fleet simulation's memo, not a fresh
+        # roofline derivation per call
+        pricer = shared_pricer("dpd", cfg.target, None, new_chip, old_chip,
+                               interconnect=mode.interconnect)
         # pool A batches whole prompts under the step budget: amortize the
         # shared weight read over the prompts one step carries
         m = max(policy.token_budget // max(prompt_len, 1), 1)
         batched = prompt_chunks(prompt_len, policy.token_budget)
-        pre = sum(hybrid_step_cost(cfg.target, new_chip,
-                                   ((c, s),) * m, ()).time_s
+        pre = sum(pricer.charges(((c, s),) * m, ()).duration_s
                   for c, s in batched) / m
         tx = mode.interconnect.transfer_time(
             dpd_kv_bytes(cfg.target, prompt_len))
-        dec = hybrid_step_cost(cfg.target, old_chip, (), ctxs).time_s / b
+        dec = pricer.charges((), ctxs).duration_s / b
         return pre + tx + max(output_len - 1, 0) * dec
+    pricer = shared_pricer(mode.kind, cfg.target, cfg.draft, new_chip,
+                           old_chip, k=k, interconnect=mode.interconnect,
+                           overlap=mode.overlap_comm)
+    if mode.kind == "standalone":
+        base = pricer.charges((), ctxs).duration_s
+        pre = sum(pricer.charges((c,), ctxs).duration_s - base
+                  for c in chunks)
+        dec = base / b
+        return pre + max(output_len - 1, 0) * dec
     # spec / dsd: prefill chunks get dedicated budget-bounded steps; a
     # decode slot is one whole speculative round (shared cost schedule)
-    hs_pre = hybrid_step_charges(mode.kind, cfg.target, cfg.draft,
-                                 new_chip, old_chip, chunks, (), k,
-                                 mode.interconnect,
-                                 overlap=mode.overlap_comm)
-    hs_round = hybrid_step_charges(mode.kind, cfg.target, cfg.draft,
-                                   new_chip, old_chip, (), ctxs, k,
-                                   mode.interconnect,
-                                   overlap=mode.overlap_comm)
+    hs_pre = pricer.charges(chunks, ())
+    hs_round = pricer.charges((), ctxs)
     e_tok = expected_tokens_per_round(mode.acceptance, k)
     rounds = max(output_len - 1, 0) / max(e_tok, 1.0)
     return hs_pre.duration_s + rounds * hs_round.duration_s / b
@@ -721,12 +739,15 @@ def simulate_fleet(
 
     `core` selects the simulation backend: "replica" runs the per-replica
     Python event loop, "vector" runs `serving/vector_core.VectorFleetSim`
-    (one lockstep numpy core per config group - bit-exact with "replica"
-    under rng_mode="sequential", orders of magnitude faster at fleet
-    scale). The vectorized core implements the serialized policy;
-    continuous-batching fleets fall back to the per-replica loop (see
-    docs/scaling.md). `dispatcher` picks the routing core ("heap" default,
-    "linear", or a pre-built OnlineDispatcher)."""
+    (one lockstep numpy core per (config, policy) group - bit-exact with
+    "replica" under rng_mode="sequential", orders of magnitude faster at
+    fleet scale). Both the serialized and the continuous policy run
+    vectorized; only `prefix_cache` continuous groups drop to the
+    per-replica loop - grouping is on the full (config, batching) tuple,
+    so a mixed fleet (per-group `ReplicaGroup.batching` overrides) routes
+    each group to the right executor (see docs/scaling.md). `dispatcher`
+    picks the routing core ("heap" default, "linear", or a pre-built
+    OnlineDispatcher)."""
     batching = resolve_batch_policy(batching, default=FLEET_BATCHING_DEFAULT)
     if core not in ("replica", "vector"):
         raise ValueError(f"unknown simulation core: {core!r}")
@@ -741,25 +762,33 @@ def simulate_fleet(
     else:
         raise ValueError(f"unknown routing policy: {policy!r}")
     replicas = fleet.replicas()
-    if core == "vector" and batching.kind == "serialized":
+    policies = fleet.replica_policies(batching)
+    results: list[Optional[SimResult]] = [None] * len(replicas)
+    if core == "vector":
         from repro.serving.vector_core import VectorFleetSim
-        by_cfg: dict[int, list[int]] = {}
-        for i, cfg in enumerate(replicas):
-            by_cfg.setdefault(id(cfg), []).append(i)
-        results: list[Optional[SimResult]] = [None] * len(replicas)
-        for idxs in by_cfg.values():
+        # group on the full (config, policy) tuple: mixed fleets run each
+        # group on its own lockstep executor. prefix_cache continuous
+        # groups stay per-replica (the lockstep core does not bind a
+        # radix cache) - they fall through to the scalar loop below.
+        by_key: dict[tuple, list[int]] = {}
+        for i, (cfg, pol) in enumerate(zip(replicas, policies)):
+            if pol.kind == "continuous" and pol.prefix_cache:
+                continue
+            by_key.setdefault((id(cfg), pol), []).append(i)
+        for (_cid, pol), idxs in by_key.items():
             cfg = replicas[idxs[0]]
             vf = VectorFleetSim(cfg.mode, cfg.target,
                                 [parts[i] for i in idxs],
                                 draft_cfg=cfg.draft,
                                 seeds=[seed + i for i in idxs],
-                                start_s=start_s, rng_mode=rng_mode)
+                                start_s=start_s, rng_mode=rng_mode,
+                                batching=pol)
             for lane, res in zip(idxs, vf.drain().results()):
                 results[lane] = res
-        return FleetResult(fleet, results, parts, SimResult.merge(results))
-    results = []
     for i, (cfg, part) in enumerate(zip(replicas, parts)):
-        results.append(simulate(cfg.mode, cfg.target, part, draft_cfg=cfg.draft,
-                                seed=seed + i, start_s=start_s,
-                                batching=batching))
+        if results[i] is None:
+            results[i] = simulate(cfg.mode, cfg.target, part,
+                                  draft_cfg=cfg.draft,
+                                  seed=seed + i, start_s=start_s,
+                                  batching=policies[i])
     return FleetResult(fleet, results, parts, SimResult.merge(results))

@@ -167,6 +167,73 @@ def _roofline(chip: ChipSpec, flops: float, bytes_hbm: float,
     return StepCost(time_s=t, energy_j=power * t, flops=flops, bytes_hbm=bytes_hbm, util=util)
 
 
+def calibration_state() -> "tuple[float, float, float, float]":
+    """Snapshot of the roofline constants `calibrated()` swaps at call time.
+
+    Cost memos key their validity on this tuple: entries priced under one
+    calibration must not be served under another (`costs.HybridPricer`)."""
+    return (EFF_FLOPS, EFF_BW, PREFILL_OVERHEAD_S, DECODE_OVERHEAD_S)
+
+
+# Integer aggregates that fully determine a hybrid step's cost for a fixed
+# (cfg, chip, new_tokens): (chunk_tok, a1, s_sc, n_dec, a2) - see
+# `hybrid_step_key`. Used as memo keys by costs.HybridPricer and computed
+# vectorized by the lockstep fleet core.
+HybridKey = tuple[int, int, int, int, int]
+
+
+def hybrid_step_key(chunks: "tuple[tuple[int, int], ...] | list" = (),
+                    decode_ctxs: "tuple[int, ...] | list" = ()) -> HybridKey:
+    """Integer composition aggregates of one hybrid step.
+
+        chunk_tok = sum(c)            prefill tokens this step
+        a1        = sum(c * (2s + c)) causal-attention key count (x2 flops)
+        s_sc      = sum(s + c)        KV tokens touched by chunks
+        n_dec     = len(decode_ctxs)  decode participants
+        a2        = sum(decode_ctxs)  decode context tokens
+
+    Every accumulated term in `hybrid_step_cost` is an integer-valued
+    float below 2**53 at realistic model scales, so float accumulation is
+    exact and order-independent - computing the cost from these exact
+    Python-int aggregates is bit-identical to the per-chunk/per-ctx loops.
+    That makes the tuple a sound memo key: same key, same StepCost."""
+    chunk_tok = a1 = s_sc = a2 = 0
+    for c, s in chunks:
+        chunk_tok += c
+        a1 += c * (2 * s + c)
+        s_sc += s + c
+    for ctx in decode_ctxs:
+        a2 += ctx
+    return (chunk_tok, a1, s_sc, len(decode_ctxs), a2)
+
+
+def hybrid_step_cost_from_key(cfg: ModelConfig, chip: ChipSpec,
+                              key: HybridKey,
+                              new_tokens: int = 1,
+                              dtype_bytes: int = 2) -> StepCost:
+    """`hybrid_step_cost` evaluated from precomputed integer aggregates."""
+    chunk_tok, a1, s_sc, n_dec, a2 = key
+    dec_tok = n_dec * new_tokens
+    tokens = chunk_tok + dec_tok
+    flops = 2.0 * cfg.active_param_count() * tokens
+    kv_per_tok = cfg.kv_bytes_per_token(dtype_bytes)
+    kv_bytes = 0.0
+    if cfg.attn is not None:
+        a = cfg.attn
+        unit = _attn_layers(cfg) * a.num_heads * a.head_dim
+        # causal: 2 matmuls * 2 flops * (c*s + c^2/2) keys per layer
+        flops += 2.0 * unit * a1
+        flops += 4.0 * unit * a2 * new_tokens
+    kv_bytes += s_sc * kv_per_tok             # re-read cached ctx + write chunk
+    kv_bytes += a2 * kv_per_tok
+    w_bytes = cfg.param_count() * dtype_bytes
+    act_bytes = 12.0 * tokens * cfg.d_model * dtype_bytes
+    state_bytes = n_dec * cfg.state_bytes()
+    overhead = PREFILL_OVERHEAD_S if chunk_tok else DECODE_OVERHEAD_S
+    return _roofline(chip, flops, w_bytes + act_bytes + kv_bytes + state_bytes,
+                     overhead_s=overhead)
+
+
 def hybrid_step_cost(cfg: ModelConfig, chip: ChipSpec,
                      chunks: "tuple[tuple[int, int], ...] | list" = (),
                      decode_ctxs: "tuple[int, ...] | list" = (),
@@ -189,31 +256,15 @@ def hybrid_step_cost(cfg: ModelConfig, chip: ChipSpec,
     chunk list equals `decode_cost(cfg, chip, b, ctx)` when every context
     is `ctx`. Unlike `decode_cost`'s batch-mean context, decode KV traffic
     and attention FLOPs here are summed per sequence - exact under the
-    roofline, so long-context stragglers are no longer undercharged."""
-    chunk_tok = sum(c for c, _ in chunks)
-    dec_tok = len(decode_ctxs) * new_tokens
-    tokens = chunk_tok + dec_tok
-    flops = 2.0 * cfg.active_param_count() * tokens
-    kv_per_tok = cfg.kv_bytes_per_token(dtype_bytes)
-    kv_bytes = 0.0
-    if cfg.attn is not None:
-        a = cfg.attn
-        unit = _attn_layers(cfg) * a.num_heads * a.head_dim
-        for c, s in chunks:
-            # causal: 2 matmuls * 2 flops * (c*s + c^2/2) keys per layer
-            flops += 2.0 * unit * c * (2.0 * s + c)
-        for ctx in decode_ctxs:
-            flops += 4.0 * unit * ctx * new_tokens
-    for c, s in chunks:
-        kv_bytes += (s + c) * kv_per_tok          # re-read cached ctx + write chunk
-    for ctx in decode_ctxs:
-        kv_bytes += ctx * kv_per_tok
-    w_bytes = cfg.param_count() * dtype_bytes
-    act_bytes = 12.0 * tokens * cfg.d_model * dtype_bytes
-    state_bytes = len(decode_ctxs) * cfg.state_bytes()
-    overhead = PREFILL_OVERHEAD_S if chunk_tok else DECODE_OVERHEAD_S
-    return _roofline(chip, flops, w_bytes + act_bytes + kv_bytes + state_bytes,
-                     overhead_s=overhead)
+    roofline, so long-context stragglers are no longer undercharged.
+
+    The cost is a pure function of the `hybrid_step_key` aggregates (exact
+    integer sums - see its docstring), which is what makes the keyed memo
+    in `costs.HybridPricer` and the lockstep fleet core bit-exact."""
+    return hybrid_step_cost_from_key(cfg, chip,
+                                     hybrid_step_key(chunks, decode_ctxs),
+                                     new_tokens=new_tokens,
+                                     dtype_bytes=dtype_bytes)
 
 
 def prefix_reuse_bytes(cfg: ModelConfig, tokens: int,

@@ -75,21 +75,21 @@ from repro.serving.batching import (
     build_dpd_decode_ledger,
     build_dpd_prefill_scheduler,
     build_single_pool_scheduler,
+    dpd_resume_kv,
     plan_dpd_decode_step,
     resolve_batch_policy,
 )
 from repro.serving.costs import (
     dpd_kv_bytes,
     dsd_link_bytes,
-    hybrid_step_charges,
     prefill_charges,
+    shared_pricer,
     spec_round_charges,
     spec_round_time,
 )
 from repro.serving.perfmodel import (
     Interconnect,
     decode_cost,
-    hybrid_step_cost,
     max_concurrency,
 )
 from repro.serving.prefix_cache import request_block_keys
@@ -726,15 +726,20 @@ class ReplicaSim:
         """Hybrid chunked-prefill + decode loop (standalone/spec/dsd).
 
         Each iteration asks the shared `ContinuousScheduler` for a
-        `StepPlan` and prices it through `costs.hybrid_step_charges` - the
-        same function the real-compute engine charges, so the two
-        executors stay parity-comparable on this policy too. Decode
-        contexts are summed per sequence (exact roofline), not batch-mean
-        like the serialized path."""
+        `StepPlan` and prices it through the process-wide `HybridPricer`
+        memo over `costs.hybrid_step_charges` - the same schedule the
+        real-compute engine charges, so the two executors stay
+        parity-comparable on this policy too. Decode contexts are summed
+        per sequence (exact roofline), not batch-mean like the serialized
+        path."""
         sched = self._scheduler()
         traces = self.traces
         mode = self.mode
         k = mode.spec_k
+        pricer = shared_pricer(mode.kind, self.target_cfg, self.draft_cfg,
+                               self.new_chip, self.old_chip, k=k,
+                               interconnect=mode.interconnect,
+                               overlap=mode.overlap_comm)
         while True:
             if self._t >= t_stop:
                 return
@@ -760,11 +765,7 @@ class ReplicaSim:
                     return
                 self._t = max(self._t, nxt)
                 continue
-            hs = hybrid_step_charges(
-                mode.kind, self.target_cfg, self.draft_cfg,
-                self.new_chip, self.old_chip,
-                plan.chunk_specs(), plan.decode_ctxs(), k,
-                mode.interconnect, overlap=mode.overlap_comm)
+            hs = pricer.charges(plan.chunk_specs(), plan.decode_ctxs())
             for chip_name, cost, rel_s in hs.charges:
                 self._charge(chip_name, cost, self._t + rel_s)
             if hs.link_ids_bytes or hs.link_probs_bytes:
@@ -826,6 +827,10 @@ class ReplicaSim:
         mode = self.mode
         traces = self.traces
         sched = self._sched_a_pool()
+        # chunk-only keys price the new pool, decode-only keys the old pool;
+        # both live in one "dpd" pricer (the key spaces are disjoint)
+        pricer = shared_pricer("dpd", cfg, None, self.new_chip,
+                               self.old_chip, interconnect=mode.interconnect)
         # pool A: chunked batched prefill + FIFO link
         while True:
             if self._t_a >= t_stop:
@@ -857,7 +862,7 @@ class ReplicaSim:
                     break
                 self._t_a = max(self._t_a, nxt)
                 continue
-            cost = hybrid_step_cost(cfg, self.new_chip, plan.chunk_specs(), ())
+            cost = pricer.charges(plan.chunk_specs(), ()).charges[0][1]
             self._charge(self.new_chip.name, cost, self._t_a)
             self._t_a += cost.time_s
             if sched.cache is not None:
@@ -916,7 +921,7 @@ class ReplicaSim:
                     break
                 tr, resume_emitted = entry[4]
                 sid = tr.req.req_id
-                kv0 = tr.req.prompt_len + resume_emitted - 1
+                kv0 = dpd_resume_kv(tr.req.prompt_len, resume_emitted)
                 # watermark: keep one growth block per active sequence
                 if ledger.blocks_needed(kv0) > \
                         ledger.free_blocks - len(self._active_b) - 1:
@@ -959,7 +964,7 @@ class ReplicaSim:
                 reship(victim)
                 continue
             ctxs = tuple(s.ctx for s in stepping)
-            c = hybrid_step_cost(cfg, self.old_chip, (), ctxs)
+            c = pricer.charges((), ctxs).charges[0][1]
             self._charge(self.old_chip.name, c, self._t_b)
             # aging credit for arrived entries this round kept waiting
             # (round START time: window-invariant - see DpdReadyQueue)

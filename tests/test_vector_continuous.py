@@ -1,0 +1,184 @@
+"""Lockstep continuous core: bit-exact parity with the scalar executor.
+
+`VectorFleetSim(policy="continuous")` steps R replicas of the hybrid
+chunked-prefill scheduler in numpy lockstep; under rng_mode="sequential"
+it must reproduce `ReplicaSim(batching="continuous")` with `==` (not
+approx) on all four serving kinds - traces, per-chip busy/energy and
+charge segments, link accounting - including mixed-SLO-class workloads
+exercising aging, the TPOT guard, and recompute preemption.
+
+Window invariance caveat (dpd only): a pool-B reship that lands in a
+different `advance_to` window reorders the float summation of
+`link_busy_s` by 1 ulp - the SCALAR executor drifts identically, so the
+bit-exact statement is vector-windowed == scalar-windowed; windowed ==
+drain holds exactly when no reship crosses a window (roomy pool B).
+"""
+import dataclasses
+import math
+
+import pytest
+
+from repro.core.disagg import standard_catalog
+from repro.serving.batching import BatchPolicy
+from repro.serving.fleet import FleetSpec, ReplicaGroup, simulate_fleet
+from repro.serving.simulator import ReplicaSim
+from repro.serving.vector_core import VectorFleetSim
+from repro.serving.workload import DATASETS, sample_requests
+
+DS = DATASETS["sharegpt"]
+CATALOG = standard_catalog()
+BY_NAME = {c.name: c for c in CATALOG}
+KINDS = ["standalone", "spec-llama-1b", "dpd-t4", "dsd-t4-llama-1b"]
+MIX = {"tight": 0.25, "standard": 0.5, "relaxed": 0.25}
+
+
+def _clamp(reqs, pcap=900, ocap=160):
+    """Cap sizes so the workload fits every kind's KV pool (the t4 dpd
+    decode pool rejects the lognormal tail identically on both cores)."""
+    return [dataclasses.replace(r, prompt_len=min(r.prompt_len, pcap),
+                                output_len=min(r.output_len, ocap))
+            for r in reqs]
+
+
+def _parts(n, qps=1.5, dur=90.0, seed=3, **kw):
+    reqs = _clamp(sample_requests(DS, qps=qps, duration_s=dur, seed=seed,
+                                  class_mix=MIX, **kw))
+    return [reqs[i::n] for i in range(n)]
+
+
+def _scalar_results(cfg, parts, seeds, policy="continuous", window=None):
+    out = []
+    for part, seed in zip(parts, seeds):
+        sim = ReplicaSim(cfg.mode, cfg.target, draft_cfg=cfg.draft,
+                         seed=seed, batching=policy)
+        for r in sorted(part, key=lambda r: (r.arrival_s, r.req_id)):
+            sim.submit(r)
+        if window is None:
+            sim.drain()
+        else:
+            t = 0.0
+            while sim.pending:
+                t += window
+                sim.advance_to(t)
+        out.append(sim.result())
+    return out
+
+
+def _assert_equal(a, b):
+    assert len(a.traces) == len(b.traces)
+    for ta, tb in zip(a.traces, b.traces):
+        assert ta.tokens_out == tb.tokens_out
+        assert ta.ttft_s == tb.ttft_s
+        assert ta.finish_s == tb.finish_s or (
+            math.isnan(ta.finish_s) and math.isnan(tb.finish_s))
+    assert a.use.keys() == b.use.keys()
+    for name in a.use:
+        assert a.use[name].busy_s == b.use[name].busy_s
+        assert a.use[name].energy_j == b.use[name].energy_j
+        assert a.use[name].segments == b.use[name].segments
+    assert a.link_bytes == b.link_bytes
+    assert a.link_busy_s == b.link_busy_s
+    assert a.duration_s == b.duration_s
+
+
+@pytest.mark.parametrize("name", KINDS)
+def test_continuous_bit_exact_vs_scalar(name):
+    cfg = BY_NAME[name]
+    parts = _parts(4)
+    seeds = [11 + i for i in range(4)]
+    vf = VectorFleetSim(cfg.mode, cfg.target, parts, draft_cfg=cfg.draft,
+                        seeds=seeds, batching="continuous")
+    for got, want in zip(vf.drain().results(),
+                         _scalar_results(cfg, parts, seeds)):
+        _assert_equal(got, want)
+
+
+@pytest.mark.parametrize("name,policy", [
+    ("standalone", "continuous"),
+    ("spec-llama-1b", "continuous"),
+    ("dsd-t4-llama-1b", "continuous"),
+    # roomy pool B: no reship ever crosses a window boundary
+    ("dpd-t4", BatchPolicy(kind="continuous", num_blocks=400)),
+])
+def test_continuous_windowed_advance_equals_drain(name, policy):
+    cfg = BY_NAME[name]
+    parts = _parts(3)
+    a = VectorFleetSim(cfg.mode, cfg.target, parts, draft_cfg=cfg.draft,
+                       seeds=[5, 6, 7], batching=policy)
+    b = VectorFleetSim(cfg.mode, cfg.target, parts, draft_cfg=cfg.draft,
+                       seeds=[5, 6, 7], batching=policy)
+    t = 0.0
+    while not a.idle:
+        t += 7.3
+        a.advance_to(t)
+    b.drain()
+    for ra, rb in zip(a.results(), b.results()):
+        _assert_equal(ra, rb)
+
+
+@pytest.mark.parametrize("name", ["dpd-t4", "dsd-t4-llama-1b"])
+def test_continuous_windowed_matches_scalar_windowed(name):
+    """Under reship pressure (default pool sizing) the windowed vector
+    core tracks the windowed scalar executor bit-for-bit - including the
+    1-ulp link_busy summation-order drift both share vs drain."""
+    cfg = BY_NAME[name]
+    parts = _parts(3)
+    seeds = [5, 6, 7]
+    vf = VectorFleetSim(cfg.mode, cfg.target, parts, draft_cfg=cfg.draft,
+                        seeds=seeds, batching="continuous")
+    t = 0.0
+    while not vf.idle:
+        t += 7.3
+        vf.advance_to(t)
+    for got, want in zip(vf.results(),
+                         _scalar_results(cfg, parts, seeds, window=7.3)):
+        _assert_equal(got, want)
+
+
+@pytest.mark.parametrize("name", KINDS)
+def test_continuous_scale_mode_conserves_tokens(name):
+    """rng_mode="batched" + record_segments=False (the 1k-replica sweep
+    configuration) keeps the continuous path's token accounting exact."""
+    cfg = BY_NAME[name]
+    parts = _parts(8, qps=3.0)
+    res = VectorFleetSim(cfg.mode, cfg.target, parts, draft_cfg=cfg.draft,
+                         seeds=list(range(8)), rng_mode="batched",
+                         record_segments=False,
+                         batching="continuous").drain().merged()
+    assert res.total_tokens == sum(r.output_len for p in parts for r in p)
+
+
+def test_simulate_fleet_mixed_policy_groups():
+    """Per-group `ReplicaGroup.batching` overrides: a fleet mixing
+    serialized and continuous groups routes each group to the matching
+    vectorized executor and reproduces the per-replica loop exactly."""
+    std, dpd = BY_NAME["standalone"], BY_NAME["dpd-t4"]
+    fleet = FleetSpec((
+        ReplicaGroup(std, 2),                            # inherit default
+        ReplicaGroup(std, 2, batching="serialized"),
+        ReplicaGroup(dpd, 2, batching=BatchPolicy(kind="continuous",
+                                                  num_blocks=400)),
+    ))
+    reqs = _clamp(sample_requests(DS, qps=4.0, duration_s=60.0, seed=9,
+                                  class_mix=MIX))
+    rr = simulate_fleet(fleet, reqs, batching="continuous", core="replica")
+    rv = simulate_fleet(fleet, reqs, batching="continuous", core="vector")
+    assert rr.partitions == rv.partitions
+    for a, b in zip(rv.replica_results, rr.replica_results):
+        _assert_equal(a, b)
+
+
+def test_continuous_prefix_cache_falls_back_per_replica():
+    """The lockstep core refuses continuous+prefix_cache; simulate_fleet
+    quietly routes such groups through the scalar executor instead."""
+    cfg = BY_NAME["standalone"]
+    pol = BatchPolicy(kind="continuous", prefix_cache=True)
+    with pytest.raises(ValueError, match="prefix_cache"):
+        VectorFleetSim(cfg.mode, cfg.target, [[]], batching=pol)
+    fleet = FleetSpec.of_counts(CATALOG, {"standalone": 2})
+    reqs = _clamp(sample_requests(DS, qps=2.0, duration_s=40.0, seed=1))
+    rr = simulate_fleet(fleet, reqs, batching=pol, core="replica")
+    rv = simulate_fleet(fleet, reqs, batching=pol, core="vector")
+    assert rr.partitions == rv.partitions
+    for a, b in zip(rv.replica_results, rr.replica_results):
+        _assert_equal(a, b)

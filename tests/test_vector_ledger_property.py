@@ -1,0 +1,113 @@
+"""Conservation property of the lockstep core's [R]-stacked ledgers.
+
+The vector continuous executor replaces R `BlockLedger` objects with one
+owned-block counter per pool plus the arena's per-sequence `held` array.
+Via `VectorFleetSim.iter_hook` (fired after every lockstep iteration)
+these tests assert, across seeded admission/preempt/finish
+interleavings, that the stacked populations stay conserved -
+
+    owned + shared + retained + free == num_blocks   (per lane, per pool)
+
+with shared == retained == 0 (no prefix cache on this path), that the
+owned counter always equals the summed `held` of the lane's live
+sequences, and that waiting sequences hold nothing. A second test pins
+the stacked counters to the per-replica scalar `BlockLedger` state at
+every shared `advance_to` window boundary.
+"""
+import pytest
+
+from repro.core.disagg import standard_catalog
+from repro.serving.simulator import ReplicaSim
+from repro.serving.vector_core import VectorFleetSim
+
+from tests.test_vector_continuous import _parts
+
+CATALOG = standard_catalog()
+BY_NAME = {c.name: c for c in CATALOG}
+KINDS = ["standalone", "spec-llama-1b", "dpd-t4", "dsd-t4-llama-1b"]
+
+
+def _check_conservation(vf) -> None:
+    pops = vf.ledger_populations()
+    total = (pops["owned"] + pops["shared"] + pops["retained"]
+             + pops["free"])
+    assert (total == pops["num_blocks"]).all()
+    assert not pops["shared"].any() and not pops["retained"].any()
+    assert (pops["owned"] >= 0).all() and (pops["free"] >= 0).all()
+    if "pool_b" in pops:
+        pb = pops["pool_b"]
+        assert (pb["owned"] + pb["free"] == pb["num_blocks"]).all()
+        assert (pb["owned"] >= 0).all() and (pb["free"] >= 0).all()
+    for r in range(vf.R):
+        if vf.waitq[r]:
+            assert int(vf.held[vf.waitq[r]].sum()) == 0
+        live = list(vf.prefq[r])
+        act = vf.act_f[r, :int(vf.act_n[r])].tolist()
+        if vf.mode.kind == "dpd":
+            live += list(vf.runq_a[r])
+            owned_b = int(vf.held[act].sum()) if act else 0
+            assert owned_b == int(vf.used_b[r])
+        else:
+            live += act
+        owned = int(vf.held[live].sum()) if live else 0
+        assert owned == int(pops["owned"][r])
+
+
+@pytest.mark.parametrize("name", KINDS)
+@pytest.mark.parametrize("qps,seed", [(1.5, 3), (3.0, 11)])
+def test_stacked_ledger_conserved_every_iteration(name, qps, seed):
+    cfg = BY_NAME[name]
+    parts = _parts(4, qps=qps, seed=seed)
+    vf = VectorFleetSim(cfg.mode, cfg.target, parts, draft_cfg=cfg.draft,
+                        seeds=[seed + i for i in range(4)],
+                        batching="continuous")
+    fired = [0]
+
+    def hook(sim):
+        fired[0] += 1
+        _check_conservation(sim)
+
+    vf.iter_hook = hook
+    vf.drain()
+    assert fired[0] > 0
+    # drained fleet: every block returned to the pool
+    pops = vf.ledger_populations()
+    assert not pops["owned"].any()
+    if "pool_b" in pops:
+        assert not pops["pool_b"]["owned"].any()
+
+
+@pytest.mark.parametrize("name", KINDS)
+def test_stacked_ledger_equals_scalar_ledger_at_windows(name):
+    cfg = BY_NAME[name]
+    parts = _parts(3, qps=2.0, seed=7)
+    seeds = [21, 22, 23]
+    vf = VectorFleetSim(cfg.mode, cfg.target, parts, draft_cfg=cfg.draft,
+                        seeds=seeds, batching="continuous")
+    sims = []
+    for part, seed in zip(parts, seeds):
+        sim = ReplicaSim(cfg.mode, cfg.target, draft_cfg=cfg.draft,
+                         seed=seed, batching="continuous")
+        for r in sorted(part, key=lambda r: (r.arrival_s, r.req_id)):
+            sim.submit(r)
+        sims.append(sim)
+    t, compared = 0.0, 0
+    while not vf.idle:
+        t += 9.7
+        vf.advance_to(t)
+        for r, sim in enumerate(sims):
+            sim.advance_to(t)
+            if cfg.mode.kind == "dpd":
+                want_a = sim._sched_a.ledger.used_blocks \
+                    if sim._sched_a is not None else 0
+                want_b = sim._ledger_b.used_blocks \
+                    if sim._ledger_b is not None else 0
+                assert int(vf.used[r]) == want_a
+                assert int(vf.used_b[r]) == want_b
+            else:
+                want = sim._sched.ledger.used_blocks \
+                    if sim._sched is not None else 0
+                assert int(vf.used[r]) == want
+            compared += 1
+    assert compared > 0
+    assert all(s.idle for s in sims)
