@@ -116,6 +116,23 @@ class AutoscalePolicy:
     # boundaries only (the pre-existing behavior)
     load_resolve_threshold: Optional[float] = None
     load_probe_s: float = 60.0
+    # failure recovery: when a scripted fault kills a replica, harvest its
+    # unfinished requests (ReplicaSim.take_victims) and re-route them onto
+    # the survivors/replacements at the failure boundary; the next re-solve
+    # sees the shrunken fleet and boots replacements (boot carbon charged
+    # like any scale-up). False = victims stay dead with status "killed" -
+    # the availability baseline the chaos benchmark compares against
+    recover: bool = True
+    # deadline-aware relaxed scheduling: a relaxed-class request carrying
+    # a deadline_s is run-anytime-before-T - in a dirty-grid window
+    # (ci > defer_ci_threshold) or a window that just lost replicas to
+    # faults, the controller DEFERS it instead of routing it, re-entering
+    # it at the first clean/stable window its deadline still fits in
+    # (re-entry at the window boundary, like drain handoffs). Off by
+    # default: deferral changes schedules, so the legacy path stays
+    # bit-exact
+    defer_relaxed: bool = False
+    defer_ci_threshold: float = 250.0
 
     def __post_init__(self):
         if self.boot_s < 0:
@@ -193,6 +210,12 @@ class AutoscaleResult:
 
     def drains(self) -> int:
         return sum(w["drains"] for w in self.windows)
+
+    def deaths(self) -> int:
+        return sum(w.get("deaths", 0) for w in self.windows)
+
+    def recovered(self) -> int:
+        return sum(w.get("recovered", 0) for w in self.windows)
 
     def account(self, ci: "float | CarbonTrace",
                 lifetimes: Optional[dict[str, float]] = None,
@@ -316,6 +339,57 @@ def drain_victims(disp: OnlineDispatcher, candidates: "list[_Replica]",
     return victims[:count]
 
 
+def _split_fault_script(faults) -> "tuple[dict, dict, dict]":
+    """Split a fault script (FaultTrace or FaultEvent iterable) into the
+    controller's view. `ev.replica` indexes replicas in BOOT ORDER (the
+    controller rid): the script shoots at fleet slots, and an event whose
+    time passes before that slot has booted is a no-op.
+
+    Returns (kill_at, notice_at, stall_by_rid):
+      kill_at      rid -> earliest hard-kill time (kill at_s, or preempt
+                   at_s + notice_s); later kill events on an already-dead
+                   rid are ignored
+      notice_at    rid -> preemption-notice open time (the replica stops
+                   taking traffic and starts draining here)
+      stall_by_rid rid -> stall events, handed to the replica's own
+                   injector at boot (time dilation only - no controller
+                   action needed)
+    """
+    best: dict[int, object] = {}
+    stall_by_rid: dict[int, list] = {}
+    for ev in faults:
+        if ev.kind == "stall":
+            stall_by_rid.setdefault(ev.replica, []).append(ev)
+            continue
+        cur = best.get(ev.replica)
+        if cur is None or ev.effective_kill_s < cur.effective_kill_s:
+            best[ev.replica] = ev
+    kill_at: dict[int, float] = {}
+    notice_at: dict[int, float] = {}
+    for rid, ev in best.items():
+        kill_at[rid] = ev.effective_kill_s
+        if ev.kind == "preempt" and ev.at_s < ev.effective_kill_s:
+            notice_at[rid] = ev.at_s
+    return kill_at, notice_at, stall_by_rid
+
+
+def _reenter(req: Request, w0: float) -> Request:
+    """Re-anchor a recovered request at the boundary `w0`. Lifecycle
+    bounds that already expired while the request was stranded on its
+    dead replica collapse to an immediate cancellation at re-entry, so
+    the survivor aborts it at admission and it is still accounted exactly
+    once (an expired deadline surfaces as status "cancelled" here - the
+    timeout fired while no scheduler owned the request)."""
+    deadline = req.deadline_s
+    cancel = req.cancel_at_s
+    if deadline is not None and deadline <= w0:
+        deadline, cancel = None, w0
+    if cancel is not None and cancel < w0:
+        cancel = w0
+    return dataclasses.replace(req, arrival_s=w0,
+                               deadline_s=deadline, cancel_at_s=cancel)
+
+
 # ---------------------------------------------------------------------------
 # The controller
 # ---------------------------------------------------------------------------
@@ -328,6 +402,7 @@ def simulate_autoscaled(
     buckets: Optional[SizeBuckets] = None,
     seed: int = 0,
     rate_estimator: str = "oracle",
+    faults=None,
 ) -> AutoscaleResult:
     """Serve `requests` with a fleet re-allocated at every grid window.
 
@@ -353,7 +428,30 @@ def simulate_autoscaled(
 
     Forecasts are floored at one request per window once traffic has been
     seen: a zero forecast would deprovision the whole fleet and strand
-    every arrival of a mispredicted window."""
+    every arrival of a mispredicted window.
+
+    `faults` (FaultTrace or FaultEvent iterable, `ev.replica` = controller
+    rid in boot order) injects scripted failures the controller must ride
+    through. Every kill/notice time becomes an extra re-solve boundary -
+    a failure window is treated exactly like a load-resolve window:
+
+      kill     the replica dies at the boundary (steps already begun
+               finish, matching `ReplicaSim.advance_to` kill-splitting);
+               with `policy.recover` its unfinished requests are
+               harvested (`take_victims`) and re-routed onto survivors at
+               the boundary, and the same window's re-solve sees the
+               shrunken fleet and boots a replacement, charged boot
+               carbon like any scale-up. Without recovery the victims
+               stay dead with status "killed".
+      preempt  a spot reclaim: at `at_s` the replica stops taking traffic
+               and drains (its untouched backlog is reclaimed
+               immediately); whatever is still in flight races the hard
+               kill at `at_s + notice_s`.
+      stall    handed to the replica's own injector at boot - transient
+               slowdown (time dilation), no controller action.
+
+    Events aimed at a rid that has not booted by the event time, or
+    timed past the last window boundary, are no-ops."""
     if rate_estimator not in ("oracle", "last_window", "ewma"):
         raise ValueError(f"unknown rate_estimator: {rate_estimator!r}")
     reqs = sorted(requests, key=lambda r: (r.arrival_s, r.req_id))
@@ -375,6 +473,16 @@ def simulate_autoscaled(
             [r.arrival_s for r in reqs], bounds,
             policy.load_resolve_threshold, policy.load_probe_s,
             policy.min_window_s)
+    kill_at: dict[int, float] = {}
+    notice_at: dict[int, float] = {}
+    stall_by_rid: dict[int, list] = {}
+    if faults is not None:
+        kill_at, notice_at, stall_by_rid = _split_fault_script(faults)
+        # failure instants are re-solve boundaries, never merged away
+        fault_times = {t for t in (*kill_at.values(), *notice_at.values())
+                       if 0.0 < t < bounds[-1]}
+        if fault_times:
+            bounds = sorted(set(bounds) | fault_times)
 
     disp = make_dispatcher(batching=batching)
     replicas: dict[int, _Replica] = {}
@@ -383,10 +491,42 @@ def simulate_autoscaled(
     i_req = 0
     ewma_rate: Optional[float] = None       # EWMA of observed window rates
     prev_rate: Optional[float] = None       # last window's observed rate
+    deferred: list[Request] = []            # relaxed deadline-jobs on hold
 
     for w0, w1 in zip(bounds, bounds[1:]):
         window_s = w1 - w0
         ci_w = resolve_ci(trace, w0, w1)
+        # --- fault handling at the boundary -----------------------------
+        deaths = notices = 0
+        recovered: list[Request] = []
+        # preemption notices due: the replica stops taking traffic and
+        # drains; its untouched backlog is reclaimed now, while whatever
+        # is in flight races the scheduled hard kill
+        for rid in [r for r, t in notice_at.items() if t <= w0]:
+            del notice_at[rid]
+            rep = replicas.get(rid)
+            if rep is None or not rep.active or rep.retired_s is not None:
+                continue
+            rep.drain_mark_s = w0
+            disp.remove(rid)
+            notices += 1
+            if policy.recover:
+                recovered.extend(rep.sim.reclaim_pending())
+        # hard kills due: every step that began before w0 already ran
+        # (previous window's advance), mirroring advance_to kill-splitting
+        for rid in [r for r, t in kill_at.items() if t <= w0]:
+            del kill_at[rid]
+            rep = replicas.get(rid)
+            if rep is None or rep.retired_s is not None or rep.sim.dead:
+                continue
+            if rep.active:
+                rep.drain_mark_s = w0
+                disp.remove(rid)
+            rep.sim.kill(w0)
+            deaths += 1
+            if policy.recover:
+                recovered.extend(rep.sim.take_victims())
+            rep.retired_s = max(w0, rep.sim.result().duration_s)
         # --- window estimates ------------------------------------------
         j = i_req
         while j < len(reqs) and reqs[j].arrival_s < w1:
@@ -399,14 +539,17 @@ def simulate_autoscaled(
             rate_est = prev_rate
         else:                                # ewma
             rate_est = ewma_rate
-        if rate_est <= 0 and i_req > 0:
-            rate_est = 1.0 / window_s        # minimum-capacity floor
+        if rate_est <= 0 and (i_req > 0 or recovered):
+            # minimum-capacity floor; recovered victims are real demand
+            # even when the window itself brings no fresh arrivals
+            rate_est = max(1.0, float(len(recovered))) / window_s
         # --- re-solve the allocation for this window -------------------
         active = [r for r in replicas.values() if r.active]
         prev_counts: dict[str, int] = {}
         for r in active:
             prev_counts[r.cfg.name] = prev_counts.get(r.cfg.name, 0) + 1
-        if arrivals or (rate_est > 0 and rate_estimator != "oracle"):
+        if arrivals or recovered \
+                or (rate_est > 0 and rate_estimator != "oracle"):
             info_w = profiles.at(ci_w)
             boot_g = policy.boot_carbon_g
             if boot_g is None:
@@ -455,7 +598,8 @@ def simulate_autoscaled(
                                  seed=seed + next_rid,
                                  ctx_estimate=ctx_estimate,
                                  start_s=reserve + policy.boot_s,
-                                 batching=batching)
+                                 batching=batching,
+                                 faults=stall_by_rid.get(next_rid))
                 rep = _Replica(next_rid, by_name[name], sim,
                                reserve_start_s=reserve,
                                serve_start_s=reserve + policy.boot_s)
@@ -481,6 +625,26 @@ def simulate_autoscaled(
         if policy.drain_handoff and boots:
             for r in victims_w:
                 handoff.extend(r.sim.reclaim_pending())
+        # failure victims always re-route: unlike a voluntary drain, a
+        # dead replica cannot finish its own backlog
+        handoff.extend(recovered)
+        # --- deadline-aware relaxed deferral ----------------------------
+        # re-enter held jobs once the grid is clean and the fleet stable
+        # again, or when a job's deadline no longer survives another
+        # window of waiting (every held job has deadline_s > w0, so
+        # re-entry at the boundary never violates deadline > arrival)
+        deferred_in = 0
+        if deferred:
+            flush = ci_w <= policy.defer_ci_threshold and deaths == 0
+            last_window = w1 >= bounds[-1]
+            still: list[Request] = []
+            for req in deferred:
+                if flush or last_window or req.deadline_s <= w1:
+                    handoff.append(req)
+                    deferred_in += 1
+                else:
+                    still.append(req)
+            deferred = still
         # --- route this window's arrivals online -----------------------
         pools: dict[tuple[int, int], list[int]] = {}
         for bucket, shares in alloc.assignment.items():
@@ -502,12 +666,23 @@ def simulate_autoscaled(
         # that just booted for this window
         handoff.sort(key=lambda r: (r.arrival_s, r.req_id))
         for req in handoff:
-            req = dataclasses.replace(req, arrival_s=w0)
+            req = _reenter(req, w0)
             pool = pools.get(buckets.index(req.prompt_len, req.output_len),
                              everyone)
             rid = disp.pick(req, pool or everyone)
             replicas[rid].sim.submit(req)
+        deferrals = 0
         for req in arrivals:
+            # a relaxed deadline-job is run-anytime-before-T: hold it out
+            # of a dirty-grid or failure window while a later window can
+            # still meet its deadline
+            if policy.defer_relaxed and req.slo_class == "relaxed" \
+                    and req.deadline_s is not None \
+                    and (ci_w > policy.defer_ci_threshold or deaths) \
+                    and req.deadline_s > w1 and w1 < bounds[-1]:
+                deferred.append(req)
+                deferrals += 1
+                continue
             pool = pools.get(buckets.index(req.prompt_len, req.output_len),
                              everyone)
             rid = disp.pick(req, pool or everyone)
@@ -531,6 +706,9 @@ def simulate_autoscaled(
             "alloc_feasible": alloc.feasible,
             "unplaced_rate": alloc.unplaced_rate,
             "boot_g": alloc.boot_g,
+            "deaths": deaths, "preempt_notices": notices,
+            "recovered": len(recovered),
+            "deferrals": deferrals, "deferred_in": deferred_in,
         })
         # estimator state: fold in this window's *observed* rate
         prev_rate = rate

@@ -462,6 +462,15 @@ class DpdReadyQueue:
         """Earliest KV arrival over ALL entries (the idle-jump target)."""
         return min((e[0] for e in self._entries), default=None)
 
+    def purge(self, pred) -> list:
+        """Remove every entry whose item matches `pred`; return the items.
+        Fault/cancel path: a killed replica or an aborted request must not
+        leave shipped-KV entries behind to be admitted later."""
+        hit = [e for e in self._entries if pred(e[4])]
+        for e in hit:
+            self._entries.remove(e)
+        return [e[4] for e in hit]
+
 
 # ---------------------------------------------------------------------------
 # Block ledger: PagedKVPool's accounting without the storage
@@ -647,6 +656,11 @@ class SchedSeq:
     # chained content keys of the prompt's full KV blocks (empty when the
     # executor runs without a prefix cache) - serving/prefix_cache.py
     prefix_keys: tuple = ()
+    # absolute finish deadline (None = unbounded). A relaxed-class seq
+    # with a deadline is a run-anytime-before-T job: the waiting queue
+    # orders it earliest-deadline-first WITHIN its class, and the
+    # executors time it out at the first scheduling point past it.
+    deadline_s: Optional[float] = None
 
     def __post_init__(self):
         if self.prefill_target < 0:
@@ -732,6 +746,7 @@ class ContinuousScheduler:
         self.prefilling: list[SchedSeq] = []      # blocks held, chunks pending
         self.running: list[SchedSeq] = []         # fully prefilled, decoding
         self.finished: list[SchedSeq] = []
+        self.aborted: list[SchedSeq] = []         # cancelled/timed-out/killed
         self._step = 0                            # next_plan() invocations
         self._order = 0                           # submission counter
 
@@ -750,8 +765,13 @@ class ContinuousScheduler:
         return aged_priority(seq.priority, self._step - seq.enqueue_step,
                              self.policy.age_steps)
 
-    def _wkey(self, seq: SchedSeq) -> tuple[int, int]:
-        return (self._eff_priority(seq), seq.order)
+    def _wkey(self, seq: SchedSeq) -> tuple[int, float, int]:
+        """Waiting-queue order: class (aged), then earliest deadline WITHIN
+        the class (EDF for run-anytime-before-T jobs), then submission
+        order. Deadline-free workloads sort (p, inf, order) - identical to
+        the pre-deadline (p, order) schedule, bit-exact by construction."""
+        d = seq.deadline_s if seq.deadline_s is not None else math.inf
+        return (self._eff_priority(seq), d, seq.order)
 
     @property
     def n_scheduled(self) -> int:
@@ -1103,6 +1123,28 @@ class ContinuousScheduler:
             self._finish(seq)
             return True
         return False
+
+    def abort(self, seq: SchedSeq) -> None:
+        """Mid-flight abort (cancellation, timeout, replica kill): release
+        whatever the sequence holds and drop it from the schedule.
+
+        Unlike `_preempt` the seq is NOT re-queued and unlike `_finish` its
+        prompt blocks are NOT published - a cancelled request's prefix was
+        never served to completion, so retaining it would retain work the
+        accounting already wrote off. Blocks and cache refs are freed
+        through the same ledger/cache hooks as the preemption path, so the
+        four-population conservation invariant holds after every abort."""
+        if seq in self.waiting:
+            self.waiting.remove(seq)       # holds no blocks, no cache refs
+        else:
+            if self.cache is not None:
+                self.cache.release(seq.sid)
+            self.ledger.free(seq.sid)
+            if seq in self.running:
+                self.running.remove(seq)
+            else:
+                self.prefilling.remove(seq)
+        self.aborted.append(seq)
 
     def _finish(self, seq: SchedSeq) -> None:
         self.running.remove(seq)

@@ -64,6 +64,7 @@ from repro.serving.costs import (
     spec_round_charges,
     spec_round_time,
 )
+from repro.distributed.fault import make_injector
 from repro.serving.kv_cache import PagedKVPool
 from repro.serving.perfmodel import Interconnect, decode_cost
 from repro.serving.prefix_cache import token_block_keys
@@ -82,6 +83,11 @@ class EngineRequest:
     ttft_s: float = float("nan")
     first_token_s: float = float("nan")
     last_token_s: float = float("nan")
+    # lifecycle bounds + outcome, mirroring workload.Request / ReqTrace:
+    # "ok" (finished or pending), else "cancelled" / "timed_out" / "killed"
+    deadline_s: Optional[float] = None
+    cancel_at_s: Optional[float] = None
+    status: str = "ok"
 
     @property
     def done(self) -> bool:
@@ -117,6 +123,7 @@ class ServingEngine:
         batching: "BatchPolicy | str | None" = None,
         ci_trace=None,
         paged: "bool | str" = "auto",
+        faults=None,
     ):
         if kind in ("spec", "dsd"):
             assert draft_cfg is not None and draft_params is not None
@@ -186,6 +193,7 @@ class ServingEngine:
         self.active: dict[int, EngineRequest] = {}
         self.last_token: dict[int, int] = {}  # committed-but-unprocessed token
         self.finished: list[EngineRequest] = []
+        self.aborted: list[EngineRequest] = []  # cancelled/timed_out/killed
         self._next_id = 0
         # measured speculative statistics
         self.rounds = 0
@@ -205,6 +213,13 @@ class ServingEngine:
         # tokens of ADOPTED (cache-shared) prefix per sid: KV the sequence
         # aliases but must never rewrite (prefix_cache sharing)
         self._shared_tok: dict[int, int] = {}
+        # fault state, constructed exactly like the simulator's so both
+        # executors share one injector rng stream per (seed, trace)
+        self._fault = make_injector(faults, seed=seed)
+        self._kill_s = self._fault.kill_s if self._fault else float("inf")
+        self.dead = False
+        self.dead_s: Optional[float] = None
+        self._lifecycle = False           # any deadline/cancel submitted
         if self.policy.kind == "continuous":
             if kind == "dpd":
                 self._sched_a = build_dpd_prefill_scheduler(
@@ -234,12 +249,21 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int, arrival_s: float = 0.0,
-               slo_class: str = "standard") -> EngineRequest:
+               slo_class: str = "standard",
+               deadline_s: Optional[float] = None,
+               cancel_at_s: Optional[float] = None) -> EngineRequest:
         if slo_class not in SLO_CLASSES:
             raise ValueError(f"unknown slo_class: {slo_class!r} "
                              f"(one of {sorted(SLO_CLASSES)})")
+        if deadline_s is not None and deadline_s <= arrival_s:
+            raise ValueError(f"deadline_s {deadline_s} must exceed arrival_s")
+        if cancel_at_s is not None and cancel_at_s < arrival_s:
+            raise ValueError(f"cancel_at_s {cancel_at_s} precedes arrival_s")
         r = EngineRequest(self._next_id, np.asarray(prompt, np.int32),
-                          max_new_tokens, arrival_s, slo_class=slo_class)
+                          max_new_tokens, arrival_s, slo_class=slo_class,
+                          deadline_s=deadline_s, cancel_at_s=cancel_at_s)
+        if deadline_s is not None or cancel_at_s is not None:
+            self._lifecycle = True
         self._next_id += 1
         self.waiting.append(r)
         return r
@@ -249,6 +273,99 @@ class ServingEngine:
         # engine runs can also be priced against a CarbonTrace timeline
         self.use[chip.name].add(self.clock if at_s is None else at_s, cost)
         return cost.time_s
+
+    # ------------------------------------------------- lifecycle / faults
+    @staticmethod
+    def _expired(r: EngineRequest, t: float) -> Optional[str]:
+        """Abort reason for an unfinished request at scheduling point `t`
+        (cancellation wins ties - same rule as ReplicaSim._expired)."""
+        if r.cancel_at_s is not None and r.cancel_at_s <= t:
+            return "cancelled"
+        if r.deadline_s is not None and r.deadline_s <= t:
+            return "timed_out"
+        return None
+
+    def _dilate(self, begin_s: float, base_s: float) -> float:
+        """Wall-clock duration of a compute step beginning at `begin_s`:
+        the one stall code path (FaultInjector.step_time). Identity
+        without an injector. Charges are never dilated - a stalled chip
+        waits, it does not re-compute - and dpd link transfers keep their
+        base time (the interconnect is not the straggling device)."""
+        if self._fault is None:
+            return base_s
+        return self._fault.step_time(begin_s, base_s)
+
+    def _abort_cleanup(self, sid: int) -> None:
+        """Release everything the engine itself holds for an aborted
+        sequence: tracking dicts and the REAL pool blocks. Scheduler-side
+        state (ledger blocks, cache refs) is released by the caller
+        through `ContinuousScheduler.abort` / `_ledger_b.free` first -
+        this is the physical mirror, like `_retire_continuous` without
+        the finish bookkeeping."""
+        self.active.pop(sid, None)
+        self.last_token.pop(sid, None)
+        self._shared_tok.pop(sid, None)
+        if self.pool.has(sid):
+            self.pool.free(sid)
+        if self.draft_pool is not None and self.draft_pool.has(sid):
+            self.draft_pool.free(sid)
+
+    def kill(self, at_s: float) -> None:
+        """The engine dies NOW: mirror of `ReplicaSim.kill`. Every
+        unfinished request is aborted with status "killed", scheduler
+        ledgers are freed, retained prefix-cache nodes are shed (their
+        pinned pool blocks deref through the drop hook), the physical
+        pools release every live sequence, and all queues empty. Charges
+        already written stay written - partial work is charged exactly
+        once."""
+        if self.dead:
+            return
+        self.dead = True
+        self.dead_s = at_s
+        self.clock = max(self.clock, at_s)
+        victims = list(self.active.values()) + list(self.waiting)
+        if self.policy.kind == "continuous":
+            sched = self._sched_a if self.kind == "dpd" else self._sched
+            if sched is not None:
+                for seq in (list(sched.running) + list(sched.prefilling)
+                            + list(sched.waiting)):
+                    sched.abort(seq)
+                if sched.cache is not None:
+                    sched.cache.shed()
+            if self.kind == "dpd":
+                for seq in self._decoding_b:
+                    self._ledger_b.free(seq.sid)
+                self._decoding_b.clear()
+                self._ready_b.purge(lambda item: True)
+        for r in victims:
+            self._abort_cleanup(r.req_id)
+            if not r.done and r.status == "ok":
+                r.status = "killed"
+                self.aborted.append(r)
+        self.waiting.clear()
+
+    def _abort(self, r: EngineRequest, status: str) -> None:
+        """One aborted (cancelled / timed-out) request: engine-side
+        cleanup + outcome bookkeeping. Scheduler/ledger state must
+        already be released by the caller."""
+        r.status = status
+        self._abort_cleanup(r.req_id)
+        self.aborted.append(r)
+
+    def status_counts(self) -> dict[str, int]:
+        """Requests per lifecycle outcome over everything submitted -
+        the engine-side twin of SimResult.status_counts (every request
+        exactly once)."""
+        out = {"ok": 0, "cancelled": 0, "timed_out": 0, "killed": 0}
+        for r in self.finished:
+            out[r.status] += 1
+        for r in self.aborted:
+            out[r.status] += 1
+        for r in self.active.values():
+            out[r.status] += 1
+        for r in self.waiting:
+            out[r.status] += 1
+        return out
 
     def _split(self):
         self.rng, sub = jax.random.split(self.rng)
@@ -268,22 +385,58 @@ class ServingEngine:
         Arrival-aware (same admission as the simulator's loop): a waiting
         request takes prefill priority once it has arrived; future
         arrivals only pull the clock forward when the engine is otherwise
-        idle - decode never gets clock-warped past pending work."""
+        idle - decode never gets clock-warped past pending work.
+
+        Fault semantics mirror `ReplicaSim.advance_to`: every iteration
+        that *begins* before the scripted kill time runs to completion
+        and stays charged (non-preemptive), then `kill()` fires and
+        step() returns False for good."""
+        if self.dead:
+            return False
         if self.policy.kind == "continuous":
             if self.kind == "dpd":
                 return self._step_continuous_dpd()
             return self._step_continuous()
-        if self.waiting and len(self.active) < self.max_batch and (
-                self.waiting[0].arrival_s <= self.clock or not self.active):
-            self._do_prefill(self.waiting.popleft())
-            return True
-        if self.active:
+        return self._step_serialized()
+
+    def _step_serialized(self) -> bool:
+        while True:
+            if self._lifecycle:
+                now = self.clock
+                for r in [r for r in self.waiting
+                          if r.arrival_s <= now and self._expired(r, now)]:
+                    self.waiting.remove(r)
+                    self._abort(r, self._expired(r, now))
+                for r in [r for r in self.active.values()
+                          if self._expired(r, now)]:
+                    self._abort(r, self._expired(r, now))
+            want_prefill = bool(
+                self.waiting and len(self.active) < self.max_batch
+                and (self.waiting[0].arrival_s <= self.clock
+                     or not self.active))
+            if not want_prefill and not self.active:
+                if self._kill_s < float("inf"):
+                    self.kill(self._kill_s)
+                return False
+            begin = self.clock
+            if want_prefill:
+                begin = max(begin, self.waiting[0].arrival_s)
+            if begin >= self._kill_s:
+                self.kill(self._kill_s)
+                return False
+            if want_prefill:
+                if self._lifecycle and begin > self.clock:
+                    # idle jump: rescan expiry at the jumped instant
+                    # before prefilling (the simulator's loop-top order)
+                    self.clock = begin
+                    continue
+                self._do_prefill(self.waiting.popleft())
+                return True
             if self.kind in ("spec", "dsd"):
                 self._do_spec_round()
             else:
                 self._do_decode_step()
             return True
-        return False
 
     def run_until_idle(self, max_iters: int = 100_000) -> list[EngineRequest]:
         for _ in range(max_iters):
@@ -310,7 +463,7 @@ class ServingEngine:
                                 self.new_chip, self.old_chip, pl)
         for chip_name, cost, rel_s in sched.charges:
             self._charge(CHIP_DB[chip_name], cost, at_s=self.clock + rel_s)
-        dur = sched.duration_s
+        dur = self._dilate(self.clock, sched.duration_s)
         if self.kind == "dpd":
             # KV + recurrent state cross to the decode pool
             nbytes = dpd_kv_bytes(self.cfg, pl)
@@ -376,7 +529,9 @@ class ServingEngine:
         new = np.asarray(self._sample(logits))
         ctx = int(np.mean([self.pool.seq(s).length for s in sids]))
         chip = self.old_chip if self.kind == "dpd" else self.new_chip
-        self.clock += self._charge(chip, decode_cost(self.cfg, chip, len(sids), ctx))
+        self.clock += self._dilate(
+            self.clock,
+            self._charge(chip, decode_cost(self.cfg, chip, len(sids), ctx)))
         for sid, tok in zip(sids, new):
             self._emit(self.active[sid], [int(tok)])
             self.last_token[sid] = int(tok)
@@ -411,7 +566,7 @@ class ServingEngine:
         round_t = spec_round_time(
             self.kind, c_d, c_t, self.interconnect,
             out.get("bytes_token_ids", 0), out.get("bytes_draft_probs", 0))
-        self.clock += round_t
+        self.clock += self._dilate(self.clock, round_t)
 
         toks = np.asarray(out["tokens"])
         new_last = np.asarray(out["new_last"])
@@ -444,7 +599,18 @@ class ServingEngine:
                 r.req_id, len(r.prompt),
                 r.max_new_tokens if output_len is None else output_len,
                 payload=r, priority=class_priority(r.slo_class),
-                prefix_keys=keys))
+                prefix_keys=keys, deadline_s=r.deadline_s))
+
+    def _expire_sched(self, sched: ContinuousScheduler, t: float) -> None:
+        """Abort every expired sequence the scheduler holds (ledger blocks
+        and cache refs release through `sched.abort`), then mirror on the
+        real pools - the engine twin of ReplicaSim._expire_sched."""
+        for seq in (list(sched.waiting) + list(sched.prefilling)
+                    + list(sched.running)):
+            st = self._expired(seq.payload, t)
+            if st is not None:
+                sched.abort(seq)
+                self._abort(seq.payload, st)
 
     # ------------------------------------------------- prefix-cache hooks
     def _cache_grab(self, sid: int, i: int):
@@ -577,13 +743,20 @@ class ServingEngine:
         (tests/test_engine_sim_parity.py, continuous rows)."""
         sched = self._sched
         while True:
+            if self.clock >= self._kill_s:
+                self.kill(self._kill_s)
+                return False
             self._admit_continuous(sched)
+            if self._lifecycle:
+                self._expire_sched(sched, self.clock)
             if sched.cache is not None:
                 sched.cache.now_s = self.clock    # carbon lookup only
             plan = sched.next_plan()
             if plan is not None:
                 break
             if not self.waiting:
+                if self._kill_s < float("inf"):
+                    self.kill(self._kill_s)
                 return False
             self.clock = max(self.clock, self.waiting[0].arrival_s)
         for victim in plan.preempted:
@@ -601,7 +774,7 @@ class ServingEngine:
             plan.chunk_specs(), plan.decode_ctxs(), k, self.interconnect)
         for chip_name, cost, rel_s in hs.charges:
             self._charge(CHIP_DB[chip_name], cost, at_s=self.clock + rel_s)
-        t_end = self.clock + hs.duration_s
+        t_end = self.clock + self._dilate(self.clock, hs.duration_s)
         if sched.cache is not None:
             sched.cache.now_s = t_end             # publish at step-end time
         for ch in plan.chunks:
@@ -703,7 +876,13 @@ class ServingEngine:
         HBM."""
         sched = self._sched_a
         while True:
+            if self.clock >= self._kill_s:
+                self.kill(self._kill_s)
+                return False
             self._admit_continuous(sched, output_len=1)
+            if self._lifecycle:
+                self._expire_sched(sched, self.clock)
+                self._expire_pool_b()
             if sched.cache is not None:
                 sched.cache.now_s = self.clock    # carbon lookup only
             plan = sched.next_plan()
@@ -715,8 +894,24 @@ class ServingEngine:
                 self._dpd_decode_step()
                 return True
             if not self.waiting:
+                if self._kill_s < float("inf"):
+                    self.kill(self._kill_s)
                 return False
             self.clock = max(self.clock, self.waiting[0].arrival_s)
+
+    def _expire_pool_b(self) -> None:
+        """Expire pool-B state at the engine clock: queued (shipped-KV)
+        entries hold no pool-B ledger blocks but do hold real pool blocks;
+        decoding sequences free both."""
+        now = self.clock
+        for r in self._ready_b.purge(
+                lambda it: self._expired(it, now) is not None):
+            self._abort(r, self._expired(r, now))
+        for seq in [s for s in self._decoding_b
+                    if self._expired(s.payload, now)]:
+            self._ledger_b.free(seq.sid)
+            self._decoding_b.remove(seq)
+            self._abort(seq.payload, self._expired(seq.payload, now))
 
     def _dpd_prefill_step(self, plan) -> None:
         sched = self._sched_a
@@ -730,7 +925,7 @@ class ServingEngine:
             plan.chunk_specs(), (), 0, self.interconnect)
         for chip_name, cost, rel_s in hs.charges:
             self._charge(CHIP_DB[chip_name], cost, at_s=self.clock + rel_s)
-        t_end = self.clock + hs.duration_s
+        t_end = self.clock + self._dilate(self.clock, hs.duration_s)
         if sched.cache is not None:
             sched.cache.now_s = t_end
         tx_total = 0.0
@@ -829,7 +1024,7 @@ class ServingEngine:
         # queued pool-B entries age one level per age_steps decode rounds
         # they sit out (rounds starting at/after their link arrival)
         self._ready_b.note_round(self.clock)
-        self.clock += hs.duration_s
+        self.clock += self._dilate(self.clock, hs.duration_s)
         for seq, tok in zip(stepping, new):
             r: EngineRequest = seq.payload
             r.out_tokens.append(int(tok))

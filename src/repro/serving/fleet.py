@@ -715,6 +715,33 @@ class FleetResult:
         return [r.total_tokens for r in self.replica_results]
 
 
+def _per_replica_faults(faults, n_replicas: int) -> list:
+    """Normalize `faults` to one entry per fleet replica index.
+
+    Accepts a `FaultTrace` (events carry `replica` indices on the fleet's
+    expanded `replicas()` order) or an already per-replica sequence.
+    Entries are None for fault-free replicas - those lanes stay on the
+    bit-exact legacy path."""
+    from repro.distributed.fault import FaultTrace
+    if isinstance(faults, FaultTrace):
+        out: list = [None] * n_replicas
+        for ev in faults:
+            if ev.replica >= n_replicas:
+                raise ValueError(
+                    f"fault event targets replica {ev.replica} of a "
+                    f"{n_replicas}-replica fleet")
+            if out[ev.replica] is None:
+                out[ev.replica] = []
+            out[ev.replica].append(ev)
+        return out
+    faults = list(faults)
+    if len(faults) != n_replicas:
+        raise ValueError(
+            f"per-replica faults must match the fleet "
+            f"({n_replicas} replicas, got {len(faults)})")
+    return faults
+
+
 def simulate_fleet(
     fleet: FleetSpec,
     requests: Sequence[Request],
@@ -727,6 +754,7 @@ def simulate_fleet(
     core: str = "replica",
     dispatcher=None,
     rng_mode: str = "sequential",
+    faults=None,
 ) -> FleetResult:
     """Route `requests` across the fleet, simulate each replica, merge.
 
@@ -747,10 +775,21 @@ def simulate_fleet(
     so a mixed fleet (per-group `ReplicaGroup.batching` overrides) routes
     each group to the right executor (see docs/scaling.md). `dispatcher`
     picks the routing core ("heap" default, "linear", or a pre-built
-    OnlineDispatcher)."""
+    OnlineDispatcher).
+
+    `faults` injects replica failures (distributed/fault.py): a
+    `FaultTrace` (events carry fleet replica indices) or a per-replica
+    sequence of event iterables. Affected replicas abort their in-flight
+    work with "killed" status at the scripted times - on the vector core
+    those lanes delegate to the scalar event loop (chaos lanes), clean
+    lanes keep the lockstep path. None is the bit-exact legacy path; for
+    kill RECOVERY (victims re-routed, replacements booted) drive the
+    autoscale controller instead (serving/autoscale.py)."""
     batching = resolve_batch_policy(batching, default=FLEET_BATCHING_DEFAULT)
     if core not in ("replica", "vector"):
         raise ValueError(f"unknown simulation core: {core!r}")
+    lane_faults = _per_replica_faults(faults, fleet.total_count) \
+        if faults is not None else None
     if policy == "least_loaded":
         parts = route_least_loaded(requests, fleet, start_s, batching,
                                    dispatcher)
@@ -782,7 +821,9 @@ def simulate_fleet(
                                 draft_cfg=cfg.draft,
                                 seeds=[seed + i for i in idxs],
                                 start_s=start_s, rng_mode=rng_mode,
-                                batching=pol)
+                                batching=pol,
+                                faults=[lane_faults[i] for i in idxs]
+                                if lane_faults is not None else None)
             for lane, res in zip(idxs, vf.drain().results()):
                 results[lane] = res
     for i, (cfg, part) in enumerate(zip(replicas, parts)):
@@ -790,5 +831,7 @@ def simulate_fleet(
             results[i] = simulate(cfg.mode, cfg.target, part,
                                   draft_cfg=cfg.draft,
                                   seed=seed + i, start_s=start_s,
-                                  batching=policies[i])
+                                  batching=policies[i],
+                                  faults=lane_faults[i]
+                                  if lane_faults is not None else None)
     return FleetResult(fleet, results, parts, SimResult.merge(results))

@@ -321,6 +321,18 @@ class PrefixCache:
                     "prefix cache asked to reclaim more blocks than it "
                     "retains - ledger/cache accounting diverged")
 
+    def shed(self) -> int:
+        """Evict EVERYTHING evictable - the replica-death path.
+
+        A killed replica's HBM is gone with the node, so its retained
+        prefix blocks cannot survive it. The executor first aborts every
+        holder (dropping refs), then calls `shed()`; afterwards the ledger
+        shows zero retained blocks. Returns the number of nodes evicted."""
+        n = 0
+        while self._evict_lru():
+            n += 1
+        return n
+
     # -------------------------------------------------------------- stats
     def stats(self) -> dict:
         return {"lookups": self.lookups, "hits": self.hits,

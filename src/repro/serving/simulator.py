@@ -64,6 +64,7 @@ from repro.core.carbon import (
     request_carbon,
     resolve_ci,
 )
+from repro.distributed.fault import make_injector
 from repro.models.config import ModelConfig
 from repro.serving.batching import (
     BatchPolicy,
@@ -122,6 +123,12 @@ class ReqTrace:
     tokens_out: int = 0
     first_token_s: float = math.nan
     last_token_s: float = math.nan
+    # lifecycle outcome: "ok" (finished or still pending), or the abort
+    # reason - "cancelled" (client cancel), "timed_out" (deadline passed),
+    # "killed" (replica died). Exactly one status per request; an aborted
+    # request keeps the tokens/charges it accrued (partial work stays
+    # charged once - the no-double-charge accounting rule).
+    status: str = "ok"
 
     @property
     def tpot_s(self) -> float:
@@ -176,15 +183,46 @@ class SimResult:
         return sum(t.tokens_out for t in self.traces)
 
     def slo_attainment(self, ds: Dataset,
-                       slo_class: Optional[str] = None) -> float:
+                       slo_class: Optional[str] = None,
+                       include_aborted: bool = False) -> float:
         """Fraction of requests meeting their class targets; `slo_class`
-        restricts to one class (None = all, the legacy aggregate)."""
+        restricts to one class (None = all, the legacy aggregate).
+
+        Aborted requests (cancelled / timed-out / killed) are accounted in
+        `status_counts`, DISTINCT from SLO misses, so by default they leave
+        the denominator - a cancelled request is not a latency failure.
+        `include_aborted=True` is the stricter availability view (the chaos
+        benchmarks use it): every abort counts as a miss."""
         traces = self.traces if slo_class is None else \
             [t for t in self.traces if t.req.slo_class == slo_class]
-        done = [t for t in traces if t.tokens_out >= t.req.output_len]
+        if not include_aborted:
+            traces = [t for t in traces if t.status == "ok"]
+        done = [t for t in traces
+                if t.status == "ok" and t.tokens_out >= t.req.output_len]
         if not traces:
             return 1.0
         return sum(t.slo_ok(ds) for t in done) / len(traces)
+
+    def status_counts(self) -> dict[str, int]:
+        """Requests per lifecycle outcome ("ok" = finished or pending).
+        Every request appears exactly once - the chaos-accounting
+        invariant (tests/test_chaos_property.py)."""
+        out = {"ok": 0, "cancelled": 0, "timed_out": 0, "killed": 0}
+        for t in self.traces:
+            out[t.status] += 1
+        return out
+
+    @property
+    def num_cancelled(self) -> int:
+        return sum(1 for t in self.traces if t.status == "cancelled")
+
+    @property
+    def num_timed_out(self) -> int:
+        return sum(1 for t in self.traces if t.status == "timed_out")
+
+    @property
+    def num_killed(self) -> int:
+        return sum(1 for t in self.traces if t.status == "killed")
 
     def per_class_attainment(self, ds: Dataset) -> dict[str, float]:
         """SLO attainment per class present in the trace set."""
@@ -348,6 +386,7 @@ class ReplicaSim:
         start_s: float = 0.0,
         batching: "BatchPolicy | str | None" = None,
         ci_trace: Optional[CarbonTrace] = None,
+        faults=None,
     ):
         if mode.kind in ("spec", "dsd") and draft_cfg is None:
             raise ValueError(f"{mode.kind} needs a draft model")
@@ -399,6 +438,16 @@ class ReplicaSim:
         self._sched_a: Optional[ContinuousScheduler] = None  # dpd prefill pool
         self._ledger_b: Optional[BlockLedger] = None         # dpd decode pool
         self._active_b: list[SchedSeq] = []
+        # fault state (distributed/fault.py): the injector owns a DEDICATED
+        # rng stream, so a zero-fault trace replays schedules bit-exactly
+        self._fault = make_injector(faults, seed=seed)
+        self._kill_s = self._fault.kill_s if self._fault else math.inf
+        self.dead = False
+        self.dead_s: Optional[float] = None
+        # any submitted request carrying cancel_at_s/deadline_s flips this;
+        # False skips the per-step expiry scans entirely (zero overhead on
+        # legacy workloads)
+        self._lifecycle = False
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> ReqTrace:
@@ -408,6 +457,8 @@ class ReplicaSim:
                 f"arrivals must be non-decreasing: {req.arrival_s} after "
                 f"{self.traces[-1].req.arrival_s}")
         tr = ReqTrace(req)
+        if req.cancel_at_s is not None or req.deadline_s is not None:
+            self._lifecycle = True
         self.traces.append(tr)
         return tr
 
@@ -472,9 +523,11 @@ class ReplicaSim:
 
     @property
     def pending(self) -> int:
-        """Requests submitted but not yet finished."""
+        """Requests submitted and still awaiting service: unfinished AND
+        not aborted (a cancelled/timed-out/killed request is resolved -
+        nothing here will ever serve it again)."""
         return sum(1 for tr in self.traces
-                   if math.isnan(tr.finish_s))
+                   if math.isnan(tr.finish_s) and tr.status == "ok")
 
     @property
     def idle(self) -> bool:
@@ -503,7 +556,24 @@ class ReplicaSim:
 
     # ------------------------------------------------------------- driving
     def advance_to(self, t_stop: float) -> "ReplicaSim":
-        """Run every step that begins before `t_stop` (non-preemptive)."""
+        """Run every step that begins before `t_stop` (non-preemptive).
+
+        A scripted kill inside the window splits it: everything beginning
+        before the kill time runs and stays charged (exactly the
+        non-preemptive `advance_to(kill_s)` semantics), then the replica
+        dies - one rule for all four kinds and both policies, so the
+        scalar sim, the vector core, and the engine agree on which steps
+        a fault interrupts."""
+        if self.dead:
+            return self
+        if self._kill_s < t_stop:
+            self._advance_impl(self._kill_s)
+            self.kill(self._kill_s)
+            return self
+        self._advance_impl(t_stop)
+        return self
+
+    def _advance_impl(self, t_stop: float) -> None:
         if self.policy.kind == "continuous":
             if self.mode.kind == "dpd":
                 self._advance_dpd_continuous(t_stop)
@@ -513,7 +583,93 @@ class ReplicaSim:
             self._advance_dpd(t_stop)
         else:
             self._advance_single(t_stop)
-        return self
+
+    def kill(self, at_s: float) -> None:
+        """The replica dies NOW: every unfinished request is aborted with
+        status "killed", scheduler blocks are freed through the ledger,
+        retained prefix-cache nodes are shed (the HBM is gone with the
+        node), and all queues empty. Charges already written stay written
+        - a killed request keeps its partial energy exactly once. The
+        autoscale controller calls this directly; scripted `FaultEvent`s
+        route here via `advance_to`."""
+        if self.dead:
+            return
+        self.dead = True
+        self.dead_s = at_s
+        # clocks cannot run backwards: death at an idle instant moves them
+        # forward to it, death mid-overshoot leaves the overshoot
+        self._t = max(self._t, at_s)
+        self._t_a = max(self._t_a, at_s)
+        self._t_b = max(self._t_b, at_s)
+        if self.policy.kind == "continuous":
+            sched = self._sched_a if self.mode.kind == "dpd" else self._sched
+            if sched is not None:
+                for seq in (list(sched.running) + list(sched.prefilling)
+                            + list(sched.waiting)):
+                    sched.abort(seq)
+                if sched.cache is not None:
+                    sched.cache.shed()
+            if self.mode.kind == "dpd":
+                for seq in self._active_b:
+                    self._ledger_b.free(seq.sid)
+                self._active_b.clear()
+                self._ready_q.purge(lambda item: True)
+        else:
+            self._prefq.clear()
+            self._active.clear()
+            self._i_ready = len(self._ready)
+        for tr in self.traces:
+            if math.isnan(tr.finish_s) and tr.status == "ok":
+                tr.status = "killed"
+
+    def take_victims(self) -> list[Request]:
+        """Remove the killed traces and return their requests for
+        re-routing (the recovery path). The dead replica keeps only the
+        work it resolved - finished and cancelled/timed-out requests -
+        so a fleet merge counts every request exactly once: either here
+        (unrecovered, status "killed") or on the survivor that re-served
+        it. Sorted by (arrival_s, req_id), like `reclaim_pending`."""
+        if not self.dead:
+            raise RuntimeError("take_victims() on a live replica")
+        victims = [tr.req for tr in self.traces if tr.status == "killed"]
+        if not victims:
+            return []
+        self._num_reclaimed += len(victims)
+        self.traces = [tr for tr in self.traces if tr.status != "killed"]
+        self._i_arrival = len(self.traces)
+        victims.sort(key=lambda r: (r.arrival_s, r.req_id))
+        return victims
+
+    # ------------------------------------------------- lifecycle / stalls
+    @staticmethod
+    def _expired(req: Request, t: float) -> Optional[str]:
+        """Abort reason for an unfinished request at scheduling point `t`
+        (cancellation wins when both bounds have passed - the client gave
+        up first in every tie we can order)."""
+        if req.cancel_at_s is not None and req.cancel_at_s <= t:
+            return "cancelled"
+        if req.deadline_s is not None and req.deadline_s <= t:
+            return "timed_out"
+        return None
+
+    def _expire_sched(self, sched: ContinuousScheduler, t: float) -> None:
+        """Abort every expired sequence a continuous scheduler holds."""
+        for seq in (list(sched.waiting) + list(sched.prefilling)
+                    + list(sched.running)):
+            st = self._expired(seq.payload.req, t)
+            if st is not None:
+                sched.abort(seq)
+                seq.payload.status = st
+
+    def _dilate(self, begin_s: float, base_s: float) -> float:
+        """Wall-clock duration of a step beginning at `begin_s`: the one
+        stall code path (FaultInjector.step_time over
+        fault.apply_straggler_model). Identity without an injector or
+        outside stall windows - charges are never dilated, only the
+        clock, so a stalled chip waits without re-computing."""
+        if self._fault is None:
+            return base_s
+        return self._fault.step_time(begin_s, base_s)
 
     def drain(self) -> "ReplicaSim":
         """Run until all submitted requests finish."""
@@ -549,6 +705,15 @@ class ReplicaSim:
                    and traces[self._i_arrival].req.arrival_s <= self._t):
                 self._prefq.append(traces[self._i_arrival])
                 self._i_arrival += 1
+            if self._lifecycle:
+                for tr in [t for t in self._prefq
+                           if self._expired(t.req, self._t)]:
+                    tr.status = self._expired(tr.req, self._t)
+                    self._prefq.remove(tr)
+                for a in [a for a in self._active
+                          if self._expired(a.trace.req, self._t)]:
+                    a.trace.status = self._expired(a.trace.req, self._t)
+                    self._active.remove(a)
             if not self._prefq and not self._active:
                 if self._i_arrival >= len(traces):
                     return                        # fully idle
@@ -569,7 +734,7 @@ class ReplicaSim:
                                 self.new_chip, self.old_chip, tr.req.prompt_len)
         for chip_name, cost, rel_s in sched.charges:
             self._charge(chip_name, cost, self._t + rel_s)
-        self._t += sched.duration_s
+        self._t += self._dilate(self._t, sched.duration_s)
         tr.ttft_s = self._t - tr.req.arrival_s
         tr.first_token_s = tr.last_token_s = self._t
         tr.tokens_out = 1
@@ -587,7 +752,7 @@ class ReplicaSim:
         if mode.kind == "standalone":
             c = decode_cost(self.target_cfg, self.new_chip, b, ctx)
             self._charge(self.new_chip.name, c, self._t)
-            self._t += c.time_s
+            self._t += self._dilate(self._t, c.time_s)
             emitted = {id(a): 1 for a in active}
         else:
             # one speculative round, batched across requests (costs.py owns
@@ -609,7 +774,7 @@ class ReplicaSim:
                 self.link_bytes += ids_b + probs_b
                 self.link_busy_s += (mode.interconnect.transfer_time(ids_b)
                                      + mode.interconnect.transfer_time(probs_b))
-            self._t += round_t
+            self._t += self._dilate(self._t, round_t)
             emitted = {
                 id(a): min(_emit_round_tokens(self.rng, mode.acceptance, k),
                            a.remaining)
@@ -643,13 +808,19 @@ class ReplicaSim:
             tr = traces[self._i_arrival]
             if max(self._t_a, tr.req.arrival_s) >= t_stop:
                 break
+            if self._lifecycle:
+                st = self._expired(tr.req, max(self._t_a, tr.req.arrival_s))
+                if st is not None:
+                    tr.status = st              # expired before prefill began
+                    self._i_arrival += 1
+                    continue
             self._t_a = max(self._t_a, tr.req.arrival_s)
             sched = prefill_charges(mode.kind, cfg, None,
                                     self.new_chip, self.old_chip,
                                     tr.req.prompt_len)
             for chip_name, cost, rel_s in sched.charges:
                 self._charge(chip_name, cost, self._t_a + rel_s)
-            self._t_a += sched.duration_s
+            self._t_a += self._dilate(self._t_a, sched.duration_s)
             tr.ttft_s = self._t_a - tr.req.arrival_s
             tr.first_token_s = tr.last_token_s = self._t_a
             tr.tokens_out = 1
@@ -673,8 +844,18 @@ class ReplicaSim:
                    and self._ready[self._i_ready][0] <= self._t_b
                    and len(self._active) < self.cap):
                 tr = self._ready[self._i_ready][1]
-                self._active.append(_Active(tr, tr.req.prompt_len + 1))
                 self._i_ready += 1
+                if self._lifecycle:
+                    st = self._expired(tr.req, self._t_b)
+                    if st is not None:
+                        tr.status = st       # expired waiting on the link
+                        continue
+                self._active.append(_Active(tr, tr.req.prompt_len + 1))
+            if self._lifecycle:
+                for a in [a for a in self._active
+                          if self._expired(a.trace.req, self._t_b)]:
+                    a.trace.status = self._expired(a.trace.req, self._t_b)
+                    self._active.remove(a)
             if not self._active:
                 if self._i_ready >= len(self._ready):
                     return                        # waiting on pool A / link
@@ -687,7 +868,7 @@ class ReplicaSim:
             ctx = int(np.mean([a.ctx for a in self._active]))
             c = decode_cost(cfg, self.old_chip, b, ctx)
             self._charge(self.old_chip.name, c, self._t_b)
-            self._t_b += c.time_s
+            self._t_b += self._dilate(self._t_b, c.time_s)
             done = []
             for a in self._active:
                 a.trace.tokens_out += 1
@@ -752,8 +933,11 @@ class ReplicaSim:
                                       tr.req.prompt_len,
                                       tr.req.output_len, payload=tr,
                                       priority=class_priority(tr.req.slo_class),
-                                      prefix_keys=keys))
+                                      prefix_keys=keys,
+                                      deadline_s=tr.req.deadline_s))
                 self._i_arrival += 1
+            if self._lifecycle:
+                self._expire_sched(sched, self._t)
             if sched.cache is not None:
                 sched.cache.now_s = self._t       # carbon lookup only
             plan = sched.next_plan()
@@ -773,7 +957,7 @@ class ReplicaSim:
                 self.link_busy_s += (
                     mode.interconnect.transfer_time(hs.link_ids_bytes)
                     + mode.interconnect.transfer_time(hs.link_probs_bytes))
-            self._t += hs.duration_s
+            self._t += self._dilate(self._t, hs.duration_s)
             if sched.cache is not None:
                 sched.cache.now_s = self._t       # publish at step-end time
             for ch in plan.chunks:
@@ -849,8 +1033,11 @@ class ReplicaSim:
                                       tr.req.prompt_len, 1,
                                       payload=tr,
                                       priority=class_priority(tr.req.slo_class),
-                                      prefix_keys=keys))
+                                      prefix_keys=keys,
+                                      deadline_s=tr.req.deadline_s))
                 self._i_arrival += 1
+            if self._lifecycle:
+                self._expire_sched(sched, self._t_a)
             if sched.cache is not None:
                 sched.cache.now_s = self._t_a     # carbon lookup only
             plan = sched.next_plan()
@@ -864,7 +1051,7 @@ class ReplicaSim:
                 continue
             cost = pricer.charges(plan.chunk_specs(), ()).charges[0][1]
             self._charge(self.new_chip.name, cost, self._t_a)
-            self._t_a += cost.time_s
+            self._t_a += self._dilate(self._t_a, cost.time_s)
             if sched.cache is not None:
                 sched.cache.now_s = self._t_a     # publish at step-end time
             for ch in plan.chunks:
@@ -915,6 +1102,18 @@ class ReplicaSim:
         while len(q) or self._active_b:
             if self._t_b >= t_stop:
                 return
+            if self._lifecycle:
+                # queued (shipped-KV) entries hold no pool-B blocks; actives
+                # free theirs through the ledger like any abort
+                for tr, _ in q.purge(
+                        lambda it: self._expired(it[0].req, self._t_b)):
+                    tr.status = self._expired(tr.req, self._t_b)
+                for seq in [s for s in self._active_b
+                            if self._expired(s.payload.req, self._t_b)]:
+                    seq.payload.status = self._expired(seq.payload.req,
+                                                       self._t_b)
+                    ledger.free(seq.sid)
+                    self._active_b.remove(seq)
             while len(self._active_b) < mode.max_batch:
                 entry = q.peek_eligible(self._t_b)
                 if entry is None:
@@ -969,7 +1168,7 @@ class ReplicaSim:
             # aging credit for arrived entries this round kept waiting
             # (round START time: window-invariant - see DpdReadyQueue)
             q.note_round(self._t_b)
-            self._t_b += c.time_s
+            self._t_b += self._dilate(self._t_b, c.time_s)
             done = []
             for seq in stepping:
                 seq.emitted += 1
@@ -996,6 +1195,7 @@ def simulate(
     start_s: float = 0.0,
     batching: "BatchPolicy | str | None" = None,
     ci_trace: Optional[CarbonTrace] = None,
+    faults=None,
 ) -> SimResult:
     """Simulate one engine over `requests` (arrival-sorted, absolute times).
 
@@ -1015,10 +1215,15 @@ def simulate(
     policy enables `prefix_cache` (accounting stays post-hoc in
     `SimResult.account`).
 
+    `faults` is this replica's slice of a `FaultTrace` (an iterable of
+    `FaultEvent`s or a ready `FaultInjector`); kills/preemptions abort the
+    in-flight work with "killed" status, stall windows dilate step times.
+    None (the default) is the bit-exact legacy path.
+
     Thin wrapper: submit everything into a `ReplicaSim` and drain it."""
     sim = ReplicaSim(mode, target_cfg, draft_cfg=draft_cfg, seed=seed,
                      ctx_estimate=ctx_estimate, start_s=start_s,
-                     batching=batching, ci_trace=ci_trace)
+                     batching=batching, ci_trace=ci_trace, faults=faults)
     for r in requests:
         sim.submit(r)
     return sim.drain().result()

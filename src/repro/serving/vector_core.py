@@ -104,6 +104,7 @@ from repro.serving.perfmodel import (
 )
 from repro.serving.simulator import (
     ChipUse,
+    ReplicaSim,
     ReqTrace,
     ServingMode,
     SimResult,
@@ -179,6 +180,7 @@ class VectorFleetSim:
         record_segments: bool = True,
         ctx_estimate: Optional[int] = None,
         batching: "BatchPolicy | str | None" = None,
+        faults: Optional[Sequence] = None,
     ):
         if mode.kind in ("spec", "dsd") and draft_cfg is None:
             raise ValueError(f"{mode.kind} needs a draft model")
@@ -191,6 +193,50 @@ class VectorFleetSim:
             raise ValueError(
                 "the lockstep continuous core does not run prefix_cache "
                 "policies; use the per-replica executor for those")
+
+        # chaos lanes: a lane with scripted faults (kill / preempt /
+        # stall) or lifecycle-bearing requests (cancel_at_s / deadline_s)
+        # delegates to an internal per-lane `ReplicaSim` - fault
+        # interleavings run the scalar event loop, so the kill/expiry
+        # semantics are THE scalar semantics by construction, while every
+        # clean lane keeps the lockstep numpy path (zero-fault fleets are
+        # bit-exact vs the pre-chaos core by construction). `faults` is a
+        # per-lane sequence (None / FaultEvent iterable / FaultInjector).
+        if faults is not None and len(faults) != len(partitions):
+            raise ValueError(
+                f"faults must be per-lane ({len(partitions)} lanes, got "
+                f"{len(faults)})")
+        self._chaos: dict[int, ReplicaSim] = {}
+        chaos_lanes = set()
+        for r, part in enumerate(partitions):
+            lane_faults = faults[r] if faults is not None else None
+            has_faults = lane_faults is not None and (
+                not hasattr(lane_faults, "__len__") or len(lane_faults))
+            lifecycle = any(req.cancel_at_s is not None
+                            or req.deadline_s is not None for req in part)
+            if has_faults or lifecycle:
+                chaos_lanes.add(r)
+        if chaos_lanes:
+            if rng_mode == "batched":
+                raise ValueError(
+                    "chaos lanes (faults / request lifecycle bounds) need "
+                    "rng_mode='sequential': the batched fleet rng draws "
+                    "across lanes and cannot reproduce per-lane schedules")
+            lane_seeds = list(seeds) if seeds is not None else \
+                [0] * len(partitions)
+            for r in sorted(chaos_lanes):
+                sim = ReplicaSim(
+                    mode, target_cfg, draft_cfg=draft_cfg,
+                    seed=lane_seeds[r], ctx_estimate=ctx_estimate,
+                    start_s=start_s, batching=self.policy,
+                    faults=faults[r] if faults is not None else None)
+                for req in partitions[r]:
+                    sim.submit(req)
+                self._chaos[r] = sim
+            # delegated lanes run empty in the lockstep arrays; their
+            # rows are stitched back in results()/stats()/pending
+            partitions = [() if r in chaos_lanes else p
+                          for r, p in enumerate(partitions)]
         self.mode = mode
         self.target_cfg = target_cfg
         self.draft_cfg = draft_cfg
@@ -468,6 +514,8 @@ class VectorFleetSim:
             self._advance_dpd(t_stop)
         else:
             self._advance_single(t_stop)
+        for sim in self._chaos.values():
+            sim.advance_to(t_stop)
         return self
 
     def drain(self) -> "VectorFleetSim":
@@ -1461,6 +1509,23 @@ class VectorFleetSim:
                 "free": self._nb_b - self.used_b,
                 "num_blocks": self._nb_b,
             }
+        # chaos rows come from the delegated lane's REAL ledger (built by
+        # the same batching.py builder, so num_blocks agrees); a lazily
+        # unbuilt scheduler means nothing was ever admitted - all free
+        for r, sim in self._chaos.items():
+            sched = sim._sched_a if self.mode.kind == "dpd" else sim._sched
+            if sched is not None:
+                led = sched.ledger
+                out["owned"][r] = led.used_blocks
+                out["shared"][r] = led.shared_blocks
+                out["retained"][r] = led.retained_blocks
+                out["free"][r] = (led.num_blocks - led.used_blocks
+                                  - led.shared_blocks - led.retained_blocks)
+            if self.mode.kind == "dpd" and sim._ledger_b is not None:
+                led_b = sim._ledger_b
+                out["pool_b"]["owned"][r] = led_b.used_blocks
+                out["pool_b"]["free"][r] = \
+                    led_b.num_blocks - led_b.used_blocks
         return out
 
     # ------------------------------------------------------------ output
@@ -1480,8 +1545,11 @@ class VectorFleetSim:
 
     @property
     def pending(self) -> int:
-        """Requests submitted but not yet finished (all lanes)."""
-        return int(np.isnan(self.finish).sum())
+        """Requests submitted but not yet finished (all lanes); chaos
+        lanes count through their scalar sim (aborted requests are
+        resolved, not pending - ReplicaSim.pending)."""
+        n = int(np.isnan(self.finish).sum())
+        return n + sum(sim.pending for sim in self._chaos.values())
 
     @property
     def idle(self) -> bool:
@@ -1531,6 +1599,8 @@ class VectorFleetSim:
                 link_bytes=float(self.link_bytes[r]),
                 link_busy_s=float(self.link_busy[r]),
                 start_s=self.start_s))
+        for r, sim in self._chaos.items():
+            out[r] = sim.result()            # delegated lane, in place
         return out
 
     def merged(self) -> SimResult:
@@ -1543,30 +1613,68 @@ class VectorFleetSim:
         finished after a drain, emitted exactly its output_len tokens, and
         per-chip busy seconds are non-negative and finite."""
         finished = ~np.isnan(self.finish)
-        ttft = self.ttft[~np.isnan(self.ttft)]
+        ttft = self.ttft[~np.isnan(self.ttft)].tolist()
+        prio = self.prio.tolist()
+        fin_mask = finished.tolist()
+        fin_max = [float(np.nanmax(self.finish))] if finished.any() else []
+        n_req = self.nflat
+        n_fin = int(finished.sum())
+        tok = int(self.tok.sum())
+        exp = int(self.olen.sum())
+        busy = {n: float(self.busy[:, i].sum())
+                for i, n in enumerate(self.chip_names)}
+        energy = {n: float(self.energy[:, i].sum())
+                  for i, n in enumerate(self.chip_names)}
+        link = float(self.link_bytes.sum())
+        status = {"ok": 0, "cancelled": 0, "timed_out": 0, "killed": 0}
+        chaos_ttft = []
+        # chaos lanes (delegated scalar sims) fold into the same totals;
+        # their aborted requests land in `status`, never in finished
+        for sim in self._chaos.values():
+            n_req += len(sim.traces)
+            for tr in sim.traces:
+                status[tr.status] += 1
+                prio.append(class_priority(tr.req.slo_class))
+                chaos_ttft.append(tr.ttft_s)
+                done = not math.isnan(tr.finish_s) and tr.status == "ok"
+                fin_mask.append(done)
+                n_fin += done
+                tok += tr.tokens_out
+                exp += tr.req.output_len
+                if not math.isnan(tr.ttft_s):
+                    ttft.append(tr.ttft_s)
+                if done:
+                    fin_max.append(tr.finish_s)
+            for name, use in sim.use.items():
+                busy[name] = busy.get(name, 0.0) + use.busy_s
+                energy[name] = energy.get(name, 0.0) + use.energy_j
+            link += sim.link_bytes
+        status["ok"] = n_req - sum(status.values()) + status["ok"]
         out = {
             "n_replicas": self.R,
-            "n_requests": self.nflat,
-            "finished": int(finished.sum()),
-            "total_tokens": int(self.tok.sum()),
-            "expected_tokens": int(self.olen.sum()),
-            "mean_ttft_s": float(ttft.mean()) if len(ttft) else math.nan,
-            "max_finish_s": float(np.nanmax(self.finish)) if finished.any()
-            else math.nan,
-            "busy_s": {n: float(self.busy[:, i].sum())
-                       for i, n in enumerate(self.chip_names)},
-            "energy_j": {n: float(self.energy[:, i].sum())
-                         for i, n in enumerate(self.chip_names)},
-            "link_bytes": float(self.link_bytes.sum()),
+            "n_requests": n_req,
+            "finished": n_fin,
+            "total_tokens": tok,
+            "expected_tokens": exp,
+            "mean_ttft_s": float(np.mean(ttft)) if ttft else math.nan,
+            "max_finish_s": max(fin_max) if fin_max else math.nan,
+            "busy_s": busy,
+            "energy_j": energy,
+            "link_bytes": link,
+            "status": status,
         }
+        prio_a = np.asarray(prio, dtype=np.int64)
+        fin_a = np.asarray(fin_mask, dtype=bool)
+        ttft_all = np.concatenate([self.ttft, np.asarray(chaos_ttft)]) \
+            if chaos_ttft else self.ttft
         per_class = {}
-        for p in np.unique(self.prio).tolist():
-            sel = self.prio == p
-            done = finished & sel
+        for p in np.unique(prio_a).tolist():
+            sel = prio_a == p
+            done = fin_a & sel
             per_class[int(p)] = {
                 "n": int(sel.sum()),
                 "finished": int(done.sum()),
-                "mean_ttft_s": float(self.ttft[done].mean())
+                "mean_ttft_s": float(ttft_all[done].mean())
                 if done.any() else math.nan,
             }
         out["per_class"] = per_class

@@ -23,6 +23,8 @@ from typing import Callable, Iterator, Optional
 
 import numpy as np
 
+from repro.distributed.fault import FaultEvent, FaultTrace
+
 Z75 = 0.6744897501960817  # Phi^-1(0.75)
 
 
@@ -128,6 +130,15 @@ class Request:
     session_id: Optional[int] = None
     prefix_group: Optional[int] = None
     prefix_share_len: int = 0
+    # Lifecycle bounds (both absolute times; None = unbounded, the default,
+    # which leaves every legacy schedule bit-identical):
+    #   deadline_s   the request must FINISH by this time or it times out;
+    #                a relaxed-class request with a deadline is a
+    #                run-anytime-before-T job the planner may defer.
+    #   cancel_at_s  client cancellation - the request is aborted at the
+    #                first scheduling point at/after this time.
+    deadline_s: Optional[float] = None
+    cancel_at_s: Optional[float] = None
 
     def __post_init__(self):
         if self.slo_class not in SLO_CLASSES:
@@ -138,6 +149,12 @@ class Request:
                 f"negative prefix_share_len: {self.prefix_share_len}")
         if self.prefix_group is not None and self.prefix_share_len == 0:
             raise ValueError("prefix_group set but prefix_share_len is 0")
+        if self.deadline_s is not None and self.deadline_s <= self.arrival_s:
+            raise ValueError(
+                f"deadline_s {self.deadline_s} must exceed arrival_s")
+        if self.cancel_at_s is not None and self.cancel_at_s < self.arrival_s:
+            raise ValueError(
+                f"cancel_at_s {self.cancel_at_s} precedes arrival_s")
 
     @property
     def priority(self) -> int:
@@ -361,3 +378,84 @@ def sample_piecewise_requests(
             reqs.append(Request(i, t, pl, ol, slo_class=cls_fn(rng)))
             i += 1
     return reqs
+
+
+def sample_fault_trace(
+    duration_s: float,
+    num_replicas: int,
+    seed: int = 0,
+    kill_rate_per_hour: float = 0.0,
+    preempt_rate_per_hour: float = 0.0,
+    stall_rate_per_hour: float = 0.0,
+    notice_s: float = 30.0,
+    stall_window_s: float = 20.0,
+    p_straggle: float = 0.25,
+) -> FaultTrace:
+    """Poisson fault arrivals per kind, each striking a uniform replica.
+
+    Runs on a DEDICATED rng stream (the `_class_fn`/session pattern):
+    overlaying a fault trace never perturbs the arrival/size/class streams
+    of the same seed, so a chaos run is the SAME physical workload as its
+    fault-free twin - the controlled comparison the chaos benchmarks and
+    the zero-fault replay test rely on."""
+    if duration_s <= 0 or num_replicas < 1:
+        raise ValueError(f"bad fault trace shape: {duration_s=} {num_replicas=}")
+    rng = np.random.default_rng((seed, 0xFA_017))  # fault-only stream
+    events: list[FaultEvent] = []
+    for kind, rate in (("kill", kill_rate_per_hour),
+                       ("preempt", preempt_rate_per_hour),
+                       ("stall", stall_rate_per_hour)):
+        if rate <= 0:
+            continue
+        lam = rate / 3600.0
+        t = 0.0
+        while True:
+            t += rng.exponential(1.0 / lam)
+            if t >= duration_s:
+                break
+            rep = int(rng.integers(num_replicas))
+            if kind == "kill":
+                events.append(FaultEvent(t, "kill", replica=rep))
+            elif kind == "preempt":
+                events.append(FaultEvent(t, "preempt", replica=rep,
+                                         notice_s=notice_s))
+            else:
+                events.append(FaultEvent(t, "stall", replica=rep,
+                                         duration_s=stall_window_s,
+                                         p_straggle=p_straggle))
+    return FaultTrace(tuple(events))
+
+
+def with_cancellations(
+    requests: list[Request],
+    seed: int = 0,
+    cancel_frac: float = 0.0,
+    deadline_frac: float = 0.0,
+    cancel_after_s: tuple[float, float] = (0.5, 30.0),
+    deadline_slack_s: tuple[float, float] = (10.0, 120.0),
+    deadline_classes: tuple[str, ...] = ("relaxed",),
+) -> list[Request]:
+    """Overlay cancellation / deadline lifecycles on a sampled workload.
+
+    A `cancel_frac` of requests gains `cancel_at_s` = arrival + U(range);
+    a `deadline_frac` of requests whose class is in `deadline_classes`
+    gains `deadline_s` = arrival + U(range) (run-anytime-before-T jobs).
+    Dedicated rng stream; zero fractions return the input list unchanged."""
+    if not (0.0 <= cancel_frac <= 1.0 and 0.0 <= deadline_frac <= 1.0):
+        raise ValueError(f"bad fractions: {cancel_frac=} {deadline_frac=}")
+    if cancel_frac == 0.0 and deadline_frac == 0.0:
+        return list(requests)
+    rng = np.random.default_rng((seed, 0xCA_2CE1))  # lifecycle-only stream
+    out: list[Request] = []
+    for r in requests:
+        cancel = r.cancel_at_s
+        deadline = r.deadline_s
+        if cancel_frac > 0 and rng.random() < cancel_frac:
+            cancel = r.arrival_s + rng.uniform(*cancel_after_s)
+        elif (deadline_frac > 0 and r.slo_class in deadline_classes
+              and rng.random() < deadline_frac):
+            deadline = r.arrival_s + rng.uniform(*deadline_slack_s)
+        if cancel is not r.cancel_at_s or deadline is not r.deadline_s:
+            r = dataclasses.replace(r, cancel_at_s=cancel, deadline_s=deadline)
+        out.append(r)
+    return out

@@ -1,0 +1,338 @@
+"""Fault-interleaving differential harness.
+
+Three parity surfaces, all under an IDENTICAL fault script:
+
+  vector <-> scalar   `VectorFleetSim` lanes with faults (or lifecycle-
+                      bearing requests) must equal a per-lane
+                      `ReplicaSim` with `==` - traces, statuses,
+                      per-chip busy/energy/segments, link accounting -
+                      extending test_vector_continuous.py's ==-not-
+                      approx discipline to kills, preemption notices,
+                      stall windows, cancellations and deadlines.
+  fleet cores         `simulate_fleet(core="vector")` equals
+                      `core="replica"` under the same `FaultTrace`.
+  engine <-> sim      the real-compute `ServingEngine` and the analytic
+                      sim abort the SAME requests with the SAME statuses
+                      and token counts when killed/cancelled at the same
+                      instants (times are modeled vs measured, so the
+                      parity claim is the schedule structure, not the
+                      float clock).
+
+Zero-fault replay: passing `faults=None`, `[]`, or `[None]*R` must all
+produce bit-identical schedules - the chaos layer is provably inert when
+unused, so the PR-9 golden schedules (tests/test_parity_golden.py) are
+replayed exactly.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.disagg import standard_catalog
+from repro.distributed.fault import FaultEvent, FaultTrace
+from repro.serving.fleet import FleetSpec, ReplicaGroup, simulate_fleet
+from repro.serving.simulator import ReplicaSim
+from repro.serving.vector_core import VectorFleetSim
+from repro.serving.workload import (
+    DATASETS,
+    sample_requests,
+    with_cancellations,
+)
+
+from tests.test_vector_continuous import _clamp
+
+DS = DATASETS["sharegpt"]
+CATALOG = standard_catalog()
+BY_NAME = {c.name: c for c in CATALOG}
+KINDS = ["standalone", "spec-llama-1b", "dpd-t4", "dsd-t4-llama-1b"]
+MIX = {"tight": 0.25, "standard": 0.5, "relaxed": 0.25}
+
+# one lane per fault flavor: hard kill / transient stall / spot preempt
+FAULTS = [
+    [FaultEvent(at_s=4.0, kind="kill")],
+    [FaultEvent(at_s=1.0, kind="stall", duration_s=6.0, p_straggle=1.0,
+                straggle_factor=8.0)],
+    [FaultEvent(at_s=3.0, kind="preempt", notice_s=2.0)],
+]
+
+
+def _chaos_parts(n=3, qps=1.5, dur=45.0, seed=3):
+    reqs = _clamp(sample_requests(DS, qps=qps, duration_s=dur, seed=seed,
+                                  class_mix=MIX))
+    reqs = with_cancellations(reqs, seed=seed, cancel_frac=0.15,
+                              deadline_frac=0.25,
+                              cancel_after_s=(0.05, 5.0),
+                              deadline_slack_s=(0.1, 10.0),
+                              deadline_classes=("relaxed", "standard"))
+    return [reqs[i::n] for i in range(n)], reqs
+
+
+def _eq(a, b):
+    """Bitwise float equality, nan == nan (aborted requests have nan
+    ttft/finish on BOTH executors - that must match too)."""
+    return a == b or (math.isnan(a) and math.isnan(b))
+
+
+def _assert_equal(a, b):
+    """test_vector_continuous._assert_equal extended with nan-aware time
+    comparison and status parity - still `==`, never approx."""
+    assert len(a.traces) == len(b.traces)
+    for ta, tb in zip(a.traces, b.traces):
+        assert ta.req.req_id == tb.req.req_id
+        assert ta.status == tb.status
+        assert ta.tokens_out == tb.tokens_out
+        assert _eq(ta.ttft_s, tb.ttft_s)
+        assert _eq(ta.finish_s, tb.finish_s)
+    assert a.use.keys() == b.use.keys()
+    for name in a.use:
+        assert a.use[name].busy_s == b.use[name].busy_s
+        assert a.use[name].energy_j == b.use[name].energy_j
+        assert a.use[name].segments == b.use[name].segments
+    assert a.link_bytes == b.link_bytes
+    assert a.link_busy_s == b.link_busy_s
+
+
+def _scalar(cfg, part, seed, policy, faults):
+    sim = ReplicaSim(cfg.mode, cfg.target, draft_cfg=cfg.draft,
+                     seed=seed, batching=policy, faults=faults)
+    for r in sorted(part, key=lambda r: (r.arrival_s, r.req_id)):
+        sim.submit(r)
+    return sim.drain().result()
+
+
+@pytest.mark.parametrize("policy", ["serialized", "continuous"])
+@pytest.mark.parametrize("name", KINDS)
+def test_vector_matches_scalar_under_faults(name, policy):
+    cfg = BY_NAME[name]
+    parts, reqs = _chaos_parts()
+    vf = VectorFleetSim(cfg.mode, cfg.target, parts, draft_cfg=cfg.draft,
+                        seeds=[7, 8, 9], batching=policy, faults=FAULTS)
+    vres = vf.drain().results()
+    killed = 0
+    for lane in range(3):
+        sres = _scalar(cfg, parts[lane], 7 + lane, policy, FAULTS[lane])
+        _assert_equal(vres[lane], sres)
+        assert [t.status for t in vres[lane].traces] \
+            == [t.status for t in sres.traces]
+        killed += sum(t.status == "killed" for t in sres.traces)
+    assert killed >= 1, "fault script produced no kills - test is inert"
+    # merged fleet view accounts every request exactly once
+    sc = vf.merged().status_counts()
+    assert sum(sc.values()) == len(reqs)
+    assert sc["killed"] == killed
+    st = vf.stats()
+    assert st["n_requests"] == len(reqs)
+    assert st["status"]["killed"] == killed
+
+
+@pytest.mark.parametrize("policy", ["serialized", "continuous"])
+@pytest.mark.parametrize("name", KINDS)
+def test_zero_fault_replay_bit_exact(name, policy):
+    """faults=None vs [] vs [None]*R: the chaos layer must be inert -
+    bit-identical traces and charges, so pre-PR schedules replay."""
+    cfg = BY_NAME[name]
+    reqs = _clamp(sample_requests(DS, qps=1.5, duration_s=30.0, seed=5,
+                                  class_mix=MIX))
+    parts = [reqs[0::2], reqs[1::2]]
+    base = _scalar(cfg, parts[0], 7, policy, None)
+    _assert_equal(base, _scalar(cfg, parts[0], 7, policy, []))
+    v0 = VectorFleetSim(cfg.mode, cfg.target, parts, draft_cfg=cfg.draft,
+                        seeds=[7, 8], batching=policy).drain()
+    v1 = VectorFleetSim(cfg.mode, cfg.target, parts, draft_cfg=cfg.draft,
+                        seeds=[7, 8], batching=policy,
+                        faults=[None, None]).drain()
+    for a, b in zip(v0.results(), v1.results()):
+        _assert_equal(a, b)
+    _assert_equal(v0.results()[0], base)
+
+
+@pytest.mark.parametrize("name", ["standalone", "dpd-t4"])
+def test_fleet_cores_agree_under_fault_trace(name):
+    cfg = BY_NAME[name]
+    reqs = _clamp(sample_requests(DS, qps=2.0, duration_s=30.0, seed=6,
+                                  class_mix=MIX))
+    fleet = FleetSpec((ReplicaGroup(cfg, 3),))
+    trace = FaultTrace((FaultEvent(at_s=3.0, kind="kill", replica=1),
+                        FaultEvent(at_s=5.0, kind="preempt", replica=2,
+                                   notice_s=2.0)))
+    rv = simulate_fleet(fleet, reqs, seed=0, batching="continuous",
+                        core="vector", faults=trace)
+    rr = simulate_fleet(fleet, reqs, seed=0, batching="continuous",
+                        core="replica", faults=trace)
+    assert rv.merged.status_counts() == rr.merged.status_counts()
+    assert sum(rv.merged.status_counts().values()) == len(reqs)
+    assert rv.merged.status_counts()["killed"] >= 1
+    for ta, tb in zip(rv.merged.traces, rr.merged.traces):
+        assert ta.req.req_id == tb.req.req_id
+        assert ta.status == tb.status
+        assert ta.tokens_out == tb.tokens_out
+        assert ta.finish_s == tb.finish_s or (
+            math.isnan(ta.finish_s) and math.isnan(tb.finish_s))
+
+
+def test_batched_rng_rejects_chaos_lanes():
+    """rng_mode='batched' draws fleet-level rng across lanes, which a
+    delegated per-lane scalar sim cannot reproduce - must refuse loudly
+    instead of silently diverging."""
+    cfg = BY_NAME["standalone"]
+    parts, _ = _chaos_parts()
+    with pytest.raises(ValueError, match="batched"):
+        VectorFleetSim(cfg.mode, cfg.target, parts, seeds=[7, 8, 9],
+                       batching="continuous", rng_mode="batched",
+                       faults=FAULTS)
+
+
+# ---------------------------------------------------------------------------
+# engine <-> sim (real compute; slow lane)
+# ---------------------------------------------------------------------------
+PL, OUT, N = 12, 6, 3
+POOL_BLOCKS = 512
+MAX_BATCH = 8
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    import jax
+    from repro.configs import get_reduced_config
+    from repro.models import init_params
+
+    cfg = get_reduced_config("yi-6b", num_layers=2)
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _run_engine_sim(cfg, params, kind, old_chip, gap_s, batching, faults,
+                    lifecycles=()):
+    from repro.serving.batching import BatchPolicy
+    from repro.serving.engine import ServingEngine
+    from repro.serving.simulator import ServingMode, simulate
+    from repro.serving.workload import Request
+
+    life = dict(lifecycles)
+    draft = dict(draft_cfg=cfg, draft_params=params) \
+        if kind in ("spec", "dsd") else {}
+    eng = ServingEngine(cfg, params, kind=kind, old_chip=old_chip,
+                        temperature=0.0, seed=1, max_batch=MAX_BATCH,
+                        pool_blocks=POOL_BLOCKS, batching=batching,
+                        faults=faults, **draft)
+    for i in range(N):
+        eng.submit((np.arange(PL) + i) % cfg.vocab_size,
+                   max_new_tokens=OUT, arrival_s=i * gap_s,
+                   **life.get(i, {}))
+    eng.run_until_idle()
+
+    reqs = [Request(i, i * gap_s, PL, OUT, **life.get(i, {}))
+            for i in range(N)]
+    mode = ServingMode(kind, kind, "a100", old_chip,
+                       spec_k=4, acceptance=1.0, max_batch=MAX_BATCH)
+    sim_batching = BatchPolicy(num_blocks=POOL_BLOCKS) \
+        if batching == "continuous" else batching
+    res = simulate(mode, cfg, reqs,
+                   draft_cfg=cfg if kind in ("spec", "dsd") else None,
+                   seed=1, batching=sim_batching, faults=faults)
+    return eng, res
+
+
+def _engine_statuses(eng):
+    return {r.req_id: (r.status, len(r.out_tokens))
+            for r in eng.finished + eng.aborted}
+
+
+def _sim_statuses(res):
+    return {t.req.req_id: (t.status, t.tokens_out) for t in res.traces}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("batching", ["serialized", "continuous"])
+@pytest.mark.parametrize("kind,old_chip,gap_s", [
+    ("standalone", None, 0.0),
+    ("spec", None, 0.0),
+    ("dsd", "t4", 0.0),
+    ("dpd", "t4", 1.0),
+])
+def test_engine_and_sim_abort_identically_on_kill(tiny, kind, old_chip,
+                                                  gap_s, batching):
+    """A kill right after the first step begins: both executors complete
+    exactly the work already started (non-preemptive kill splitting),
+    then abort the same requests - and leave their pools/ledgers clean."""
+    cfg, params = tiny
+    faults = [FaultEvent(at_s=1e-6, kind="kill")]
+    eng, res = _run_engine_sim(cfg, params, kind, old_chip, gap_s,
+                               batching, faults)
+    assert eng.dead
+    assert _engine_statuses(eng) == _sim_statuses(res)
+    assert sum(eng.status_counts().values()) == N
+    assert eng.status_counts() == res.status_counts()
+    assert eng.status_counts()["killed"] >= 1
+    # engine pools fully released
+    assert all(not eng.pool.has(r.req_id) for r in eng.aborted)
+    for sched in (eng._sched, eng._sched_a):
+        if sched is not None:
+            assert sched.ledger.free_blocks == sched.ledger.num_blocks
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind,old_chip,gap_s", [
+    ("standalone", None, 0.0),
+    ("spec", None, 0.0),
+    ("dsd", "t4", 0.0),
+    ("dpd", "t4", 1.0),
+])
+def test_engine_and_sim_agree_on_cancel_and_deadline(tiny, kind, old_chip,
+                                                     gap_s):
+    """Request 1 cancelled at arrival + 1e-4, request 2 with an impossible
+    deadline: both executors abort the same two and finish the third with
+    the full token budget."""
+    cfg, params = tiny
+    life = {1: {"cancel_at_s": 1 * gap_s + 1e-4},
+            2: {"deadline_s": 2 * gap_s + 1e-4}}
+    eng, res = _run_engine_sim(cfg, params, kind, old_chip, gap_s,
+                               "continuous", None, lifecycles=life)
+    assert _engine_statuses(eng) == _sim_statuses(res)
+    counts = eng.status_counts()
+    assert counts == res.status_counts()
+    assert counts["cancelled"] == 1 and counts["timed_out"] == 1
+    assert counts["ok"] == N - 2
+    assert all(len(r.out_tokens) == OUT for r in eng.finished)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("batching", ["serialized", "continuous"])
+def test_engine_zero_fault_replay_bit_exact(tiny, batching):
+    """Engine with faults=None vs faults=[]: bit-identical tokens, times
+    and clock - the chaos plumbing adds nothing to a healthy run."""
+    cfg, params = tiny
+    e0, _ = _run_engine_sim(cfg, params, "standalone", None, 0.0,
+                            batching, None)
+    e1, _ = _run_engine_sim(cfg, params, "standalone", None, 0.0,
+                            batching, [])
+    fp0 = [(r.req_id, tuple(r.out_tokens), r.last_token_s, r.status)
+           for r in sorted(e0.finished, key=lambda r: r.req_id)]
+    fp1 = [(r.req_id, tuple(r.out_tokens), r.last_token_s, r.status)
+           for r in sorted(e1.finished, key=lambda r: r.req_id)]
+    assert fp0 == fp1
+    assert e0.clock == e1.clock
+    for name in e0.use:
+        assert e0.use[name].energy_j == e1.use[name].energy_j
+
+
+@pytest.mark.slow
+def test_engine_and_sim_dilate_stall_without_double_charge(tiny):
+    """A saturating stall window slows both executors' clocks but must
+    not change total energy (time dilation is not extra work). Stall rng
+    draws depend on step counts, so the cross-executor comparison is
+    token/status structure, not times."""
+    cfg, params = tiny
+    stall = [FaultEvent(at_s=0.0, kind="stall", duration_s=1e6,
+                        p_straggle=1.0, straggle_factor=10.0)]
+    e0, r0 = _run_engine_sim(cfg, params, "standalone", None, 0.0,
+                             "continuous", None)
+    es, rs = _run_engine_sim(cfg, params, "standalone", None, 0.0,
+                             "continuous", stall)
+    assert es.clock > e0.clock
+    assert rs.duration_s > r0.duration_s
+    tot = lambda use: sum(u.energy_j for u in use.values())
+    assert tot(es.use) == pytest.approx(tot(e0.use), rel=1e-9)
+    assert tot(rs.use) == pytest.approx(tot(r0.use), rel=1e-9)
+    assert _engine_statuses(es) == _engine_statuses(e0)
+    assert _sim_statuses(rs) == _sim_statuses(r0)

@@ -1,0 +1,230 @@
+"""Property suite for chaos-hardened serving: seeded fault/cancel
+interleavings against the analytic executor (`ReplicaSim`), the vector
+core, and the autoscale controller.
+
+Each interleaving samples a workload, overlays cancellations/deadlines
+(`with_cancellations`) and a Poisson fault script (`sample_fault_trace`:
+kills, spot preemptions with notice, transient stalls), then advances
+the sim in windows checking after EVERY window:
+
+  - conservation: physical_free + owned + shared + retained ==
+    num_blocks on every pool ledger (dpd pool B included)
+  - prefix-cache refcounts never go negative and its node populations
+    agree with the ledger counters
+  - cumulative busy time and energy (hence carbon at any fixed CI) are
+    monotone in time - a kill can stop charges but never un-charge
+
+and at the end of the run:
+
+  - every submitted request is accounted EXACTLY once, with exactly one
+    terminal status (ok | cancelled | timed_out | killed) - no request
+    is both completed and aborted
+  - a dead replica's ledgers are fully free (blocks freed, retained
+    prefix state shed) and it charged no more energy than its
+    fault-free twin
+
+The generators are plain seeded numpy rngs (the `test_prefix_property.py`
+pattern) and run >= 200 distinct interleavings across the four serving
+kinds x both batching policies.
+"""
+import math
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.disagg import standard_catalog
+from repro.distributed.fault import FaultEvent, FaultTrace
+from repro.serving.simulator import ReplicaSim
+from repro.serving.vector_core import VectorFleetSim
+from repro.serving.workload import (
+    DATASETS,
+    sample_fault_trace,
+    sample_requests,
+    with_cancellations,
+)
+
+DS = DATASETS["sharegpt"]
+CATALOG = standard_catalog()
+BY_NAME = {c.name: c for c in CATALOG}
+KINDS = ["standalone", "spec-llama-1b", "dpd-t4", "dsd-t4-llama-1b"]
+POLICIES = ["serialized", "continuous"]
+MIX = {"tight": 0.25, "standard": 0.5, "relaxed": 0.25}
+SEEDS_PER_CASE = 25      # 4 kinds x 2 policies x 25 = 200 interleavings
+STATUSES = ("ok", "cancelled", "timed_out", "killed")
+
+
+def _clamp(reqs, pcap=400, ocap=48):
+    return [dataclasses.replace(r, prompt_len=min(r.prompt_len, pcap),
+                                output_len=min(r.output_len, ocap))
+            for r in reqs]
+
+
+def _workload(seed):
+    """One seeded chaos scenario: workload + lifecycle overlay + faults."""
+    rng = np.random.default_rng((seed, 0xC4A05))
+    qps = float(rng.uniform(2.0, 5.0))
+    dur = float(rng.uniform(6.0, 14.0))
+    reqs = _clamp(sample_requests(DS, qps, dur, seed=seed, class_mix=MIX))
+    reqs = with_cancellations(
+        reqs, seed=seed,
+        cancel_frac=float(rng.uniform(0.0, 0.3)),
+        deadline_frac=float(rng.uniform(0.0, 0.4)),
+        cancel_after_s=(0.01, 2.0), deadline_slack_s=(0.05, 4.0),
+        deadline_classes=("relaxed", "standard"))
+    # fault mix: roughly one event per run, kind chosen by the seed
+    faults = sample_fault_trace(
+        dur, 1, seed=seed,
+        kill_rate_per_hour=float(rng.uniform(0.0, 600.0)),
+        preempt_rate_per_hour=float(rng.uniform(0.0, 400.0)),
+        stall_rate_per_hour=float(rng.uniform(0.0, 400.0)),
+        notice_s=float(rng.uniform(0.5, 3.0)), stall_window_s=3.0)
+    return reqs, faults, dur
+
+
+def _check_ledgers(sim: ReplicaSim) -> None:
+    for sched in (sim._sched, sim._sched_a):
+        if sched is None:
+            continue
+        led = sched.ledger
+        assert led.physical_free >= 0
+        assert (led.physical_free + led.used_blocks + led.shared_blocks
+                + led.retained_blocks == led.num_blocks), "conservation broke"
+        cache = sched.cache
+        if cache is not None:
+            assert all(n.refs >= 0 for n in cache._nodes.values())
+            active = sum(1 for n in cache._nodes.values() if n.refs > 0)
+            idle = sum(1 for n in cache._nodes.values() if n.refs == 0)
+            assert active == led.shared_blocks
+            assert idle == led.retained_blocks
+    if sim._ledger_b is not None:
+        led = sim._ledger_b
+        assert led.physical_free >= 0
+        assert (led.physical_free + led.used_blocks + led.shared_blocks
+                + led.retained_blocks == led.num_blocks)
+
+
+def _totals(sim: ReplicaSim) -> tuple[float, float]:
+    res = sim.result()
+    return (sum(u.busy_s for u in res.use.values()),
+            sum(u.energy_j for u in res.use.values()))
+
+
+def _run_interleaving(name: str, policy: str, seed: int) -> None:
+    cfg = BY_NAME[name]
+    reqs, faults, dur = _workload(seed)
+
+    def build(fs):
+        sim = ReplicaSim(cfg.mode, cfg.target, draft_cfg=cfg.draft,
+                         seed=seed, batching=policy, faults=fs)
+        for r in reqs:
+            sim.submit(r)
+        return sim
+
+    sim = build(faults)
+    busy0 = energy0 = 0.0
+    t, step = 0.0, max(dur / 12.0, 0.25)
+    for _ in range(200):
+        if not sim.pending:
+            break
+        t += step
+        sim.advance_to(t)
+        _check_ledgers(sim)
+        busy, energy = _totals(sim)
+        assert busy >= busy0 - 1e-12 and energy >= energy0 - 1e-9, \
+            "charges must be monotone in time"
+        busy0, energy0 = busy, energy
+    sim.drain()
+    _check_ledgers(sim)
+
+    res = sim.result()
+    # exactly-once accounting: one trace per submitted request, each with
+    # a single terminal status; completed XOR aborted
+    assert sorted(tr.req.req_id for tr in res.traces) \
+        == sorted(r.req_id for r in reqs)
+    counts = res.status_counts()
+    assert sum(counts.values()) == len(reqs)
+    assert set(counts) == set(STATUSES)
+    for tr in res.traces:
+        assert tr.status in STATUSES
+        assert (tr.status == "ok") == (not math.isnan(tr.finish_s)), \
+            "request both completed and aborted"
+        assert 0 <= tr.tokens_out <= tr.req.output_len
+    if sim.dead:
+        # dead replica: every block freed, retained prefix state shed
+        for sched in (sim._sched, sim._sched_a):
+            if sched is not None:
+                assert sched.ledger.free_blocks == sched.ledger.num_blocks
+                assert sched.ledger.retained_blocks == 0
+        if sim._ledger_b is not None:
+            assert sim._ledger_b.free_blocks == sim._ledger_b.num_blocks
+        # partial work stays charged, but never more than the healthy twin
+        healthy = build(None).drain().result()
+        assert sum(u.energy_j for u in res.use.values()) <= \
+            sum(u.energy_j for u in healthy.use.values()) + 1e-9
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("name", KINDS)
+def test_chaos_interleavings(name, policy):
+    for seed in range(SEEDS_PER_CASE):
+        _run_interleaving(name, policy, seed)
+
+
+@pytest.mark.parametrize("name", ["standalone", "dpd-t4"])
+def test_vector_core_ledger_conserved_under_kills(name):
+    """Chaos lanes delegate to scalar sims; `ledger_populations` must
+    still report conserved pools for every lane after mid-run kills."""
+    cfg = BY_NAME[name]
+    reqs = _clamp(sample_requests(DS, 3.0, 12.0, seed=9, class_mix=MIX))
+    parts = [reqs[0::3], reqs[1::3], reqs[2::3]]
+    faults = [[FaultEvent(at_s=2.0, kind="kill")], None,
+              [FaultEvent(at_s=1.0, kind="preempt", notice_s=2.0)]]
+    vf = VectorFleetSim(cfg.mode, cfg.target, parts, draft_cfg=cfg.draft,
+                        seeds=[5, 6, 7], batching="continuous",
+                        faults=faults)
+    t = 0.0
+    while vf.pending and t < 600.0:
+        t += 1.0
+        vf.advance_to(t)
+        pops = vf.ledger_populations()
+        total = (pops["owned"] + pops["shared"] + pops["retained"]
+                 + pops["free"])
+        assert (total == pops["num_blocks"]).all()
+        if "pool_b" in pops:
+            pb = pops["pool_b"]
+            assert (pb["owned"] + pb["free"] == pb["num_blocks"]).all()
+    merged = vf.merged()
+    sc = merged.status_counts()
+    assert sum(sc.values()) == len(reqs)
+    assert sc["killed"] >= 1
+    # dead lanes fully free
+    pops = vf.ledger_populations()
+    for lane in (0, 2):
+        assert pops["owned"][lane] == 0 and pops["shared"][lane] == 0
+        assert pops["retained"][lane] == 0
+
+
+def test_autoscaler_recovery_accounts_exactly_once():
+    """Controller-level chaos: kills + preempts at re-solve boundaries,
+    recovered victims re-routed; every request accounted exactly once
+    whether recovery is on or off."""
+    from repro.core.carbon import CarbonTrace
+    from repro.serving.autoscale import AutoscalePolicy, simulate_autoscaled
+
+    catalog = [BY_NAME["standalone"], BY_NAME["dpd-t4"]]
+    reqs = _clamp(sample_requests(DS, 2.0, 120.0, seed=4, class_mix=MIX))
+    trace = CarbonTrace.step(40.0, 80.0, 420.0, horizon_s=240.0)
+    faults = FaultTrace((FaultEvent(at_s=30.0, kind="kill", replica=0),
+                         FaultEvent(at_s=70.0, kind="preempt", replica=1,
+                                    notice_s=10.0)))
+    for recover in (True, False):
+        pol = AutoscalePolicy(boot_s=5.0, recover=recover)
+        res = simulate_autoscaled(catalog, DS, reqs, trace, pol, seed=0,
+                                  faults=faults)
+        sc = res.merged.status_counts()
+        assert sum(sc.values()) == len(reqs), (recover, sc)
+        assert res.deaths() >= 1
+        if recover:
+            assert sc["killed"] == 0, sc

@@ -110,6 +110,56 @@ def test_engine_greedy_equivalence_spec_and_dsd():
     assert all(len(v) == 10 for v in base.values())
 
 
+@pytest.mark.slow
+def test_draft_pool_kill_rolls_back_cleanly():
+    """dsd under the continuous scheduler: a replica kill mid-window must
+    roll back at a spec-round boundary. Every aborted request's emitted
+    tokens are a clean PREFIX of the healthy greedy continuation (a torn
+    round that committed unverified draft tokens would break this), and
+    both KV pools - target AND draft - plus the block ledger are fully
+    released."""
+    from repro.distributed.fault import FaultEvent
+    from repro.serving.batching import BatchPolicy
+
+    tcfg, tparams = _mk("yi-6b", 0, num_layers=2, dtype="float32")
+    dcfg, dparams = _mk("yi-6b", 7, num_layers=2, d_model=128,
+                        dtype="float32")
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, tcfg.vocab_size, size=10) for _ in range(4)]
+
+    def run(faults=None):
+        eng = ServingEngine(
+            tcfg, tparams, kind="dsd", draft_cfg=dcfg, draft_params=dparams,
+            old_chip="t4", temperature=0.0, seed=1, max_batch=4,
+            pool_blocks=256, batching=BatchPolicy(num_blocks=256),
+            spec=SpecConfig(num_draft_tokens=3), faults=faults)
+        for i, pr in enumerate(prompts):
+            eng.submit(pr, max_new_tokens=8, arrival_s=0.0)
+        eng.run_until_idle()
+        return eng
+
+    healthy = run()
+    base = {r.req_id: tuple(r.out_tokens) for r in healthy.finished}
+    assert all(len(v) == 8 for v in base.values())
+
+    killed = run(faults=[FaultEvent(at_s=1e-6, kind="kill")])
+    assert killed.dead
+    counts = killed.status_counts()
+    assert sum(counts.values()) == len(prompts)
+    assert counts["killed"] >= 1
+    # clean rollback: no torn spec round ever leaks an unverified token
+    for r in killed.finished + killed.aborted:
+        out = tuple(r.out_tokens)
+        assert out == base[r.req_id][:len(out)], \
+            f"req {r.req_id}: tokens diverged after rollback"
+    # target and draft pools both fully released
+    for r in killed.aborted:
+        assert not killed.pool.has(r.req_id)
+        assert not killed.draft_pool.has(r.req_id)
+    led = killed._sched.ledger
+    assert led.free_blocks == led.num_blocks, "ledger leaked blocks"
+
+
 def test_spec_round_rejects_recurrent_families():
     tcfg, tparams = _mk("yi-6b", 0, num_layers=2)
     rcfg, rparams = _mk("rwkv6-7b", 1)
